@@ -1,0 +1,46 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class Check:
+    name: str
+    value: float
+    lo: float
+    hi: float
+
+    @property
+    def ok(self) -> bool:
+        return self.lo <= self.value <= self.hi
+
+    def row(self) -> str:
+        flag = "PASS" if self.ok else "FAIL"
+        return (f"{self.name:58s} {self.value:10.3f} "
+                f"[{self.lo:8.3f}, {self.hi:8.3f}]  {flag}")
+
+
+class Report:
+    def __init__(self, title: str):
+        self.title = title
+        self.checks: list[Check] = []
+        self.rows: list[str] = []
+
+    def add(self, name: str, value: float, lo: float, hi: float):
+        self.checks.append(Check(name, float(value), lo, hi))
+
+    def note(self, line: str):
+        self.rows.append(line)
+
+    def render(self) -> str:
+        out = [f"== {self.title} =="]
+        out += self.rows
+        out += [c.row() for c in self.checks]
+        n_bad = sum(not c.ok for c in self.checks)
+        out.append(f"-- {len(self.checks) - n_bad}/{len(self.checks)} checks pass")
+        return "\n".join(out)
+
+    @property
+    def ok(self) -> bool:
+        return all(c.ok for c in self.checks)

@@ -1,0 +1,44 @@
+"""Fig. 7 — end-to-end latency, prefill/decode split (OPT-13B, NVLLM-16C).
+
+Paper: NVLLM-16C reaches 1.9 / 7.5 / 30.3 / 124.3 s for 32 / 128 / 512 /
+2048 total tokens (equal prefill/decode pairs), up to 28.2x faster than
+GPU-SSD and 2.7x than GPU-DRAM; NVLLM's prefill share is 44.1-45% vs <7%
+for the GPU baselines. Our model is strictly sequential (attention->FFN)
+below the Alg.2 threshold, which overestimates the short-pair latencies by
+~30% — tolerances below reflect that and are documented in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Report
+from repro.configs.paper_models import OPT_13B
+from repro.simulator import baselines as bl
+from repro.simulator import hw
+from repro.simulator.system import NVLLMSystem
+
+PAPER = {32: 1.9, 128: 7.5, 512: 30.3, 2048: 124.3}
+
+
+def run() -> Report:
+    rep = Report("Fig. 7: end-to-end latency (OPT-13B, NVLLM-16C)")
+    nv = NVLLMSystem(hw.NVLLM_16C)
+    best_ssd = 0.0
+    best_dram = 0.0
+    for total, pub in PAPER.items():
+        n = total // 2
+        r = nv.inference_time(OPT_13B, n, n)
+        g = bl.GPU_SSD.inference_time(OPT_13B, n, n)
+        d = bl.GPU_DRAM.inference_time(OPT_13B, n, n)
+        best_ssd = max(best_ssd, g["total_s"] / r["total_s"])
+        best_dram = max(best_dram, d["total_s"] / r["total_s"])
+        rep.note(f"  {total:5d} tok: NVLLM-16C={r['total_s']:7.2f}s "
+                 f"(paper {pub}s)  prefill={r['prefill_frac']*100:4.1f}%  "
+                 f"GPU-SSD={g['total_s']:8.1f}s ({g['prefill_frac']*100:4.2f}%)")
+        rep.add(f"{total}-token e2e within 1.45x of paper",
+                r["total_s"] / pub, 0.69, 1.45)
+        rep.add(f"{total}-token: NVLLM latency distributed evenly "
+                f"(prefill frac, paper 44-45%)", r["prefill_frac"], 0.30, 0.55)
+        rep.add(f"{total}-token: GPU-SSD prefill frac < 7% (paper 0.1-6.9%)",
+                g["prefill_frac"], 0.0, 0.07)
+    rep.add("max speedup vs GPU-SSD ~ paper 28.2x", best_ssd, 22.0, 36.0)
+    rep.add("speedup vs GPU-DRAM >= paper 2.7x", best_dram, 2.7, 9.0)
+    return rep

@@ -1,0 +1,67 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+``python -m benchmarks.run`` executes every benchmark, prints each report,
+and exits non-zero if any paper-anchor check fails. A kernel micro-bench
+(ECDP Pallas interpret vs XLA vs oracle) is included for the per-op layer.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _kernel_bench() -> str:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import ecc
+    from repro.core.quant import quantize_int8
+    from repro.kernels import ops, ref
+
+    rows = ["== Kernel micro-bench: ECDP matmul (CPU interpret; TPU target) =="]
+    key = jax.random.PRNGKey(0)
+    for (m, k, n) in ((8, 512, 512), (8, 1024, 2048)):
+        w = jax.random.normal(key, (k, n), jnp.float32)
+        q, scale = quantize_int8(w, axis=0)
+        raw = ecc.weights_to_bytes(q)
+        parity = ecc.encode(raw)
+        corrupted = ecc.inject_bit_errors(raw, 1e-4, key)
+        wq = ecc.bytes_to_weights(corrupted)
+        a = jax.random.normal(key, (m, k), jnp.float32)
+        out_ref = ref.ecdp_reference(a, wq, parity, scale)
+        t0 = time.perf_counter()
+        out_pal = ops.ecdp_matmul(a, wq, parity, scale)
+        jax.block_until_ready(out_pal)
+        t_pal = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        out_xla = ops.ecdp_matmul_xla(a, wq, parity, scale, ecc_enabled=True)
+        jax.block_until_ready(out_xla)
+        t_xla = time.perf_counter() - t0
+        err = float(jnp.max(jnp.abs(out_pal - out_ref)))
+        rows.append(f"  ({m}x{k}x{n}) pallas-interp={t_pal*1e3:8.1f}ms "
+                    f"xla={t_xla*1e3:7.1f}ms max|err|={err:.2e}")
+        assert err < 1e-3, "kernel does not match oracle"
+    return "\n".join(rows)
+
+
+def main() -> None:
+    from benchmarks import (fig6_throughput, fig7_latency, fig8_energy,
+                            table2_area, table3_scaling)
+    reports = []
+    for mod in (fig6_throughput, fig7_latency, fig8_energy, table2_area,
+                table3_scaling):
+        rep = mod.run()
+        reports.append(rep)
+        print(rep.render())
+        print()
+    print(_kernel_bench())
+    print()
+    n_fail = sum(not r.ok for r in reports)
+    total = sum(len(r.checks) for r in reports)
+    passed = sum(c.ok for r in reports for c in r.checks)
+    print(f"== BENCHMARK SUMMARY: {passed}/{total} paper-anchor checks pass, "
+          f"{n_fail} report(s) failing ==")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table 3 — NVLLM / -12C / -16C scaling configurations and the derived
+bandwidth/compute envelope (307-486 GOPS, 100-200 GB/s internal BW)."""
+from __future__ import annotations
+
+from benchmarks.common import Report
+from repro.simulator import hw
+
+
+def run() -> Report:
+    rep = Report("Table 3: scaling configurations")
+    for cfg in (hw.NVLLM_8C, hw.NVLLM_12C, hw.NVLLM_16C):
+        rep.note(f"  {cfg.name:10s} ECDP={cfg.n_ecdp:2d} clusters="
+                 f"{cfg.n_clusters:2d} planes={cfg.n_planes:2d} "
+                 f"nand_bw={cfg.nand_bw/1e9:6.1f} GB/s "
+                 f"total={cfg.total_gops/1e9:6.1f} GOPS")
+    rep.add("NVLLM total GOPS ~ 307 (paper: 307-486 span)",
+            hw.NVLLM_8C.total_gops / 1e9, 304, 310)
+    rep.add("NVLLM-16C total GOPS ~ 486",
+            hw.NVLLM_16C.total_gops / 1e9, 482, 490)
+    rep.add("NVLLM internal NAND BW ~ 100 GB/s",
+            hw.NVLLM_8C.nand_bw / 1e9, 98, 105)  # 32x3.2 GB/s, paper rounds to 100
+    rep.add("plane read = 16KiB / 5.12us", hw.PLANE_BW / 1e9, 3.1, 3.3)
+    return rep

@@ -1,0 +1,51 @@
+"""Deployment example: train briefly, checkpoint, convert to the tiered
+NVLLM flash format with RBER injection, verify the deployed model still
+serves — the full lifecycle of an edge deployment.
+
+    PYTHONPATH=src python examples/deploy_nvllm.py
+"""
+import tempfile
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.paper_models import OPT_TINY
+from repro.launch.steps import make_train_step
+from repro.models import dense
+from repro.optim.adamw import AdamW
+from repro.serving.engine import Engine
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    params = dense.init(OPT_TINY, key)
+    opt = AdamW(lr=3e-3)
+    state = opt.init(params)
+    step = make_train_step(OPT_TINY, opt)
+    for i in range(10):
+        toks = jax.random.randint(jax.random.fold_in(key, i), (4, 32), 0,
+                                  OPT_TINY.vocab_size)
+        params, state, m = step(params, state,
+                                {"tokens": toks, "labels": toks})
+    print(f"trained 10 steps, loss {float(m['loss']):.3f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d + "/ckpt")
+        mgr.save(10, params, {"step": 10})
+        restored, _ = mgr.restore(params)
+        print("checkpoint round-trip OK")
+
+        # flash-programming step: INT8 + Hamming(72,64), RBER injected
+        eng = Engine(OPT_TINY, restored, max_slots=1, max_seq=64, rber=1e-4)
+        rid = eng.submit([1, 2, 3, 4], max_new=8)
+        out = eng.run()[rid]
+        print(f"deployed engine (RBER=1e-4, ECC on) decoded: {out}")
+
+        clean = Engine(OPT_TINY, restored, max_slots=1, max_seq=64, rber=0.0)
+        out_clean = clean.run()[clean.submit([1, 2, 3, 4], max_new=8)]
+        assert out == out_clean, "ECC must make RBER invisible"
+        print("deploy_nvllm OK — corrupted flash reads decode identically")
+
+
+if __name__ == "__main__":
+    main()

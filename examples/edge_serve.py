@@ -1,0 +1,46 @@
+"""Edge serving example: the paper's single-batch, decode-dominated
+workload on the NVLLM engine — tiered INT8+ECC weights, continuous
+batching, and the KV-cache-aware scheduler (Algorithm 2) visibly
+offloading Q/K/V/O column-groups to the in-flash pipeline as contexts grow.
+
+    PYTHONPATH=src python examples/edge_serve.py
+"""
+import jax
+import numpy as np
+
+import repro.core.scheduler as sched
+from repro.configs.paper_models import OPT_TINY
+from repro.models import dense
+from repro.serving.engine import Engine
+from repro.serving.sampler import SampleConfig
+
+
+def main():
+    params = dense.init(OPT_TINY, jax.random.PRNGKey(0))
+    # aggressive scheduler config so Alg. 2 is visible at toy scale
+    cfg = sched.SchedulerConfig(page_buffer_bytes=128, column_bytes=128,
+                                c_npu_per_column=16, h=8)   # c_th=16
+    eng = Engine(OPT_TINY, params, max_slots=2, max_seq=192, rber=1e-4,
+                 sample_cfg=SampleConfig(temperature=0.7, top_k=50),
+                 sched_cfg=cfg, kv_aware=True, seed=0)
+
+    rng = np.random.default_rng(0)
+    print("submitting a short-prompt, long-generation workload "
+          "(the edge pattern, paper Fig. 1b)...")
+    r1 = eng.submit(rng.integers(1, 500, 5).tolist(), max_new=48)
+    r2 = eng.submit(rng.integers(1, 500, 7).tolist(), max_new=32)
+    outs = eng.run()
+    print(f"request {r1}: {len(outs[r1])} tokens; "
+          f"request {r2}: {len(outs[r2])} tokens")
+    fr = [s["npu_fraction"] for s in eng.stats]
+    kv = [s["kv_len"] for s in eng.stats]
+    print("KV length trace:     ", kv[::6])
+    print("NPU-fraction trace:  ", [f"{f:.2f}" for f in fr[::6]])
+    assert fr[-1] < fr[0], "Alg. 2 should offload as the KV cache grows"
+    print(f"Alg. 2 moved {100*(fr[0]-fr[-1]):.0f}% of Q/K/V/O column-groups "
+          "to the in-flash ERDPE")
+    print("edge_serve OK")
+
+
+if __name__ == "__main__":
+    main()

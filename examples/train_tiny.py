@@ -1,0 +1,55 @@
+"""End-to-end training driver example: ~100M-class model, a few hundred
+steps on CPU, with sharded train step, async checkpointing and exact
+restart (deliverable b, end-to-end driver).
+
+    PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+
+The config is a reduced granite (llama-arch) at width 256: ~17M params —
+sized so a few hundred steps finish on this CPU container; pass --d-model
+512 --layers 8 for the ~100M variant on a beefier host.
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--ckpt", default="/tmp/nvllm_train_tiny")
+    args = ap.parse_args()
+
+    base = get_config("granite-8b", smoke=True)
+    cfg = dataclasses.replace(
+        base, d_model=args.d_model, n_layers=args.layers,
+        n_heads=args.d_model // 64, n_kv_heads=args.d_model // 128,
+        head_dim=64, d_ff=args.d_model * 4, vocab_size=2048)
+    n_params = cfg.param_count()
+    print(f"training {cfg.name} variant: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps")
+
+    # monkey-registry: train() resolves by name, so pass through get_config —
+    # simplest is to call the internals directly with our cfg.
+    import repro.launch.train as T
+
+    orig = T.get_config
+    T.get_config = lambda name, smoke=True: cfg
+    try:
+        out = train("granite-8b", smoke=True, steps=args.steps, batch=8,
+                    seq=64, ckpt_dir=args.ckpt, ckpt_every=50, lr=3e-3)
+    finally:
+        T.get_config = orig
+    l0 = sum(out["losses"][:10]) / 10
+    l1 = sum(out["losses"][-10:]) / 10
+    print(f"loss {l0:.3f} -> {l1:.3f} over {args.steps} steps "
+          f"({out['seconds']:.0f}s)")
+    assert l1 < l0, "model must learn the synthetic stream"
+    print("train_tiny OK")
+
+
+if __name__ == "__main__":
+    main()

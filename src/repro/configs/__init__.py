@@ -1,0 +1,33 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, batch_specs, cache_specs
+
+_MODULES = {
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "granite-8b": "repro.configs.granite_8b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "llama3-405b": "repro.configs.llama3_405b",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe_30b_a3b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe_42b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {list(_MODULES)}")
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+__all__ = ["ARCHS", "ArchConfig", "SHAPES", "ShapeSpec", "applicable",
+           "batch_specs", "cache_specs", "get_config"]

@@ -1,0 +1,11 @@
+"""NVLLM core: the paper's contribution as composable JAX modules.
+
+  ecc        — Hamming(72,64) SEC-DED codec + RBER injection (error model)
+  quant      — INT8 symmetric per-channel quantization
+  tiering    — flash/DRAM weight placement + deployment (C1)
+  erdpe      — error-resilient dot-product engine (C2, uses kernels/)
+  scheduler  — KV-cache-aware bitmap scheduling, Algorithm 2 (C4)
+"""
+from repro.core import ecc, quant, tiering, erdpe, scheduler  # noqa: F401
+from repro.core.tiering import FlashWeight, deploy, encode_flash  # noqa: F401
+from repro.core.erdpe import ExecMode, flash_matmul, maybe_flash_matmul  # noqa: F401

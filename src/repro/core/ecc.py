@@ -1,0 +1,191 @@
+"""Hamming(72,64) SEC-DED codec over INT8 weight streams.
+
+This is the error model behind NVLLM's ERDPE (paper §3.2-3.3, Algorithm 1):
+weights are stored as raw NAND pages whose reads exhibit a non-zero RBER; an
+inline *detector* flags dirty codewords cheaply and a *corrector* repairs them
+off the critical path.
+
+Layout
+------
+A codeword protects 8 consecutive INT8 weights along the reduction (K) axis:
+64 data bits + one parity byte (7 Hamming bits + 1 overall bit) = 12.5 %
+storage overhead, i.e. an L(72,64) code in the paper's notation.
+
+For a weight matrix ``W`` of shape (K, N) stored as uint8 "raw bytes", the
+parity plane has shape (K//8, N).
+
+All functions here are pure jnp and safe to call inside a Pallas kernel body
+(no gathers, no dynamic shapes): parity is computed with shift-XOR folds and
+the single-bit correction is a broadcast compare against a constant table.
+
+Semantics (verified by property tests in tests/test_ecc.py):
+  * any single flipped bit per codeword (data OR parity byte) -> corrected
+  * any two flipped bits per codeword -> detected as uncorrectable
+  * ``dirty`` flags every codeword whose received bits differ from encoded
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+# --- constant tables -------------------------------------------------------
+# Logical Hamming positions 1..71; powers of two are parity positions.
+_PARITY_POS = np.array([1, 2, 4, 8, 16, 32, 64], dtype=np.int32)
+_DATA_POS = np.array(
+    [p for p in range(1, 72) if p not in set(_PARITY_POS.tolist())], dtype=np.int32
+)  # (64,) logical position of physical data bit i
+assert _DATA_POS.shape == (64,)
+
+# PHYS_MASK[k][b] : uint8 mask over data byte b selecting bits that feed
+# Hamming parity k (bit i of byte b is data bit b*8+i).
+_PHYS_MASK = np.zeros((7, 8), dtype=np.uint8)
+for _k in range(7):
+    for _i in range(64):
+        if (_DATA_POS[_i] >> _k) & 1:
+            _PHYS_MASK[_k, _i // 8] |= np.uint8(1 << (_i % 8))
+
+DATA_POS = jnp.asarray(_DATA_POS)                       # (64,) int32
+PHYS_MASK = jnp.asarray(_PHYS_MASK)                     # (7, 8) uint8
+
+PARITY_OVERHEAD = 1.0 / 8.0  # parity bytes per weight byte
+
+
+def tables() -> tuple[np.ndarray, np.ndarray]:
+    """(phys_mask (7,8) u8, data_pos (64,) i32) as numpy, for passing into
+    Pallas kernels (which cannot close over array constants)."""
+    return _PHYS_MASK.copy(), _DATA_POS.copy()
+
+
+def _bit_weights() -> jnp.ndarray:
+    """LSB-first packing weights [1,2,4,...,128], built inline (Pallas-safe)."""
+    return (jnp.uint8(1) << jnp.arange(8, dtype=jnp.uint8)).astype(jnp.uint8)
+
+
+def _byte_parity(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-byte parity (popcount mod 2) of a uint8 array, returns uint8 0/1."""
+    x = x ^ (x >> 4)
+    x = x ^ (x >> 2)
+    x = x ^ (x >> 1)
+    return x & jnp.uint8(1)
+
+
+def _as_codewords(raw_bytes: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) uint8 -> (K//8, 8, N) codeword view."""
+    k, n = raw_bytes.shape
+    if k % 8:
+        raise ValueError(f"K={k} must be a multiple of 8 (codeword = 8 bytes)")
+    return raw_bytes.reshape(k // 8, 8, n)
+
+
+def encode(raw_bytes: jnp.ndarray, phys_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Compute the parity plane for (K, N) uint8 weight bytes -> (K//8, N) uint8."""
+    if phys_mask is None:
+        phys_mask = PHYS_MASK
+    cw = _as_codewords(raw_bytes)                                  # (G, 8, N)
+    # Hamming parity bits: parity over (codeword bytes & mask_k); phys_mask is
+    # (7, 8) -> broadcast to (G, 7, 8, N).
+    masked = cw[:, None, :, :] & phys_mask[None, :, :, None]
+    pk = jnp.sum(_byte_parity(masked).astype(jnp.int32), axis=2) & 1   # (G, 7, N)
+    hamming = jnp.sum(
+        pk.astype(jnp.uint8) << jnp.arange(7, dtype=jnp.uint8)[None, :, None], axis=1
+    )                                                               # (G, N)
+    data_par = jnp.sum(_byte_parity(cw).astype(jnp.int32), axis=1) & 1  # (G, N)
+    par_par = jnp.sum(pk, axis=1) & 1
+    overall = ((data_par + par_par) & 1).astype(jnp.uint8) << jnp.uint8(7)
+    return hamming | overall
+
+
+def check_and_correct(
+    raw_bytes: jnp.ndarray,
+    parity: jnp.ndarray,
+    phys_mask: jnp.ndarray | None = None,
+    data_pos: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Detect + correct single-bit errors per codeword.
+
+    Args:
+      raw_bytes: (K, N) uint8 received weight bytes (possibly corrupted).
+      parity:    (K//8, N) uint8 received parity plane (possibly corrupted).
+      phys_mask/data_pos: optional codec tables (see ``tables()``); passed
+        explicitly when called inside a Pallas kernel.
+    Returns:
+      corrected: (K, N) uint8 — data with single-bit errors repaired.
+      dirty:     (K//8, N) bool — codeword had a detected error (incl. parity-only).
+      uncorrectable: (K//8, N) bool — double-bit (or worse) error detected.
+    """
+    if phys_mask is None:
+        phys_mask = PHYS_MASK
+    if data_pos is None:
+        data_pos = DATA_POS
+    k, n = raw_bytes.shape
+    cw = _as_codewords(raw_bytes)                                    # (G, 8, N)
+    masked = cw[:, None, :, :] & phys_mask[None, :, :, None]         # (G, 7, 8, N)
+    pk = (jnp.sum(_byte_parity(masked).astype(jnp.int32), axis=2) & 1)  # (G,7,N)
+    stored_pk = (parity[:, None, :] >> jnp.arange(7, dtype=jnp.uint8)[None, :, None]) & 1
+    s_bits = pk.astype(jnp.uint8) ^ stored_pk.astype(jnp.uint8)      # (G, 7, N)
+    syndrome = jnp.sum(
+        s_bits.astype(jnp.int32) << jnp.arange(7, dtype=jnp.int32)[None, :, None], axis=1
+    )                                                                # (G, N) 0..127
+    data_par = jnp.sum(_byte_parity(cw).astype(jnp.int32), axis=1) & 1
+    stored_hamming_par = jnp.sum(stored_pk.astype(jnp.int32), axis=1) & 1
+    overall_recv = ((parity >> jnp.uint8(7)) & 1).astype(jnp.int32)
+    dq = (data_par + stored_hamming_par + overall_recv) & 1          # (G, N) 0/1
+
+    # Single-bit data error at physical bit i iff dq==1 and syndrome==data_pos[i].
+    is_err = dq.astype(bool)
+    onehot = is_err[:, None, :] & (syndrome[:, None, :] == data_pos[None, :, None])
+    flip = jnp.sum(
+        onehot.reshape(k // 8, 8, 8, n).astype(jnp.uint8)
+        * _bit_weights()[None, None, :, None],
+        axis=2,
+    ).astype(jnp.uint8)                                              # (G, 8, N)
+    corrected = (cw ^ flip).reshape(k, n)
+
+    is_power = (syndrome & (syndrome - 1)) == 0                      # incl. syndrome==0
+    data_hit = jnp.any(onehot, axis=1)                               # (G, N)
+    # dq==1: correctable iff syndrome hits a data position, a parity position
+    # (power of two) or 0 (overall-bit flip). dq==0 & syndrome!=0: double error.
+    uncorrectable = (~is_err & (syndrome != 0)) | (is_err & ~data_hit & ~is_power)
+    dirty = is_err | (syndrome != 0)
+    return corrected, dirty, uncorrectable
+
+
+def weights_to_bytes(w_int8: jnp.ndarray) -> jnp.ndarray:
+    return lax.bitcast_convert_type(w_int8, jnp.uint8)
+
+
+def bytes_to_weights(b_uint8: jnp.ndarray) -> jnp.ndarray:
+    return lax.bitcast_convert_type(b_uint8, jnp.int8)
+
+
+# --- RBER injection ---------------------------------------------------------
+
+def inject_bit_errors_np(
+    raw_bytes: np.ndarray, rber: float, seed: int
+) -> tuple[np.ndarray, int]:
+    """Flip each bit independently with probability ``rber`` (numpy, deploy-scale).
+
+    Returns (corrupted_bytes, n_flipped_bits). Deterministic in ``seed``.
+    """
+    rng = np.random.default_rng(seed)
+    out = raw_bytes.copy()
+    flat = out.reshape(-1)
+    # Sample flip count then positions: avoids materializing bits for large arrays.
+    nbits = flat.size * 8
+    nflip = rng.binomial(nbits, rber)
+    if nflip:
+        pos = rng.choice(nbits, size=nflip, replace=False)
+        np.bitwise_xor.at(flat, pos // 8, (1 << (pos % 8)).astype(raw_bytes.dtype))
+    return out, int(nflip)
+
+
+def inject_bit_errors(raw_bytes: jnp.ndarray, rber: float, key) -> jnp.ndarray:
+    """jnp version for test-scale arrays: per-bit Bernoulli flips."""
+    import jax
+
+    bits = jax.random.bernoulli(key, rber, raw_bytes.shape + (8,))
+    flip = jnp.sum(
+        bits.astype(jnp.uint8) * _bit_weights()[(None,) * raw_bytes.ndim], axis=-1
+    ).astype(jnp.uint8)
+    return raw_bytes ^ flip

@@ -1,0 +1,81 @@
+"""ERDPE — the error-resilient dot-product engine as a composable JAX module.
+
+The single entry point ``flash_matmul`` is how every model layer consumes a
+flash-tier weight (FlashWeight): it flattens leading batch/seq dims to an
+(M, K) GEMV/GEMM, dispatches to the Pallas ECDP kernel (TPU / interpret) or
+the XLA-native path (inside large SPMD graphs), and restores the output
+shape. This is the paper's "all GEMM/GEMV decomposed into dot-product
+primitives operating on raw NAND reads" (§3.2) as a framework feature.
+
+Execution modes (ExecMode):
+  PALLAS — pl.pallas_call kernel; page-streamed VMEM pipeline + inline ECC.
+  XLA    — same math in plain XLA ops; used in dry-run/roofline SPMD graphs.
+"""
+from __future__ import annotations
+
+import enum
+
+import jax.numpy as jnp
+
+from repro.core.tiering import FlashWeight
+from repro.kernels import ops
+
+
+class ExecMode(str, enum.Enum):
+    PALLAS = "pallas"
+    XLA = "xla"
+
+
+# Serve-time ECC policy. "inline" is the paper-faithful mode: every read of
+# flash-tier weights runs detection+correction (NAND reads are noisy every
+# time). On TPU the flash tier lives in HBM whose reads are clean, so the
+# hardware-adapted mode is "load" — correct once when weights are uploaded
+# (deploy/restore), then serve on raw int8 (EXPERIMENTS.md §Perf: 77x less
+# decode HBM traffic). Toggle via env REPRO_SERVE_ECC=inline|load.
+import os as _os
+
+SERVE_ECC = _os.environ.get("REPRO_SERVE_ECC", "inline")
+
+
+def flash_matmul(
+    x: jnp.ndarray,
+    w: FlashWeight,
+    mode: ExecMode = ExecMode.XLA,
+    ecc_enabled: bool = True,
+    out_dtype=jnp.bfloat16,
+    block_k: int = 512,
+    block_n: int = 512,
+) -> jnp.ndarray:
+    """x: (..., K) activations; w: flash-tier (K, N). Returns (..., N)."""
+    if w.q.ndim != 2:
+        raise ValueError("flash_matmul expects a single (K, N) FlashWeight; "
+                         "index stacked layers before calling")
+    k, n = w.q.shape
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    x2 = x.reshape(m, k)
+    if mode == ExecMode.PALLAS:
+        out = ops.ecdp_matmul(
+            x2, w.q, w.parity, w.scale,
+            block_k=block_k, block_n=block_n, ecc_enabled=ecc_enabled,
+        )
+    else:
+        out = ops.ecdp_matmul_xla(x2, w.q, w.parity, w.scale, ecc_enabled=ecc_enabled)
+    return out.reshape(lead + (n,)).astype(out_dtype)
+
+
+def maybe_flash_matmul(
+    x: jnp.ndarray,
+    w,
+    mode: ExecMode = ExecMode.XLA,
+    ecc_enabled: bool | None = None,
+    out_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Dispatch on tier: FlashWeight -> ERDPE; plain array -> bf16 matmul."""
+    if isinstance(w, FlashWeight):
+        if ecc_enabled is None:
+            ecc_enabled = SERVE_ECC == "inline"
+        return flash_matmul(x, w, mode=mode, ecc_enabled=ecc_enabled, out_dtype=out_dtype)
+    return jnp.dot(x, w.astype(x.dtype)).astype(out_dtype)

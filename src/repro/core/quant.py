@@ -1,0 +1,29 @@
+"""Symmetric per-output-channel INT8 quantization (paper §4.1: all models INT8).
+
+The flash tier stores quantized weights; the ECDP kernel accumulates
+``a @ q`` and applies ``scale`` per output column, i.e. weight-only
+quantization with bf16 activations (the paper's mixed BF16/INT8 MACs).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_int8(w: jnp.ndarray, axis: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize ``w`` (float) to INT8 with a per-channel scale.
+
+    Args:
+      w: weight matrix, typically (K, N) with K the reduction axis.
+      axis: reduction axis; the scale is per remaining (output) channel.
+    Returns:
+      (q, scale): q int8 same shape as w; scale float32 with ``axis`` reduced
+      (keepdims) such that ``w ≈ q * scale``.
+    """
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,99 @@
+"""KV-cache-aware scheduling (paper Algorithm 2, contribution C4).
+
+During decode, attention runs on the NPU and FFN in flash. As the KV cache
+grows, NPU attention latency grows (aggregation is O(kv_len)), unbalancing
+the shared Q/K/V/O projection path. Algorithm 2 monitors the per-step NPU
+cycle increment dC and, when it exceeds a threshold C_th derived from the
+page-buffer capacity, offloads k = ceil(dC / C_th) projection column-groups
+from the NPU to the in-flash ERDPE by clearing the k highest-indexed set
+bits of a dispatch bitmap B in {0,1}^H (1 = column-group on NPU).
+
+The update is implemented as a pure, jit-safe function (top-k bit clearing
+via a reverse cumulative sum — no data-dependent shapes), plus a latency
+estimator and a bitmap-dispatched projection used by the serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    page_buffer_bytes: int = 16 * 1024   # P: per plane-cluster page buffer
+    column_bytes: int = 4096             # u: one weight column (d_model int8)
+    c_npu_per_column: int = 64           # C_NPU: NPU cycles per projected column
+    h: int = 32                          # H: number of dispatchable column groups
+
+    @property
+    def c_th(self) -> int:               # Alg. 2 line 1
+        return (self.page_buffer_bytes // self.column_bytes) * self.c_npu_per_column
+
+
+def init_bitmap(cfg: SchedulerConfig) -> jnp.ndarray:
+    """All column-groups start on the NPU (early decode, small KV cache)."""
+    return jnp.ones((cfg.h,), dtype=jnp.int32)
+
+
+def kv_aware_update(
+    bitmap: jnp.ndarray, delta_c: jnp.ndarray, cfg: SchedulerConfig
+) -> jnp.ndarray:
+    """One Algorithm 2 step: returns B^(n+1) given B^(n) and cycle increment."""
+    c_th = jnp.int32(max(cfg.c_th, 1))
+    delta_c = jnp.asarray(delta_c, jnp.int32)
+    k = jnp.where(delta_c <= c_th, 0, -(-delta_c // c_th))  # ceil div
+    # Clear the k highest-indexed set bits: rank of each set bit counted
+    # from the top; clear where rank <= k.
+    ones = bitmap > 0
+    rank_from_top = jnp.cumsum(ones[::-1].astype(jnp.int32))[::-1]
+    clear = ones & (rank_from_top <= k)
+    return jnp.where(clear, 0, bitmap)
+
+
+def estimate_attention_cycles(
+    kv_len: jnp.ndarray | int,
+    d_model: int,
+    n_kv_heads: int,
+    head_dim: int,
+    npu_macs_per_cycle: int = 512,
+) -> jnp.ndarray:
+    """NPU cycles for one decode step's attention aggregation at ``kv_len``.
+
+    QK^T + AV ~ 2 * kv_len * n_kv_heads * head_dim MACs per token (GQA
+    aggregates over kv heads); projections are counted separately since they
+    are exactly the work the bitmap re-balances.
+    """
+    macs = 2.0 * jnp.asarray(kv_len, jnp.float32) * n_kv_heads * head_dim
+    return (macs // npu_macs_per_cycle).astype(jnp.int32)
+
+
+def npu_fraction(bitmap: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((bitmap > 0).astype(jnp.float32))
+
+
+def split_projection(
+    x: jnp.ndarray,
+    w_dram: jnp.ndarray,
+    flash_out: jnp.ndarray,
+    bitmap: jnp.ndarray,
+) -> jnp.ndarray:
+    """Bitmap-dispatched Q/K/V/O projection.
+
+    Column-groups with bit 1 use the DRAM-resident bf16 weights (NPU path);
+    groups with bit 0 take the flash-tier ERDPE result (int8+ECC). The two
+    paths are numerically different by design (INT8 deployment); the bitmap
+    decides which physical engine owns each group.
+
+    x: (..., K); w_dram: (K, N) bf16; flash_out: (..., N) — precomputed
+    ERDPE output for the same projection; bitmap: (H,) with N % H == 0.
+    """
+    n = w_dram.shape[-1]
+    h = bitmap.shape[0]
+    assert n % h == 0, (n, h)
+    npu_out = jnp.dot(
+        x.astype(jnp.float32), w_dram.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    group_mask = jnp.repeat(bitmap > 0, n // h)
+    return jnp.where(group_mask, npu_out, flash_out.astype(jnp.float32))

@@ -1,0 +1,145 @@
+"""Tiered weight placement (paper contribution C1).
+
+NVLLM stores FFN weights (and the final output projection) in 3D NAND flash
+and keeps attention Q/K/V/O weights, embeddings and norms in DRAM (§3.5:
+"Q/K/V/O weights are copied once into DRAM at initialization").
+
+Here the *flash tier* is represented by ``FlashWeight``: INT8 codewords +
+Hamming(72,64) parity planes + per-channel scales, laid out in 16 KiB pages
+(128x128 int8 tiles). ``deploy`` converts a trained bf16/f32 param pytree
+into its tiered NVLLM form — the "flash programming" step. Programming is
+write-once (endurance-friendly, §2.2); optional RBER injection emulates raw
+NAND reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ecc
+from repro.core.quant import quantize_int8
+
+FLASH = "flash"
+DRAM = "dram"
+
+# Paper placement: FFN + final output projection -> flash; attention Q/K/V/O,
+# embeddings, norms, routers, recurrences -> DRAM. RWKV's channel-mix and
+# time-mix *projections* are FFN-like weight-stationary GEMVs -> flash
+# (DESIGN.md §4); its decay/state params stay DRAM-side.
+# Strict weight-name matches: a stacked 1-D param (L, D) must never be
+# mistaken for a (K, N) matrix (it would be ECC-encoded along the layer dim).
+DEFAULT_FLASH_PATTERNS = (
+    r".*lm_head$",
+    r".*(w_gate|w_up|w_down|w_in|w_out)$",     # FFN / MoE expert banks
+    r".*mix/w_in_[xy]$", r".*mix/w_out$",      # RG-LRU recurrent projections
+    r".*tmix/w_[rkvgo]$",                      # RWKV time-mix projections
+    r".*channel_mix/w_rgate$",
+)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FlashWeight:
+    """A flash-tier weight matrix: raw INT8 pages + parity + dequant scale."""
+    q: jnp.ndarray        # (..., K, N) int8 raw codeword bytes (as weights)
+    parity: jnp.ndarray   # (..., K//8, N) uint8
+    scale: jnp.ndarray    # (..., 1, N) float32
+
+    def tree_flatten(self):
+        return (self.q, self.parity, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def nbytes(self) -> int:
+        return self.q.size + self.parity.size + self.scale.size * 4
+
+
+def is_flash_path(path: str, patterns=DEFAULT_FLASH_PATTERNS) -> bool:
+    return any(re.fullmatch(p, path) for p in patterns)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tier_of(path: str, patterns=DEFAULT_FLASH_PATTERNS) -> str:
+    return FLASH if is_flash_path(path, patterns) else DRAM
+
+
+def encode_flash(w: jnp.ndarray, rber: float = 0.0, seed: int = 0) -> FlashWeight:
+    """Quantize + ECC-encode one weight matrix (leading dims = layer stack)."""
+    if w.ndim < 2:
+        raise ValueError("flash tier holds matrices")
+    q, scale = quantize_int8(w, axis=-2)
+    raw = ecc.weights_to_bytes(q)
+    lead = raw.shape[:-2]
+    flat = raw.reshape((-1,) + raw.shape[-2:]) if lead else raw[None]
+    pars = []
+    for i in range(flat.shape[0]):
+        pars.append(ecc.encode(flat[i]))
+    parity = jnp.stack(pars).reshape(lead + pars[0].shape) if lead else pars[0]
+    if rber > 0.0:
+        corrupted, _ = ecc.inject_bit_errors_np(np.asarray(raw), rber, seed)
+        raw = jnp.asarray(corrupted)
+    return FlashWeight(q=ecc.bytes_to_weights(raw), parity=parity, scale=scale)
+
+
+def deploy(
+    params: Any,
+    patterns=DEFAULT_FLASH_PATTERNS,
+    rber: float = 0.0,
+    seed: int = 0,
+    predicate: Callable[[str, jnp.ndarray], bool] | None = None,
+) -> tuple[Any, dict[str, str]]:
+    """Convert a param pytree to tiered NVLLM deployment form.
+
+    Returns (tiered_params, tier_map). Flash-tier leaves become FlashWeight;
+    DRAM-tier leaves are cast to bf16.
+    """
+    tier_map: dict[str, str] = {}
+
+    def convert(path, leaf):
+        p = _path_str(path)
+        flash = (
+            predicate(p, leaf) if predicate is not None
+            else (is_flash_path(p, patterns) and leaf.ndim >= 2)
+        )
+        tier_map[p] = FLASH if flash else DRAM
+        if flash:
+            return encode_flash(leaf, rber=rber, seed=seed + hash(p) % (2**31))
+        return leaf.astype(jnp.bfloat16)
+
+    tiered = jax.tree_util.tree_map_with_path(convert, params)
+    return tiered, tier_map
+
+
+def flash_bytes(tiered: Any) -> tuple[int, int]:
+    """(flash_tier_bytes, dram_tier_bytes) of a deployed pytree."""
+    fb = db = 0
+    for leaf in jax.tree_util.tree_leaves(
+        tiered, is_leaf=lambda x: isinstance(x, FlashWeight)
+    ):
+        if isinstance(leaf, FlashWeight):
+            fb += leaf.nbytes()
+        else:
+            db += leaf.size * leaf.dtype.itemsize
+    return fb, db

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: paged, error-resilient INT8 matmul (the ERDPE, §3.2-3.3).
+
+TPU adaptation of the paper's OoO-ECDP (see DESIGN.md §2):
+
+  * NAND page            -> one (128, 128) int8 tile (= 16 KiB, the paper's
+                            page size). A kernel block is a cluster of pages
+                            streamed HBM->VMEM by the Pallas grid pipeline
+                            (the pipeline's double buffering plays the role
+                            of the cluster FIFO).
+  * never-stall MAC      -> the hot loop issues a *dense* raw-weight MXU MAC
+                            for every block, unconditionally.
+  * inline detector      -> per-codeword SEC-DED syndromes on the VPU
+                            (shift-XOR parities; no gathers, no branches).
+  * deferred corrector   -> a sparse correction term ``a @ (w_fix - w_raw)``
+                            executed under ``pl.when(any dirty)``: with low
+                            RBER almost every block skips it, so correction
+                            never throttles the pipeline — the TPU-idiomatic
+                            reading of the paper's out-of-order scoreboard.
+
+Accumulation order differs from the sequential Algorithm 1 but the result is
+identical (verified against ref.ooo_dot_product_alg1; int32 accumulation of
+int8 products is exact, and f32 paths match to tolerance).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ecc
+
+PAGE_BYTES = 16 * 1024     # paper §4.1: 16 KiB page buffers
+PAGE_TILE = (128, 128)     # one page = one MXU-aligned int8 tile
+
+
+def _ecdp_kernel(
+    a_ref, w_ref, p_ref, mask_ref, pos_ref, o_ref,
+    *, n_k_blocks: int, ecc_enabled: bool,
+):
+    """Grid = (m_blocks, n_blocks, k_blocks); k innermost (accumulation)."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)          # (bm, bk)
+    w_raw = w_ref[...]                          # (bk, bn) int8, raw NAND read
+    # --- main pipeline: dense MAC on raw weights, never stalls -------------
+    o_ref[...] += jnp.dot(a, w_raw.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    if ecc_enabled:
+        # --- inline detector ------------------------------------------------
+        raw_bytes = ecc.weights_to_bytes(w_raw)
+        corrected, dirty, _ = ecc.check_and_correct(
+            raw_bytes, p_ref[...], mask_ref[...], pos_ref[...]
+        )
+
+        # --- deferred corrector: rare path, predicated off the hot loop ----
+        @pl.when(jnp.any(dirty))
+        def _correct():
+            delta = (
+                ecc.bytes_to_weights(corrected).astype(jnp.int32)
+                - w_raw.astype(jnp.int32)
+            ).astype(jnp.float32)
+            o_ref[...] += jnp.dot(a, delta, preferred_element_type=jnp.float32)
+
+
+def ecdp_matmul_pallas(
+    a: jnp.ndarray,
+    wq: jnp.ndarray,
+    parity: jnp.ndarray,
+    *,
+    block_m: int = 8,
+    block_k: int = 512,
+    block_n: int = 512,
+    ecc_enabled: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call: (M,K)f x (K,N)i8 [+ parity (K//8,N)u8] -> (M,N)f32.
+
+    Scales are applied by the caller (ops.ecdp_matmul). Shapes must divide
+    the block sizes; ops.py picks legal blocks.
+    """
+    m, k = a.shape
+    k2, n = wq.shape
+    assert k == k2, (a.shape, wq.shape)
+    assert parity.shape == (k // 8, n), parity.shape
+    assert m % block_m == 0 and k % block_k == 0 and n % block_n == 0, (
+        (m, k, n), (block_m, block_k, block_n))
+    assert block_k % 8 == 0, "block_k must hold whole codewords"
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(
+        _ecdp_kernel, n_k_blocks=grid[2], ecc_enabled=ecc_enabled
+    )
+    phys_mask, data_pos = ecc.tables()
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k // 8, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((7, 8), lambda i, j, kk: (0, 0)),      # codec tables:
+            pl.BlockSpec((64,), lambda i, j, kk: (0,)),         # resident, tiny
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, wq, parity, jnp.asarray(phys_mask), jnp.asarray(data_pos))

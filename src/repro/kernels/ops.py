@@ -1,0 +1,92 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``ecdp_matmul`` is the operation the rest of the framework calls; it picks
+legal block shapes, dispatches to the Pallas kernel (interpret=True on CPU so
+the kernel body is validated everywhere), and applies per-channel scales.
+
+``ecdp_matmul_xla`` is the same computation expressed as plain XLA ops — used
+inside large SPMD graphs (dry-run / roofline) where a per-shard Pallas call
+is not the object under study; it keeps data movement identical.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ecc
+from repro.kernels.ecdp import ecdp_matmul_pallas
+
+
+def _pick_block(dim: int, target: int, mult: int) -> int:
+    """Largest divisor of ``dim`` that is <= target and a multiple of ``mult``
+    (falls back to the largest divisor that is a multiple of mult, else dim)."""
+    best = None
+    for b in range(mult, dim + 1, mult):
+        if dim % b == 0 and b <= target:
+            best = b
+    if best is not None:
+        return best
+    return dim
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_k", "block_n", "ecc_enabled", "interpret"),
+)
+def ecdp_matmul(
+    a: jnp.ndarray,
+    wq: jnp.ndarray,
+    parity: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    block_m: int = 8,
+    block_k: int = 512,
+    block_n: int = 512,
+    ecc_enabled: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Error-corrected quantized matmul: (M,K) x (K,N)int8 -> (M,N) f32.
+
+    a: activations (M, K) (bf16/f32); wq raw int8 weights; parity (K//8, N)
+    uint8; scales (1, N) f32. Output matches kernels.ref.ecdp_reference.
+    """
+    m, k = a.shape
+    _, n = wq.shape
+    bm = _pick_block(m, block_m, 1)
+    bk = _pick_block(k, block_k, 8)
+    bn = _pick_block(n, block_n, 1)
+    interp = _on_cpu() if interpret is None else interpret
+    out = ecdp_matmul_pallas(
+        a, wq, parity,
+        block_m=bm, block_k=bk, block_n=bn,
+        ecc_enabled=ecc_enabled, interpret=interp,
+    )
+    return out * scales.astype(jnp.float32)
+
+
+def ecdp_matmul_xla(
+    a: jnp.ndarray,
+    wq: jnp.ndarray,
+    parity: jnp.ndarray,
+    scales: jnp.ndarray,
+    *,
+    ecc_enabled: bool = False,
+) -> jnp.ndarray:
+    """XLA-native equivalent (same math, no pallas_call) for SPMD graphs."""
+    if ecc_enabled:
+        raw = ecc.weights_to_bytes(wq)
+        corrected, _, _ = ecc.check_and_correct(raw, parity)
+        w = ecc.bytes_to_weights(corrected)
+    else:
+        w = wq
+    out = jnp.dot(
+        a.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out * scales.astype(jnp.float32)

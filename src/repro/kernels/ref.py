@@ -1,0 +1,76 @@
+"""Pure-jnp / numpy oracles for the ECDP kernel.
+
+Two references:
+  * ``ecdp_reference``      — vectorized ground truth: correct every codeword,
+                              dequantize, matmul. This is what the Pallas
+                              kernel must match (allclose for float paths,
+                              bit-exact for int8-accumulation paths).
+  * ``ooo_dot_product_alg1``— a literal, sequential transcription of the
+                              paper's Algorithm 1 (scoreboard + deferred
+                              correction), used to prove the vectorized
+                              semantics equal the paper's semantics.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ecc
+
+
+def ecdp_reference(
+    a: jnp.ndarray,
+    wq: jnp.ndarray,
+    parity: jnp.ndarray,
+    scales: jnp.ndarray,
+    apply_correction: bool = True,
+) -> jnp.ndarray:
+    """Ground-truth error-corrected dot product.
+
+    a: (M, K) float; wq: (K, N) int8 raw (possibly corrupted); parity:
+    (K//8, N) uint8; scales: (1, N) f32. Returns (M, N) f32.
+    """
+    raw = ecc.weights_to_bytes(wq)
+    if apply_correction:
+        corrected, _, _ = ecc.check_and_correct(raw, parity)
+    else:
+        corrected = raw
+    w = ecc.bytes_to_weights(corrected).astype(jnp.float32)
+    out = jnp.dot(a.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return out * scales.astype(jnp.float32)
+
+
+def ooo_dot_product_alg1(
+    w_col: np.ndarray,
+    parity_col: np.ndarray,
+    a: np.ndarray,
+    d: int,
+) -> float:
+    """Algorithm 1, line by line, for one weight column (numpy, sequential).
+
+    w_col: (K,) int8 raw weights (possibly corrupted); parity_col: (K//8,)
+    uint8; a: (K,) float activations; d: segment width (multiple of 8).
+    Clean segments MAC immediately; dirty segments are pushed to the
+    scoreboard B, corrected "in the background" (line 11-12 writes the
+    corrected weights back), and accumulated after the main loop.
+    """
+    assert d % 8 == 0 and len(w_col) % d == 0
+    w = w_col.copy()
+    s = 0.0
+    scoreboard: list[int] = []
+    ptr = 0
+    while ptr < len(w):
+        seg = w[ptr : ptr + d]
+        pseg = parity_col[ptr // 8 : (ptr + d) // 8]
+        raw = jnp.asarray(seg.view(np.uint8).reshape(d, 1))
+        par = jnp.asarray(pseg.reshape(d // 8, 1))
+        corrected, dirty, _ = ecc.check_and_correct(raw, par)
+        if not bool(jnp.any(dirty)):  # Checker(v, L(n, d)) passed
+            s += float(np.dot(seg.astype(np.float64), a[ptr : ptr + d]))
+        else:  # non-blocking: defer, corrector writes back
+            scoreboard.append(ptr)
+            w[ptr : ptr + d] = np.asarray(ecc.bytes_to_weights(corrected)).reshape(d)
+        ptr += d
+    for idx in scoreboard:  # commit corrected segments
+        s += float(np.dot(w[idx : idx + d].astype(np.float64), a[idx : idx + d]))
+    return s

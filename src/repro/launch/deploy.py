@@ -1,0 +1,69 @@
+"""Deployment: convert a trained bf16 checkpoint into the tiered NVLLM form.
+
+    PYTHONPATH=src python -m repro.launch.deploy --arch granite-8b --smoke \
+        --ckpt /tmp/ckpt --out /tmp/deployed --rber 1e-4
+
+This is the paper's "flash programming" step (§3.5: Q/K/V/O copied once to
+DRAM at init; FFN weights quantized INT8, ECC-encoded, page-laid-out in
+NAND). Programming is write-once — endurance-friendly (§2.2). ``--rber``
+injects raw-NAND bit errors into the stored codewords so the serving path
+exercises the ERDPE correction machinery end to end.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.core.tiering import deploy, flash_bytes
+from repro.models import family_module
+
+
+def run_deploy(arch: str, smoke: bool, ckpt_dir: str | None, out_dir: str,
+               rber: float = 0.0, seed: int = 0) -> dict:
+    cfg = get_config(arch, smoke=smoke)
+    mod = family_module(cfg.family)
+    params = mod.init(cfg, jax.random.PRNGKey(seed))
+    if ckpt_dir:
+        mgr = CheckpointManager(ckpt_dir)
+        opt_template = None
+        try:
+            from repro.optim.adamw import AdamW
+            opt_template = AdamW().init(params)
+            (params, _), _ = mgr.restore((params, opt_template))
+        except Exception:
+            params, _ = mgr.restore(params)
+    tiered, tier_map = deploy(params, rber=rber, seed=seed)
+    fb, db = flash_bytes(tiered)
+    out = CheckpointManager(out_dir, keep=1)
+    out.save(0, tiered, {"arch": arch, "rber": rber,
+                         "flash_bytes": fb, "dram_bytes": db})
+    n_flash = sum(1 for t in tier_map.values() if t == "flash")
+    stats = {
+        "arch": arch,
+        "flash_gib": fb / 2**30,
+        "dram_gib": db / 2**30,
+        "flash_leaves": n_flash,
+        "dram_leaves": len(tier_map) - n_flash,
+        "flash_fraction": fb / max(fb + db, 1),
+    }
+    print(json.dumps(stats, indent=1))
+    return stats
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--rber", type=float, default=0.0)
+    args = ap.parse_args()
+    run_deploy(args.arch, args.smoke, args.ckpt, args.out, args.rber)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,362 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE — a while loop
+body (the layer scan, the microbatch scan) is not multiplied by its trip
+count, which under-counts flops/bytes by O(n_layers x n_micro) for scanned
+models. This module re-derives per-chip
+
+    flops        2*M*N*K for dots (+ 1/elem for arithmetic, ~operand size
+                 for reductions),
+    hbm bytes    operands+result of every non-fused instruction (fusion
+                 internals are free — traffic happens at fusion boundaries),
+    wire bytes   per collective, weighted by wire pattern (all-reduce 2x,
+                 all-gather/all-to-all/permute = result, reduce-scatter =
+                 operand),
+
+recursively: while bodies/conditions multiplied by the trip count parsed
+from XLA's ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the
+loop-condition compare constant), fusion/call computations by 1.
+
+This is a structural model, not a wall-clock measure — exactly what the
+roofline needs on a CPU-only container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+}
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+# ops that move/alias data but do no arithmetic
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "transpose", "copy", "broadcast", "iota", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad", "reverse",
+    "gather", "scatter", "convert", "after-all", "custom-call", "rng",
+    "rng-bit-generator", "copy-start", "copy-done", "optimization-barrier",
+    "partition-id", "replica-id", "domain", "infeed", "outfeed",
+}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shape_dims(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def type_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: dict[str, float] = dataclasses.field(default_factory=dict)
+    n_collectives: float = 0.0
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(self.wire.values())
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.n_collectives += other.n_collectives * mult
+        for k, v in other.wire.items():
+            self.wire[k] = self.wire.get(k, 0.0) + v * mult
+
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<type>\((?:[^()]|\([^)]*\))*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\(")
+_COMP_NAME_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-$]+)\s*\(")
+
+
+def _comp_header(line: str) -> Optional[str]:
+    """Computation headers look like '%name (params...) -> type {' where the
+    param list may contain nested parens (tuple types)."""
+    stripped = line.rstrip()
+    if not stripped.endswith("{") or "->" not in stripped:
+        return None
+    if " = " in stripped.split("->", 1)[0]:
+        return None
+    m = _COMP_NAME_RE.match(line)
+    return m.group(1) if m else None
+
+
+def _operand_names(line: str) -> list[str]:
+    start = line.find("(", line.find(" = "))
+    if start < 0:
+        return []
+    depth = 0
+    end = len(line)
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w.\-]+)", line[start + 1:end])
+
+
+def _attr(line: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-$]+)", line)
+    return m.group(1) if m else None
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self.entry: Optional[str] = None
+        self.defs: dict[str, str] = {}          # instr name -> type str
+        cur = None
+        for line in text.splitlines():
+            name = _comp_header(line)
+            if name is not None:
+                cur = name
+                self.comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            md = _DEF_RE.match(line)
+            if md and cur is not None:
+                inst = Instr(md.group("name"), md.group("type"),
+                             md.group("op"), line, _operand_names(line))
+                self.comps[cur].append(inst)
+                self.defs[md.group("name")] = md.group("type")
+        self._memo: dict[str, Cost] = {}
+
+    # --- trip counts ---------------------------------------------------------
+
+    def _trip_count(self, inst: Instr) -> float:
+        m = re.search(r'known_trip_count[^\d]*(\d+)', inst.line)
+        if m:
+            return float(m.group(1))
+        cond = _attr(inst.line, "condition")
+        if cond and cond in self.comps:
+            for ci in self.comps[cond]:
+                if ci.op == "compare" and "direction=LT" in ci.line:
+                    for op_name in ci.operands:
+                        d = self.defs.get(op_name, "")
+                        # find its defining constant in the same computation
+                        for cj in self.comps[cond]:
+                            if cj.name == op_name and cj.op == "constant":
+                                mm = re.search(r"constant\((\d+)\)", cj.line)
+                                if mm:
+                                    return float(mm.group(1))
+                        del d
+        return 1.0
+
+    # --- per-instruction intrinsic cost ---------------------------------------
+
+    def _dot_flops(self, inst: Instr) -> float:
+        out_elems = type_elems(inst.type_str)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.line)
+        contract = 1
+        if m and inst.operands:
+            lhs_type = self.defs.get(inst.operands[0], "")
+            dims_list = _shape_dims(lhs_type)
+            if dims_list:
+                lhs_dims = dims_list[0][1]
+                for di in (int(x) for x in m.group(1).split(",") if x):
+                    if di < len(lhs_dims):
+                        contract *= lhs_dims[di]
+        return 2.0 * out_elems * contract
+
+    def _instr_cost(self, inst: Instr, in_fusion: bool) -> Cost:
+        c = Cost()
+        op = inst.op
+        base = op.removesuffix("-start")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            result = type_bytes(inst.type_str)
+            operands = sum(type_bytes(self.defs.get(n, ""))
+                           for n in inst.operands)
+            if base == "all-reduce":
+                wire = 2.0 * result
+            elif base == "reduce-scatter":
+                wire = float(operands or result)
+            elif base == "all-gather":
+                # -start result is a (operand, result) tuple: count the big half
+                wire = float(max(result - operands, operands))
+            else:
+                wire = float(result)
+            c.wire[base] = wire
+            c.n_collectives = 1
+            c.bytes += type_bytes(inst.type_str) if not in_fusion else 0
+            return c
+
+        if op == "dot" or op == "convolution":
+            c.flops = self._dot_flops(inst)
+        elif op in ("reduce", "reduce-window"):
+            ops_bytes = [type_elems(self.defs.get(n, ""))
+                         for n in inst.operands]
+            c.flops = float(max(ops_bytes or [0]))
+        elif op not in _FREE_OPS and op not in ("fusion", "while", "call",
+                                                "conditional", "map", "sort"):
+            c.flops = float(type_elems(inst.type_str))   # elementwise
+
+        if not in_fusion and op not in ("parameter", "constant", "tuple",
+                                        "get-tuple-element", "bitcast",
+                                        "while", "call", "conditional"):
+            if op == "fusion":
+                c.bytes = self._fusion_bytes(inst)
+            else:
+                result = float(type_bytes(inst.type_str))
+                operands = [float(type_bytes(self.defs.get(n, "")))
+                            for n in inst.operands]
+                if op == "dynamic-update-slice":
+                    # in-place: traffic = the update slice, not the buffer
+                    big = max(operands, default=0.0)
+                    c.bytes = 2.0 * (sum(operands) - big)
+                elif op == "dynamic-slice":
+                    c.bytes = 2.0 * result
+                else:
+                    c.bytes = result + sum(operands)
+        return c
+
+    def _fusion_bytes(self, inst: Instr) -> float:
+        """HBM traffic of a fusion: reads per parameter (slice-sized when the
+        parameter is only dynamic-sliced / in-place-updated) + root writes."""
+        called = _attr(inst.line, "calls")
+        comp = self.comps.get(called)
+        if not comp:
+            return float(type_bytes(inst.type_str))
+        by_name = {ci.name: ci for ci in comp}
+        uses: dict[str, list[Instr]] = {}
+        for ci in comp:
+            for opnd in ci.operands:
+                uses.setdefault(opnd, []).append(ci)
+
+        def _slice_uses(name, depth=0):
+            """If every transitive use (through bitcast/reshape/copy
+            aliases) is a dynamic-slice or an in-place DUS target, return
+            the total sliced bytes; else None (full read)."""
+            if depth > 6:
+                return None
+            total = 0.0
+            for u in uses.get(name, []):
+                if u.op == "dynamic-slice":
+                    total += float(type_bytes(u.type_str))
+                elif (u.op == "dynamic-update-slice"
+                      and u.operands and u.operands[0] == name):
+                    upd = (self.defs.get(u.operands[1], "")
+                           if len(u.operands) > 1 else "")
+                    total += float(type_bytes(upd))
+                elif u.op in ("bitcast", "reshape", "copy", "transpose"):
+                    sub = _slice_uses(u.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total
+
+        reads = 0.0
+        for ci in comp:
+            if ci.op != "parameter":
+                continue
+            psize = float(type_bytes(ci.type_str))
+            sliced = _slice_uses(ci.name)
+            if sliced is not None and uses.get(ci.name):
+                reads += min(sliced, psize)
+            else:
+                reads += psize
+
+        def write_size(ci: Instr, depth=0) -> float:
+            # resolve through alias ops: a root bitcast(DUS(...)) writes
+            # only the update slice, not the whole carried buffer
+            if ci.op == "dynamic-update-slice" and len(ci.operands) > 1:
+                return float(type_bytes(self.defs.get(ci.operands[1], "")))
+            if ci.op in ("bitcast", "reshape", "copy") and depth < 6:
+                src = by_name.get(ci.operands[0]) if ci.operands else None
+                if src is not None:
+                    return write_size(src, depth + 1)
+            return float(type_bytes(ci.type_str))
+
+        root = next((ci for ci in comp if "ROOT" in ci.line), comp[-1])
+        if root.op == "tuple":
+            writes = sum(write_size(by_name.get(n, root))
+                         for n in root.operands)
+        else:
+            writes = write_size(root)
+        return reads + writes
+
+    # --- recursive computation cost ---------------------------------------------
+
+    def comp_cost(self, name: str, in_fusion: bool = False) -> Cost:
+        key = f"{name}:{in_fusion}"
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        for inst in self.comps.get(name, ()):
+            total.add(self._instr_cost(inst, in_fusion))
+            if inst.op == "fusion":
+                called = _attr(inst.line, "calls")
+                if called and called in self.comps:
+                    sub = self.comp_cost(called, in_fusion=True)
+                    total.add(Cost(flops=sub.flops, wire=sub.wire,
+                                   n_collectives=sub.n_collectives))
+            elif inst.op == "while":
+                trips = self._trip_count(inst)
+                for attr in ("body", "condition"):
+                    called = _attr(inst.line, attr)
+                    if called and called in self.comps:
+                        total.add(self.comp_cost(called, in_fusion), trips)
+            elif inst.op in ("call", "conditional", "map", "sort",
+                             "custom-call", "reduce", "reduce-window",
+                             "scatter", "all-reduce", "all-reduce-start"):
+                called = _attr(inst.line, "to_apply")
+                if called and called in self.comps and inst.op in (
+                        "call", "conditional", "map"):
+                    total.add(self.comp_cost(called, in_fusion))
+        self._memo[key] = total
+        return total
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze(text: str) -> Cost:
+    return HloModule(text).total()

@@ -1,0 +1,38 @@
+"""Production mesh construction (deliverable e).
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state. The single-pod mesh is 16x16
+(256 chips, one v5e pod); multi-pod adds a leading "pod"=2 axis (512 chips).
+"pod" behaves as an outer data axis: gradient reduction is hierarchical
+(reduce-scatter intra-pod over "data", all-reduce inter-pod over "pod"),
+which XLA derives from the combined ("pod","data") batch sharding.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh(model_axis: int | None = None):
+    """A mesh over whatever devices exist (tests / CPU smoke)."""
+    n = len(jax.devices())
+    m = model_axis or 1
+    assert n % m == 0, (n, m)
+    return _mk((n // m, m), ("data", "model"))
+
+
+def data_axis_names(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+MODEL_AXIS = "model"

@@ -1,0 +1,189 @@
+"""Roofline terms from the compiled dry-run artifact (deliverable g).
+
+CPU-only container: TPU v5e is the TARGET, not the runtime, so the three
+terms are derived analytically from the compiled SPMD module:
+
+    compute term    = HLO_FLOPs / peak_FLOPs          (per chip)
+    memory term     = HLO_bytes / HBM_bw              (per chip)
+    collective term = wire_bytes / ICI_bw             (per chip)
+
+``compiled.cost_analysis()`` is already per-partition on SPMD modules (the
+dry-run verified this), so no division by chip count is applied to flops /
+bytes. Collective bytes are parsed from ``compiled.as_text()``: operands are
+``%name`` references, so we first build a def-map of instruction result
+types, then weight each collective by its wire traffic:
+
+    all-gather          result bytes          (ring: recv ~ (n-1)/n * result)
+    all-reduce          2 x result bytes      (reduce-scatter + all-gather)
+    reduce-scatter      operand bytes
+    all-to-all          result bytes
+    collective-permute  result bytes
+
+Collectives inside while-loop bodies (the layer scan!) execute once per trip:
+the parser multiplies body collectives by the loop trip count parsed from
+the while condition when available, else falls back to static counting —
+the dry-run records which path was used.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# --- hardware constants (TPU v5e per chip) -----------------------------------
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link (~50 GB/s/link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*(?P<op>[\w\-]+)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def bytes_of_type(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _ARRAY_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _operand_names(line: str) -> list[str]:
+    """Names inside the op's argument parens (depth-0 commas)."""
+    start = line.find("(", line.find(" = "))
+    if start < 0:
+        return []
+    depth, i = 0, start
+    end = len(line)
+    for i in range(start, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    args = line[start + 1:end]
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    n_ops: int = 0
+
+    def add(self, op: str, nbytes: float, mult: float = 1.0):
+        self.wire_bytes += nbytes * mult
+        self.by_op[op] = self.by_op.get(op, 0.0) + nbytes * mult
+        self.n_ops += 1
+
+
+def _trip_counts(text: str) -> dict[str, float]:
+    """computation name -> trip count for while bodies, from XLA's
+    known_trip_count backend annotation when present."""
+    trips: dict[str, float] = {}
+    # e.g.: %while = ... while(...), condition=%cond, body=%body.2,
+    #       backend_config={"known_trip_count":{"n":"126"}}
+    for m in re.finditer(
+            r"body=%?([\w.\-]+).*?known_trip_count[^\d]*(\d+)", text):
+        trips[m.group(1)] = float(m.group(2))
+    return trips
+
+
+def collective_bytes(text: str) -> CollectiveStats:
+    """Wire bytes per chip from a compiled (post-SPMD) HLO module text."""
+    defs: dict[str, str] = {}
+    comp_of: dict[str, str] = {}
+    current_comp = ""
+    for line in text.splitlines():
+        mc = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if mc:
+            current_comp = mc.group(1)
+        md = _DEF_RE.match(line)
+        if md:
+            defs[md.group("name")] = md.group("type")
+            comp_of[md.group("name")] = current_comp
+
+    trips = _trip_counts(text)
+    stats = CollectiveStats()
+    for line in text.splitlines():
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        op = md.group("op")
+        base = op.removesuffix("-start")
+        if base not in _COLLECTIVES or op.endswith("-done"):
+            continue
+        result = bytes_of_type(md.group("type"))
+        operands = sum(bytes_of_type(defs.get(n, "")) for n in
+                       _operand_names(line))
+        if base == "all-reduce":
+            wire = 2.0 * result
+        elif base == "reduce-scatter":
+            wire = float(operands or result)
+        else:
+            wire = float(result)
+        comp = comp_of.get(md.group("name"), "")
+        mult = trips.get(comp, 1.0)
+        stats.add(base, wire, mult)
+    return stats
+
+
+# --- roofline ----------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs per step: 6*N*D train, 2*N*D fwd-only (N = active)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_by_op: dict,
+                   n_chips: int, useful_flops: float) -> dict[str, Any]:
+    """All inputs are per-chip (SPMD modules are per-partition)."""
+    wire_bytes = sum(wire_by_op.values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = wire_bytes / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total_hlo_flops = flops * n_chips
+    return {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_chip": flops,
+        "hbm_bytes_per_chip": hbm_bytes,
+        "wire_bytes_per_chip": wire_bytes,
+        "collectives_by_op": wire_by_op,
+        "model_flops": useful_flops,
+        "useful_flops_ratio": (useful_flops / total_hlo_flops
+                               if total_hlo_flops else 0.0),
+        # roofline fraction: useful work rate vs peak, if the step ran at the
+        # pace of its dominant term (perfect overlap of the other two).
+        "roofline_fraction": (useful_flops / n_chips / PEAK_FLOPS / bound
+                              if bound > 0 else 0.0),
+        "step_time_lower_bound_s": bound,
+    }

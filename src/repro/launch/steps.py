@@ -1,0 +1,107 @@
+"""Step builders: the jit-able train / prefill / decode functions per arch.
+
+These are what the launcher jits, the dry-run lowers, and the examples call.
+``make_train_step`` supports gradient accumulation (``n_micro``) — the
+memory knob that, with FSDP param sharding and bf16 moments, fits
+llama3-405b train_4k on the single-pod mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import family_module
+from repro.optim.adamw import AdamW, apply_updates
+
+
+def make_loss_fn(cfg):
+    mod = family_module(cfg.family)
+
+    def loss_fn(params, batch):
+        return mod.train_loss(cfg, params, batch)
+
+    return loss_fn
+
+
+def make_train_step(cfg, opt: AdamW, n_micro: int = 1, grad_specs: Any = None,
+                    accum_dtype=jnp.float32):
+    """step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``accum_dtype=bfloat16`` halves both the gradient-accumulator HBM and
+    the per-microbatch gradient all-reduce wire bytes (a documented
+    precision trade used for the capacity-stress configs)."""
+    loss_fn = make_loss_fn(cfg)
+
+    def _constrain_grads(g):
+        if grad_specs is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, grad_specs)
+
+    def step(params, opt_state, batch):
+        if grad_specs is not None:
+            from repro.launch.sharding import pin_grad
+            params = jax.tree.map(
+                lambda w, s: pin_grad(w, tuple(s)), params, grad_specs)
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            from repro.launch.sharding import constrain
+
+            def _split(x):
+                # Keep the *batch* (second) dim data-sharded: without the
+                # constraint XLA shards the microbatch dim instead, and the
+                # layer scan's activation stash replicates the batch (a 16x
+                # memory blowup observed on llama3-405b — EXPERIMENTS.md).
+                y = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                return constrain(y, None, ("pod", "data"),
+                                 *([None] * (y.ndim - 2)))
+
+            micro = jax.tree.map(_split, batch)
+
+            def acc(carry, mb):
+                loss_sum, gacc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gacc = _constrain_grads(
+                    jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g))
+                return (loss_sum + l, gacc), None
+
+            zeros = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (loss_sum, gsum), _ = jax.lax.scan(acc, (jnp.float32(0), zeros), micro)
+            loss = loss_sum / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def make_prefill_step(cfg, pad_to: int | None = None):
+    mod = family_module(cfg.family)
+
+    def step(params, batch):
+        return mod.prefill(cfg, params, batch, pad_to=pad_to)
+
+    return step
+
+
+def make_decode_step(cfg):
+    mod = family_module(cfg.family)
+
+    def step(params, cache, batch):
+        return mod.decode_step(cfg, params, cache, batch)
+
+    return step
+
+
+def make_eval_step(cfg):
+    loss_fn = make_loss_fn(cfg)
+
+    def step(params, batch):
+        return loss_fn(params, batch)
+
+    return step

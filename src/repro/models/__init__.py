@@ -1,0 +1,23 @@
+"""Model zoo: five families behind one functional API.
+
+Each family module exposes: init(cfg, key), train_loss(cfg, params, batch),
+prefill(cfg, params, batch, pad_to), decode_step(cfg, params, cache, batch),
+cache_shape(cfg, batch, max_seq).
+"""
+from __future__ import annotations
+
+import importlib
+
+_FAMILIES = {
+    "dense": "repro.models.dense",
+    "moe": "repro.models.moe",
+    "rglru": "repro.models.rglru",
+    "rwkv6": "repro.models.rwkv6",
+    "encdec": "repro.models.encdec",
+}
+
+
+def family_module(family: str):
+    if family not in _FAMILIES:
+        raise KeyError(f"unknown model family: {family!r}")
+    return importlib.import_module(_FAMILIES[family])

@@ -1,0 +1,375 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention.
+
+Layer pattern is (recurrent, recurrent, local-attention) repeating — the 1:2
+attention:recurrence ratio of arXiv:2402.19427. ``n_layers`` that is not a
+multiple of 3 gets a trailing stack of recurrent layers (38 = 12x3 + 2).
+Both stacks are scan-stacked like dense.py.
+
+RG-LRU (per channel, diagonal gates):
+    r_t = sigmoid(w_a * x_t + b_a)              recurrence gate
+    i_t = sigmoid(w_x * x_t + b_x)              input gate
+    log a_t = -c * softplus(lam) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill computes the recurrence with an associative scan over the
+sequence axis (O(log S) depth); decode is a single-step update. Attention
+uses a **ring-buffer KV cache of size window** so decode state is O(window),
+which is what makes ``long_500k`` runnable (sub-quadratic AND sub-linear
+memory). FFN (GeGLU) weights are flash-tier; the recurrent block's in/out
+projections are FFN-like weight-stationary GEMVs and go to flash too
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.erdpe import maybe_flash_matmul
+from repro.models import common as cm
+from repro.models import dense
+
+RG_LRU_C = 8.0
+
+
+# --- parameter init -----------------------------------------------------------
+
+
+def _rec_mix_init(cfg, key):
+    """Temporal-mixing (recurrent) block params."""
+    d, r = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 4)
+    dtype = jnp.bfloat16
+    return {
+        "w_in_x": cm.dense_init(ks[0], d, r, dtype),   # recurrence branch
+        "w_in_y": cm.dense_init(ks[1], d, r, dtype),   # gate branch (GeLU)
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, r), jnp.float32)
+                   * (1.0 / cfg.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((r,), dtype),
+        "rg_a_w": jnp.zeros((r,), dtype),
+        "rg_a_b": jnp.full((r,), 1.0, dtype),          # bias>0: start remembering
+        "rg_x_w": jnp.zeros((r,), dtype),
+        "rg_x_b": jnp.zeros((r,), dtype),
+        # lam init so that a = exp(-8*softplus(lam)) spans ~(0.9, 0.999)
+        "lam": jnp.linspace(-4.0, -1.0, r).astype(jnp.float32),
+        "w_out": cm.dense_init(ks[3], r, d, dtype),
+    }
+
+
+def _rec_layer_init(cfg, key):
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.bfloat16
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "mix": _rec_mix_init(cfg, k1),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": cm.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _attn_layer_init(cfg, key):
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.bfloat16
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": cm.attn_init(k1, dense.attn_cfg(cfg), dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": cm.swiglu_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _superblock_init(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "r1": _rec_layer_init(cfg, k1),
+        "r2": _rec_layer_init(cfg, k2),
+        "a": _attn_layer_init(cfg, k3),
+    }
+
+
+def block_counts(cfg) -> tuple[int, int]:
+    """(n_superblocks, n_tail_recurrent) covering cfg.n_layers."""
+    return cfg.n_layers // 3, cfg.n_layers % 3
+
+
+def init(cfg, key) -> dict:
+    n_super, n_tail = block_counts(cfg)
+    ke, kb, kt, kh = jax.random.split(key, 4)
+    dtype = jnp.bfloat16
+    params = {
+        "embed": cm.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": jax.vmap(partial(_superblock_init, cfg))(
+            jax.random.split(kb, n_super)),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": cm.dense_init(kh, cfg.d_model, cfg.vocab_size, dtype),
+    }
+    if n_tail:
+        params["tail"] = jax.vmap(partial(_rec_layer_init, cfg))(
+            jax.random.split(kt, n_tail))
+    return params
+
+
+# --- RG-LRU core ---------------------------------------------------------------
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, R), w (W, R) -> (B, S, R)."""
+    width = w.shape[0]
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        shift = width - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        acc = acc + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (acc + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _rg_lru_gates(p, u):
+    """u: (..., R) conv output -> (log_a, beta*gated_u) both f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * p["rg_a_w"].astype(jnp.float32)
+                       + p["rg_a_b"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf * p["rg_x_w"].astype(jnp.float32)
+                       + p["rg_x_b"].astype(jnp.float32))
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * i * uf
+
+
+def rg_lru_seq(p, u, h0=None):
+    """Full-sequence RG-LRU via associative scan. u: (B, S, R) -> (h, h_last)."""
+    log_a, b = _rg_lru_gates(p, u)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        # fold initial state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rg_lru_step(p, u, h_prev):
+    """Single decode step. u: (B, 1, R); h_prev: (B, R) f32."""
+    log_a, b = _rg_lru_gates(p, u)
+    h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+    return h.astype(u.dtype)[:, None], h
+
+
+def _rec_mix_seq(p, x, conv_state=None, h0=None):
+    """Recurrent temporal mix, full sequence. Returns (out, (conv_tail, h_last))."""
+    gate = jax.nn.gelu(maybe_flash_matmul(x, p["w_in_y"]).astype(jnp.float32))
+    u = maybe_flash_matmul(x, p["w_in_x"])
+    if conv_state is not None:
+        u_ext = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+        c = _causal_conv(u_ext, p["conv_w"], p["conv_b"])[:, conv_state.shape[1]:]
+    else:
+        c = _causal_conv(u, p["conv_w"], p["conv_b"])
+    h, h_last = rg_lru_seq(p, c, h0)
+    tail = u[:, -(p["conv_w"].shape[0] - 1):]
+    return maybe_flash_matmul((gate * h.astype(jnp.float32)).astype(x.dtype),
+                              p["w_out"]), (tail, h_last)
+
+
+def _rec_mix_step(p, x, conv_state, h_prev):
+    """Decode step. x: (B, 1, D); conv_state: (B, W-1, R); h_prev: (B, R)."""
+    gate = jax.nn.gelu(maybe_flash_matmul(x, p["w_in_y"]).astype(jnp.float32))
+    u = maybe_flash_matmul(x, p["w_in_x"])                   # (B, 1, R)
+    u_ext = jnp.concatenate([conv_state.astype(u.dtype), u], axis=1)
+    c = _causal_conv(u_ext, p["conv_w"], p["conv_b"])[:, -1:]
+    h, h_new = rg_lru_step(p, c, h_prev)
+    out = maybe_flash_matmul((gate * h.astype(jnp.float32)).astype(x.dtype),
+                             p["w_out"])
+    return out, (u_ext[:, 1:], h_new)
+
+
+# --- layer forwards -------------------------------------------------------------
+
+
+def _rec_layer_seq(cfg, x, lp, conv_state=None, h0=None):
+    x = cm.pin_batch(x)
+    lp = cm.pin_layer_grads(lp)
+    mix, state = _rec_mix_seq(lp["mix"], cm.rms_norm(x, lp["ln1"]), conv_state, h0)
+    x = x + mix
+    x = x + cm.swiglu_apply(lp["ffn"], cm.rms_norm(x, lp["ln2"]))
+    return x, state
+
+
+def _attn_layer_seq(cfg, x, lp, positions):
+    x = cm.pin_batch(x)
+    lp = cm.pin_layer_grads(lp)
+    h = cm.rms_norm(x, lp["ln1"])
+    q, k, v = cm.qkv_project(lp["attn"], h, dense.attn_cfg(cfg), positions)
+    attn = cm.chunked_attention(q, k, v, causal=True, window=cfg.local_window)
+    b, s, _, _ = attn.shape
+    x = x + maybe_flash_matmul(attn.reshape(b, s, -1), lp["attn"]["wo"])
+    x = x + cm.swiglu_apply(lp["ffn"], cm.rms_norm(x, lp["ln2"]))
+    return x, (k, v)
+
+
+# --- model API -------------------------------------------------------------------
+
+
+def forward(cfg, params, tokens, remat=True, return_cache=False):
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_super, n_tail = block_counts(cfg)
+
+    def body(x, bp):
+        x, st1 = _rec_layer_seq(cfg, x, bp["r1"])
+        x, st2 = _rec_layer_seq(cfg, x, bp["r2"])
+        x, kv = _attn_layer_seq(cfg, x, bp["a"], positions)
+        return x, ((st1, st2, kv) if return_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, blk_out = jax.lax.scan(body, x, params["blocks"])
+    st1, st2, kv = blk_out if return_cache else (None, None, None)
+
+    tail_states = None
+    if n_tail:
+        def tbody(x, lp):
+            x, st = _rec_layer_seq(cfg, x, lp)
+            return x, (st if return_cache else None)
+        if remat:
+            tbody = jax.checkpoint(
+                tbody, policy=jax.checkpoint_policies.nothing_saveable)
+        x, tail_states = jax.lax.scan(tbody, x, params["tail"])
+
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = maybe_flash_matmul(x, params["lm_head"], out_dtype=jnp.float32)
+    if return_cache:
+        return logits, _pack_cache(cfg, (st1, st2), kv, tail_states, s)
+    return logits
+
+
+def train_loss(cfg, params, batch):
+    logits = forward(cfg, params, batch["tokens"], remat=True)
+    return cm.softmax_xent(logits, batch["labels"])
+
+
+# --- cache layout ----------------------------------------------------------------
+# rec states per stack: conv (N, B, W-1, R) f32-as-bf16, h (N, B, R) f32
+# attn: ring KV (Nsuper, B, window, KV, Dh) + kv_len scalar tracked by caller.
+
+
+def _ring_from_prefill(cfg, k, v, s):
+    """Take full-prefill K/V (N, B, S, KV, Dh) -> ring cache (N, B, W, KV, Dh).
+
+    Slot layout: position p lives at slot p % window.
+    """
+    w = cfg.local_window
+    if s >= w:
+        last_k, last_v = k[:, :, -w:], v[:, :, -w:]
+        shift = s % w
+        return jnp.roll(last_k, shift, axis=2), jnp.roll(last_v, shift, axis=2)
+    pad = [(0, 0), (0, 0), (0, w - s), (0, 0), (0, 0)]
+    return jnp.pad(k, pad), jnp.pad(v, pad)
+
+
+def _pack_cache(cfg, rec_states, kv, tail_states, s):
+    (c1, h1), (c2, h2) = rec_states
+    k, v = kv
+    rk, rv = _ring_from_prefill(cfg, k, v, s)
+    cache = {
+        "conv1": c1, "h1": h1, "conv2": c2, "h2": h2,
+        "k": rk, "v": rv,
+    }
+    if tail_states is not None:
+        cache["conv_t"], cache["h_t"] = tail_states
+    return cache
+
+
+def cache_shape(cfg, batch: int, max_seq: int) -> dict:
+    """max_seq is the context length; attention cache is O(window) regardless."""
+    n_super, n_tail = block_counts(cfg)
+    r = cfg.lru_width or cfg.d_model
+    wm1 = cfg.conv_width - 1
+    w = cfg.local_window
+    out = {
+        "conv1": jax.ShapeDtypeStruct((n_super, batch, wm1, r), jnp.bfloat16),
+        "h1": jax.ShapeDtypeStruct((n_super, batch, r), jnp.float32),
+        "conv2": jax.ShapeDtypeStruct((n_super, batch, wm1, r), jnp.bfloat16),
+        "h2": jax.ShapeDtypeStruct((n_super, batch, r), jnp.float32),
+        "k": jax.ShapeDtypeStruct(
+            (n_super, batch, w, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct(
+            (n_super, batch, w, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+    }
+    if n_tail:
+        out["conv_t"] = jax.ShapeDtypeStruct((n_tail, batch, wm1, r), jnp.bfloat16)
+        out["h_t"] = jax.ShapeDtypeStruct((n_tail, batch, r), jnp.float32)
+    return out
+
+
+def prefill(cfg, params, batch, pad_to=None):
+    del pad_to  # ring cache is fixed-size; pad_to is a no-op
+    logits, cache = forward(cfg, params, batch["tokens"], return_cache=True)
+    return logits[:, -1], cache
+
+
+def _ring_attention_step(cfg, lp, x, k_cache, v_cache, kv_len):
+    """Decode attention against the ring cache. x: (B, 1, D)."""
+    h = cm.rms_norm(x, lp["ln1"])
+    positions = jnp.reshape(kv_len, (1,))
+    q, k, v = cm.qkv_project(lp["attn"], h, dense.attn_cfg(cfg), positions)
+    w = cfg.local_window
+    slot = kv_len % w
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, axis=1)
+    # Valid slots: all, once kv_len+1 >= w; else slots 0..kv_len.
+    n_valid = jnp.minimum(kv_len + 1, w)
+    attn = cm.decode_attention(q, k_cache, v_cache, n_valid)
+    b = attn.shape[0]
+    out = maybe_flash_matmul(attn.reshape(b, 1, -1), lp["attn"]["wo"])
+    x = x + out
+    x = x + cm.swiglu_apply(lp["ffn"], cm.rms_norm(x, lp["ln2"]))
+    return x, (k_cache, v_cache)
+
+
+def _rec_step_layer(cfg, x, lp, conv_state, h_prev):
+    mix, (conv_new, h_new) = _rec_mix_step(
+        lp["mix"], cm.rms_norm(x, lp["ln1"]), conv_state, h_prev)
+    x = x + mix
+    x = x + cm.swiglu_apply(lp["ffn"], cm.rms_norm(x, lp["ln2"]))
+    return x, conv_new, h_new
+
+
+def decode_step(cfg, params, cache, batch):
+    tokens = batch["token"][:, None]
+    kv_len = batch["kv_len"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    n_super, n_tail = block_counts(cfg)
+
+    def body(x, blk):
+        bp, c1, h1, c2, h2, kc, vc = blk
+        x, c1n, h1n = _rec_step_layer(cfg, x, bp["r1"], c1, h1)
+        x, c2n, h2n = _rec_step_layer(cfg, x, bp["r2"], c2, h2)
+        x, (kcn, vcn) = _ring_attention_step(cfg, bp["a"], x, kc, vc, kv_len)
+        return x, (c1n, h1n, c2n, h2n, kcn, vcn)
+
+    x, (c1, h1, c2, h2, kc, vc) = jax.lax.scan(
+        body, x,
+        (params["blocks"], cache["conv1"], cache["h1"], cache["conv2"],
+         cache["h2"], cache["k"], cache["v"]))
+    new_cache = {"conv1": c1, "h1": h1, "conv2": c2, "h2": h2, "k": kc, "v": vc}
+
+    if n_tail:
+        def tbody(x, blk):
+            lp, ct, ht = blk
+            x, ctn, htn = _rec_step_layer(cfg, x, lp, ct, ht)
+            return x, (ctn, htn)
+        x, (ct, ht) = jax.lax.scan(
+            tbody, x, (params["tail"], cache["conv_t"], cache["h_t"]))
+        new_cache["conv_t"], new_cache["h_t"] = ct, ht
+
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = maybe_flash_matmul(x[:, 0], params["lm_head"], out_dtype=jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,336 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free, data-dependent decay.
+
+Time mixing (per head, head_dim K):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (state S in R^{KxV})
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with per-channel, data-dependent decay w_t = exp(-exp(d_t)) in (0, 1) and a
+"bonus" u for the current token. Token-shift uses the Finch data-dependent
+lerp (LoRA-projected mixing coefficients for r/k/v/w/g).
+
+Two wkv evaluation modes (numerically equivalent; tests assert it):
+  * ``scan``    — one lax.scan step per token: the paper-faithful recurrent
+                  form; O(S) sequential steps.
+  * ``chunked`` — blocked two-level scan: a C-step scan that advances ALL
+                  S/C chunks in parallel (intra-chunk, zero initial state)
+                  + an S/C-step scan stitching chunk boundary states
+                  (inter-chunk). Sequential depth C + S/C instead of S with
+                  only *decaying* exponentials (exp of cumsum of log w <= 0),
+                  so it is unconditionally overflow-free. This is the TPU
+                  adaptation: the intra phase is batched outer products that
+                  map to the MXU.
+
+Channel mix is the FFN analogue -> flash tier; time-mix projections
+(w_r/k/v/g/o) are weight-stationary GEMVs -> flash tier too (DESIGN.md §4).
+The model is attention-free: NVLLM's KV-cache-aware scheduler (Alg. 2) is
+inapplicable (state is O(1)); noted in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.erdpe import maybe_flash_matmul
+from repro.models import common as cm
+
+TS_LORA = 32      # token-shift LoRA rank
+DEC_LORA = 64     # decay LoRA rank
+DEFAULT_CHUNK = 64
+
+
+# --- init -----------------------------------------------------------------------
+
+
+def _tmix_init(cfg, key):
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    dtype = jnp.bfloat16
+    h = d // cfg.rwkv_head_dim
+    return {
+        "mu_x": jnp.full((d,), 0.5, dtype),
+        "mu": jnp.full((5, d), 0.5, dtype),
+        "ts_A": cm.dense_init(ks[0], d, 5 * TS_LORA, dtype),
+        "ts_B": (jax.random.normal(ks[1], (5, TS_LORA, d), jnp.float32)
+                 * 0.01).astype(dtype),
+        "w_r": cm.dense_init(ks[2], d, d, dtype),
+        "w_k": cm.dense_init(ks[3], d, d, dtype),
+        "w_v": cm.dense_init(ks[4], d, d, dtype),
+        "w_g": cm.dense_init(ks[5], d, d, dtype),
+        "w_o": cm.dense_init(ks[6], d, d, dtype),
+        # decay: log w = -exp(dec); init dec ~ N(-1.5, .3) -> w ~ 0.8
+        "dec_base": (jax.random.normal(ks[7], (d,), jnp.float32) * 0.3 - 1.5),
+        "dec_A": cm.dense_init(jax.random.fold_in(ks[7], 1), d, DEC_LORA, dtype),
+        "dec_B": (jax.random.normal(jax.random.fold_in(ks[7], 2),
+                                    (DEC_LORA, d), jnp.float32) * 0.01).astype(dtype),
+        "u": jnp.full((d,), 0.5, jnp.float32),
+        "gn_scale": jnp.ones((d,), dtype),
+        "gn_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def _cmix_init(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dtype = jnp.bfloat16
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "w_up": cm.dense_init(ks[0], d, f, dtype),     # "key" proj
+        "w_down": cm.dense_init(ks[1], f, d, dtype),   # "value" proj
+        "w_rgate": cm.dense_init(ks[2], d, d, dtype),  # receptance (DRAM tier)
+    }
+
+
+def layer_init(cfg, key):
+    k1, k2 = jax.random.split(key)
+    dtype = jnp.bfloat16
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "tmix": _tmix_init(cfg, k1),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "channel_mix": _cmix_init(cfg, k2),
+    }
+
+
+def init(cfg, key) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    layers = jax.vmap(partial(layer_init, cfg))(
+        jax.random.split(kl, cfg.n_layers))
+    dtype = jnp.bfloat16
+    return {
+        "embed": cm.embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "ln_in": jnp.zeros((cfg.d_model,), dtype),     # RWKV: LN after embed
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": cm.dense_init(kh, cfg.d_model, cfg.vocab_size, dtype),
+    }
+
+
+# --- token shift -----------------------------------------------------------------
+
+
+def _shift(x, x_last=None):
+    """x_{t-1} along seq; first element = x_last (decode carry) or 0."""
+    pad = jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xp):
+    """Finch data-dependent lerp -> (xr, xk, xv, xw, xg), each (B, S, D)."""
+    base = x + (xp - x) * p["mu_x"].astype(x.dtype)
+    z = jnp.tanh(jnp.dot(base.astype(jnp.float32),
+                         p["ts_A"].astype(jnp.float32)))
+    b, s, _ = x.shape
+    z = z.reshape(b, s, 5, TS_LORA)
+    m = p["mu"].astype(jnp.float32) + jnp.einsum(
+        "bsfj,fjd->bsfd", z, p["ts_B"].astype(jnp.float32))
+    xf, xpf = x.astype(jnp.float32), xp.astype(jnp.float32)
+    mixed = xf[:, :, None] + (xpf - xf)[:, :, None] * m      # (B, S, 5, D)
+    return tuple(mixed[:, :, i].astype(x.dtype) for i in range(5))
+
+
+# --- wkv kernels -------------------------------------------------------------------
+
+
+def wkv_scan(r, k, v, logw, u, s0):
+    """Per-token recurrence. r/k/v/logw: (B, S, H, K) f32; u: (H, K);
+    s0: (B, H, K, V) f32. Returns (o (B,S,H,V), s_last)."""
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp                         # (B, H, K)
+        kv = k_t[..., None] * v_t[..., None, :]           # (B, H, K, V)
+        o = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lw_t)[..., None] * s + kv
+        return s, o
+
+    elems = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, logw))
+    s_last, o = jax.lax.scan(step, s0, elems)
+    return jnp.moveaxis(o, 0, 1), s_last
+
+
+def wkv_chunked(r, k, v, logw, u, s0, chunk=DEFAULT_CHUNK):
+    """Blocked two-level scan; equals wkv_scan (tests assert allclose).
+
+    Only decaying exponentials appear (exp of non-positive cumsums), so the
+    computation cannot overflow for any data-dependent decay.
+    """
+    b, s, h, kk = r.shape
+    vv = v.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // c
+
+    def chunked(t):                                       # (B,S,H,X)->(C,B,nc,H,X)
+        return jnp.moveaxis(t.reshape(b, nc, c, h, -1), 2, 0)
+
+    rc, kc, vc, lwc = chunked(r), chunked(k), chunked(v), chunked(logw)
+
+    # Phase 1 — intra-chunk: advance all chunks in parallel, zero init state.
+    def intra_step(sblk, inp):
+        r_t, k_t, v_t, lw_t = inp                         # (B, nc, H, K)
+        kv = k_t[..., None] * v_t[..., None, :]           # (B, nc, H, K, V)
+        o = jnp.einsum("bnhk,bnhkv->bnhv", r_t,
+                       sblk + u[None, None, :, :, None] * kv)
+        sblk = jnp.exp(lw_t)[..., None] * sblk + kv
+        return sblk, o
+
+    sblk0 = jnp.zeros((b, nc, h, kk, vv), jnp.float32)
+    t_states, o_intra = jax.lax.scan(intra_step, sblk0, (rc, kc, vc, lwc))
+
+    # Phase 2 — inter-chunk: stitch boundary states.
+    wc_total = jnp.exp(jnp.sum(lwc, axis=0))              # (B, nc, H, K)
+
+    def inter_step(s_in, inp):
+        wct, t_n = inp                                    # (B,H,K), (B,H,K,V)
+        s_out = wct[..., None] * s_in + t_n
+        return s_out, s_in                                # exclusive: state at entry
+
+    s_last, s0_chunks = jax.lax.scan(
+        inter_step, s0,
+        (jnp.moveaxis(wc_total, 1, 0), jnp.moveaxis(t_states, 1, 0)))
+    s0_chunks = jnp.moveaxis(s0_chunks, 0, 1)             # (B, nc, H, K, V)
+
+    # o_inter[t] = (r_t * exp(exclusive cumsum log w)) @ S0_chunk
+    lw_cum = jnp.cumsum(lwc, axis=0) - lwc                # exclusive, (C,B,nc,H,K)
+    r_dec = rc * jnp.exp(lw_cum)
+    o_inter = jnp.einsum("cbnhk,bnhkv->cbnhv", r_dec, s0_chunks)
+
+    o = o_intra + o_inter                                 # (C, B, nc, H, V)
+    o = jnp.moveaxis(o, 0, 2).reshape(b, nc * c, h, vv)[:, :s]
+    return o, s_last
+
+
+# --- layer forward ------------------------------------------------------------------
+
+
+def _group_norm_heads(o, scale, bias, eps=64e-5):
+    """Per-head LayerNorm over K (RWKV ln_x). o: (B, S, H, K)."""
+    mu = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    y = (o - mu) * jax.lax.rsqrt(var + eps)
+    b, s, h, k = o.shape
+    return (y * scale.astype(jnp.float32).reshape(h, k)
+            + bias.astype(jnp.float32).reshape(h, k))
+
+
+def tmix_seq(cfg, p, x, x_last=None, s0=None, wkv_mode="chunked"):
+    """x: (B, S, D) -> (out, (x_last_new, s_last))."""
+    b, s, d = x.shape
+    h, kk = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    xp = _shift(x, x_last)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, xp)
+    r = maybe_flash_matmul(xr, p["w_r"]).astype(jnp.float32).reshape(b, s, h, kk)
+    k = maybe_flash_matmul(xk, p["w_k"]).astype(jnp.float32).reshape(b, s, h, kk)
+    v = maybe_flash_matmul(xv, p["w_v"]).astype(jnp.float32).reshape(b, s, h, kk)
+    g = maybe_flash_matmul(xg, p["w_g"]).astype(jnp.float32)
+    dec = p["dec_base"].astype(jnp.float32) + jnp.dot(
+        jnp.tanh(jnp.dot(xw.astype(jnp.float32), p["dec_A"].astype(jnp.float32))),
+        p["dec_B"].astype(jnp.float32))
+    logw = -jnp.exp(dec).reshape(b, s, h, kk)             # <= 0
+    u = p["u"].reshape(h, kk)
+    if s0 is None:
+        s0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+    if wkv_mode == "scan":
+        o, s_last = wkv_scan(r, k, v, logw, u, s0)
+    else:
+        o, s_last = wkv_chunked(r, k, v, logw, u, s0)
+    o = _group_norm_heads(o, p["gn_scale"], p["gn_bias"]).reshape(b, s, d)
+    o = (o * jax.nn.silu(g)).astype(x.dtype)
+    return maybe_flash_matmul(o, p["w_o"]), (x[:, -1], s_last)
+
+
+def cmix_seq(p, x, x_last=None):
+    xp = _shift(x, x_last)
+    xk = x + (xp - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xp - x) * p["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(
+        maybe_flash_matmul(xk, p["w_up"]).astype(jnp.float32)))
+    rr = jax.nn.sigmoid(
+        maybe_flash_matmul(xr, p["w_rgate"]).astype(jnp.float32))
+    out = rr * maybe_flash_matmul(kk.astype(x.dtype), p["w_down"]).astype(jnp.float32)
+    return out.astype(x.dtype), x[:, -1]
+
+
+def _layer_seq(cfg, x, lp, wkv_mode="chunked", collect_state=True):
+    x = cm.pin_batch(x)
+    lp = cm.pin_layer_grads(lp)
+    mix, (tx, ts) = tmix_seq(cfg, lp["tmix"], cm.rms_norm(x, lp["ln1"]),
+                             wkv_mode=wkv_mode)
+    x = x + mix
+    cmx, cx = cmix_seq(lp["channel_mix"], cm.rms_norm(x, lp["ln2"]))
+    x = x + cmx
+    return x, ((tx, ts, cx) if collect_state else None)
+
+
+# --- model API ----------------------------------------------------------------------
+
+
+def forward(cfg, params, tokens, remat=True, return_cache=False,
+            wkv_mode="chunked"):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = cm.rms_norm(x, params["ln_in"])
+
+    def body(x, lp):
+        return _layer_seq(cfg, x, lp, wkv_mode=wkv_mode,
+                          collect_state=return_cache)
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, st_out = jax.lax.scan(body, x, params["layers"])
+    tx, ts, cx = st_out if return_cache else (None, None, None)
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = maybe_flash_matmul(x, params["lm_head"], out_dtype=jnp.float32)
+    if return_cache:
+        return logits, {"tmix_x": tx, "wkv": ts, "cmix_x": cx}
+    return logits
+
+
+def train_loss(cfg, params, batch, wkv_mode="chunked"):
+    logits = forward(cfg, params, batch["tokens"], remat=True, wkv_mode=wkv_mode)
+    return cm.softmax_xent(logits, batch["labels"])
+
+
+def cache_shape(cfg, batch: int, max_seq: int) -> dict:
+    """State is O(1) in context length (max_seq unused — that's the point)."""
+    d = cfg.d_model
+    h, kk = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    ll = cfg.n_layers
+    return {
+        "tmix_x": jax.ShapeDtypeStruct((ll, batch, d), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((ll, batch, h, kk, kk), jnp.float32),
+        "cmix_x": jax.ShapeDtypeStruct((ll, batch, d), jnp.bfloat16),
+    }
+
+
+def prefill(cfg, params, batch, pad_to=None, wkv_mode="chunked"):
+    del pad_to
+    logits, cache = forward(cfg, params, batch["tokens"], return_cache=True,
+                            wkv_mode=wkv_mode)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg, params, cache, batch):
+    tokens = batch["token"][:, None]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = cm.rms_norm(x, params["ln_in"])
+
+    def body(x, blk):
+        lp, tx, ts, cx = blk
+        mix, (tx_n, ts_n) = tmix_seq(cfg, lp["tmix"], cm.rms_norm(x, lp["ln1"]),
+                                     x_last=tx, s0=ts, wkv_mode="scan")
+        x = x + mix
+        cmx, cx_n = cmix_seq(lp["channel_mix"], cm.rms_norm(x, lp["ln2"]),
+                             x_last=cx)
+        x = x + cmx
+        return x, (tx_n, ts_n, cx_n)
+
+    x, (tx, ts, cx) = jax.lax.scan(
+        body, x, (params["layers"], cache["tmix_x"].astype(jnp.bfloat16),
+                  cache["wkv"], cache["cmix_x"].astype(jnp.bfloat16)))
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = maybe_flash_matmul(x[:, 0], params["lm_head"], out_dtype=jnp.float32)
+    return logits, {"tmix_x": tx, "wkv": ts, "cmix_x": cx}

@@ -1,0 +1,88 @@
+"""Minimal optax-style AdamW with configurable moment dtype + global clipping.
+
+``moment_dtype="bfloat16"`` halves optimizer-state HBM — one of the knobs
+that lets llama3-405b train_4k fit the single-pod mesh (EXPERIMENTS.md
+§Dry-run); f32 is the default. State is a pytree mirroring params, so the
+sharding rules in launch/sharding.py apply to it directly (ZeRO-style
+sharding is "shard the mirror like the params + data axis", see
+param_specs(zero1=True)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    moment_dtype: str = "float32"
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.float32(self.lr)
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.clip_norm is not None:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gn, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        dt = jnp.dtype(self.moment_dtype)
+
+        def upd_m(m, g):
+            return (b1 * m.astype(jnp.float32)
+                    + (1 - b1) * g.astype(jnp.float32)).astype(dt)
+
+        def upd_v(v, g):
+            g32 = g.astype(jnp.float32)
+            return (b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32).astype(dt)
+
+        m = jax.tree.map(upd_m, state.m, grads)
+        v = jax.tree.map(upd_v, state.v, grads)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        lr = self._lr(step)
+
+        def delta(mi, vi, pi):
+            mh = mi.astype(jnp.float32) / bc1
+            vh = vi.astype(jnp.float32) / bc2
+            d = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay and pi.ndim >= 2:   # no decay on norms/bias
+                d = d + self.weight_decay * pi.astype(jnp.float32)
+            return (-lr * d).astype(pi.dtype)
+
+        updates = jax.tree.map(delta, m, v, params)
+        return updates, AdamWState(step=step, m=m, v=v)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

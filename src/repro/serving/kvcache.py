@@ -1,0 +1,68 @@
+"""Slot-based KV cache pool for continuous batching.
+
+A fixed pool of ``n_slots`` request slots, each a contiguous (S_max, KV, Dh)
+region per layer (the DRAM tier of NVLLM: "attention weights and KV cache
+stay in DRAM", §3). Slots are allocated at admission, freed at completion;
+per-slot lengths drive both the attention masks and the KV-cache-aware
+scheduler's latency estimate (Alg. 2 input).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class KVCachePool:
+    n_layers: int
+    n_slots: int
+    max_seq: int
+    n_kv_heads: int
+    head_dim: int
+    dtype: type = jnp.bfloat16
+
+    def __post_init__(self):
+        shape = (self.n_layers, self.n_slots, self.max_seq,
+                 self.n_kv_heads, self.head_dim)
+        self.k = jnp.zeros(shape, self.dtype)
+        self.v = jnp.zeros(shape, self.dtype)
+        self.lengths = np.zeros((self.n_slots,), np.int32)
+        self.free = list(range(self.n_slots))[::-1]
+        self.active: dict[int, int] = {}        # slot -> request id
+
+    def alloc(self, request_id: int) -> int | None:
+        if not self.free:
+            return None
+        slot = self.free.pop()
+        self.active[slot] = request_id
+        self.lengths[slot] = 0
+        return slot
+
+    def release(self, slot: int):
+        rid = self.active.pop(slot, None)
+        del rid
+        self.lengths[slot] = 0
+        self.k = self.k.at[:, slot].set(0)
+        self.v = self.v.at[:, slot].set(0)
+        self.free.append(slot)
+
+    def write_prefill(self, slot: int, k_new, v_new):
+        """k_new/v_new: (L, S, KV, Dh) from a prefill pass."""
+        s = k_new.shape[1]
+        self.k = self.k.at[:, slot, :s].set(k_new.astype(self.dtype))
+        self.v = self.v.at[:, slot, :s].set(v_new.astype(self.dtype))
+        self.lengths[slot] = s
+
+    def write_token(self, slot: int, layer: int, k_t, v_t, pos: int):
+        self.k = self.k.at[layer, slot, pos].set(k_t.astype(self.dtype))
+        self.v = self.v.at[layer, slot, pos].set(v_t.astype(self.dtype))
+
+    def bump(self, slot: int):
+        self.lengths[slot] += 1
+
+    @property
+    def max_active_len(self) -> int:
+        act = [self.lengths[s] for s in self.active]
+        return int(max(act)) if act else 0

@@ -1,0 +1,36 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; only launch/dryrun.py forces 512 placeholder devices."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_batch(cfg, key, b=2, s=32):
+    """Family-correct training batch for a smoke config."""
+    kt, kl = jax.random.split(key)
+    if cfg.family == "encdec":
+        return {
+            "src_embeds": jax.random.normal(kt, (b, s, cfg.d_model),
+                                            jnp.bfloat16),
+            "tgt_tokens": jax.random.randint(kt, (b, s), 0, cfg.vocab_size),
+            "labels": jax.random.randint(kl, (b, s), 0, cfg.vocab_size),
+        }
+    if cfg.frontend == "patch":
+        st = s - cfg.n_patch_tokens
+        return {
+            "tokens": jax.random.randint(kt, (b, st), 0, cfg.vocab_size),
+            "patch_embeds": jax.random.normal(
+                kt, (b, cfg.n_patch_tokens, cfg.d_model), jnp.bfloat16),
+            "labels": jax.random.randint(kl, (b, st), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(kt, (b, s), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kl, (b, s), 0, cfg.vocab_size),
+    }

@@ -1,0 +1,109 @@
+"""ECDP Pallas kernel vs pure-jnp oracle: shape/dtype/RBER sweeps + the
+literal Algorithm 1 transcription (paper §3.2-3.3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ecc
+from repro.core.quant import quantize_int8
+from repro.kernels import ops, ref
+from repro.kernels.ecdp import ecdp_matmul_pallas
+
+
+def _make(key, m, k, n, rber, adtype=jnp.float32):
+    kw, ka, ke = jax.random.split(key, 3)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    q, scale = quantize_int8(w, axis=0)
+    raw = ecc.weights_to_bytes(q)
+    parity = ecc.encode(raw)
+    if rber:
+        raw = ecc.inject_bit_errors(raw, rber, ke)
+    a = jax.random.normal(ka, (m, k), jnp.float32).astype(adtype)
+    return a, ecc.bytes_to_weights(raw), parity, scale
+
+
+SHAPES = [(1, 64, 16), (4, 128, 64), (8, 512, 256), (3, 136, 48),
+          (16, 256, 512)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("rber", [0.0, 1e-4, 2e-3])
+def test_kernel_matches_oracle(m, k, n, rber):
+    a, wq, parity, scale = _make(jax.random.PRNGKey(m * k + n), m, k, n, rber)
+    out = ops.ecdp_matmul(a, wq, parity, scale)
+    want = ref.ecdp_reference(a, wq, parity, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("adtype", [jnp.bfloat16, jnp.float32])
+def test_kernel_dtypes(adtype):
+    a, wq, parity, scale = _make(jax.random.PRNGKey(5), 4, 256, 128, 1e-3,
+                                 adtype)
+    out = ops.ecdp_matmul(a, wq, parity, scale)
+    want = ref.ecdp_reference(a.astype(jnp.float32), wq, parity, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-2, atol=2e-1)
+
+
+def test_kernel_block_shapes():
+    """Different BlockSpec tilings agree (f32 accumulation order differs
+    across k-splits, so exact equality is not expected)."""
+    a, wq, parity, scale = _make(jax.random.PRNGKey(9), 8, 1024, 512, 1e-3)
+    outs = []
+    for bk, bn in ((128, 128), (256, 512), (512, 256), (1024, 512)):
+        o = ecdp_matmul_pallas(a, wq, parity, block_m=8, block_k=bk,
+                               block_n=bn, interpret=True)
+        outs.append(np.asarray(o * scale))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-3)
+
+
+def test_ecc_off_uses_raw_weights():
+    a, wq, parity, scale = _make(jax.random.PRNGKey(11), 2, 128, 32, 5e-3)
+    out = ops.ecdp_matmul(a, wq, parity, scale, ecc_enabled=False)
+    want = ref.ecdp_reference(a, wq, parity, scale, apply_correction=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    # and with ECC on, corrupted weights change the answer
+    out_ecc = ops.ecdp_matmul(a, wq, parity, scale, ecc_enabled=True)
+    assert not np.allclose(np.asarray(out), np.asarray(out_ecc))
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**16))
+def test_algorithm1_equals_vectorized(d, seed):
+    """The paper's sequential OoO dot product == our vectorized semantics."""
+    rng = np.random.default_rng(seed)
+    k = 64
+    key = jax.random.PRNGKey(seed)
+    a, wq, parity, scale = _make(key, 1, k, 4, 2e-3)
+    col = rng.integers(0, 4)
+    s_alg1 = ref.ooo_dot_product_alg1(
+        np.asarray(wq)[:, col], np.asarray(parity)[:, col],
+        np.asarray(a)[0], d)
+    want = float(ref.ecdp_reference(a, wq, parity, scale)[0, col]
+                 / np.asarray(scale)[0, col])
+    assert abs(s_alg1 - want) < 1e-3 * max(1.0, abs(want))
+
+
+def test_flash_matmul_shapes():
+    """flash_matmul flattens leading dims and restores them."""
+    from repro.core.erdpe import ExecMode, flash_matmul
+    from repro.core.tiering import encode_flash
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (64, 48), jnp.float32)
+    fw = encode_flash(w, rber=1e-4, seed=3)
+    x = jax.random.normal(key, (2, 5, 64), jnp.bfloat16)
+    for mode in (ExecMode.XLA, ExecMode.PALLAS):
+        out = flash_matmul(x, fw, mode=mode)
+        assert out.shape == (2, 5, 48)
+        assert out.dtype == jnp.bfloat16
+    xla = flash_matmul(x, fw, mode=ExecMode.XLA, out_dtype=jnp.float32)
+    pal = flash_matmul(x, fw, mode=ExecMode.PALLAS, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
+                               rtol=2e-2, atol=2e-1)

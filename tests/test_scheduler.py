@@ -1,0 +1,74 @@
+"""Algorithm 2 (KV-cache-aware scheduling): unit + property tests."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import scheduler as sched
+
+
+CFG = sched.SchedulerConfig(page_buffer_bytes=16 * 1024, column_bytes=4096,
+                            c_npu_per_column=64, h=16)
+
+
+def test_no_change_below_threshold():
+    b = sched.init_bitmap(CFG)
+    out = sched.kv_aware_update(b, jnp.int32(CFG.c_th), CFG)
+    assert bool(jnp.all(out == b)), "dC <= C_th -> bitmap unchanged (line 2)"
+
+
+def test_clears_highest_indexed_bits_first():
+    b = sched.init_bitmap(CFG)
+    out = sched.kv_aware_update(b, jnp.int32(CFG.c_th * 2 + 1), CFG)
+    # k = ceil(dC/C_th) = 3 -> top 3 bits cleared
+    want = np.ones(16, np.int32)
+    want[-3:] = 0
+    np.testing.assert_array_equal(np.asarray(out), want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.lists(st.integers(0, 1), min_size=16, max_size=16),
+       delta=st.integers(0, 10**6))
+def test_update_invariants(bits, delta):
+    b = jnp.asarray(bits, jnp.int32)
+    out = np.asarray(sched.kv_aware_update(b, jnp.int32(delta), CFG))
+    bin_ = np.asarray(b)
+    # monotone: never sets a bit
+    assert np.all(out <= bin_)
+    k = 0 if delta <= CFG.c_th else -(-delta // CFG.c_th)
+    cleared = int(bin_.sum() - out.sum())
+    assert cleared == min(k, int(bin_.sum()))
+    # cleared bits are the highest-indexed set bits
+    if cleared:
+        set_idx = np.where(bin_ == 1)[0]
+        assert np.all(out[set_idx[-cleared:]] == 0)
+        assert np.all(out[set_idx[:-cleared]] == 1) if cleared < len(set_idx) else True
+
+
+def test_converges_to_all_flash():
+    b = sched.init_bitmap(CFG)
+    for _ in range(100):
+        b = sched.kv_aware_update(b, jnp.int32(CFG.c_th * 10), CFG)
+    assert int(jnp.sum(b)) == 0
+
+
+def test_split_projection_dispatch():
+    import jax
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (3, 32), jnp.float32)
+    w = jax.random.normal(key, (32, 64), jnp.bfloat16)
+    flash = jnp.full((3, 64), 7.0, jnp.float32)
+    h = 8
+    bitmap = jnp.asarray([1, 1, 1, 1, 0, 0, 0, 0], jnp.int32)
+    out = sched.split_projection(x, w, flash, bitmap)
+    npu = jnp.dot(x, w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out[:, :32]),
+                               np.asarray(npu[:, :32]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[:, 32:]), 7.0)
+
+
+def test_estimator_monotonic_in_kv():
+    c1 = sched.estimate_attention_cycles(128, 512, 8, 64)
+    c2 = sched.estimate_attention_cycles(4096, 512, 8, 64)
+    assert int(c2) > int(c1)

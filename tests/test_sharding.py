@@ -1,0 +1,121 @@
+"""Sharding rules, divisibility guard, specs coverage for every arch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.core.tiering import deploy
+from repro.launch import sharding as sh
+from repro.models import family_module
+
+
+def _mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:1] * n).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+MESH = _mesh()
+
+
+def test_guard_drops_non_divisible():
+    spec = sh.guard((3, 64), P("model", "data"), MESH, "t")
+    assert spec == P(None, "data")
+    spec = sh.guard((4, 63), P("model", "data"), MESH, "t")
+    assert spec == P("model", None)
+
+
+def test_guard_handles_tuples_and_missing_axes():
+    spec = sh.guard((8,), P(("pod", "data")), MESH, "t")
+    assert spec == P("data")                      # "pod" filtered out
+    spec = sh.guard((7,), P(("pod", "data")), MESH, "t")
+    assert spec == P(None)
+
+
+def test_param_rules():
+    cases = {
+        "embed": ((512, 64), P("model", None)),
+        "lm_head": ((64, 512), P(None, "model")),
+        "layers/attn/wq": ((2, 64, 128), P(None, None, "model")),
+        "layers/attn/wo": ((2, 128, 64), P(None, "model", None)),
+        "layers/ffn/w_gate": ((2, 64, 256), P(None, None, "model")),
+        "layers/ffn/w_down": ((2, 256, 64), P(None, "model", None)),
+        "layers/moe/experts/w_up": ((2, 8, 64, 32), P(None, "model", None, None)),
+        "layers/moe/router": ((2, 64, 8), P(None, None, None)),
+        "layers/ln1": ((2, 64), P(None, None)),
+    }
+    for path, (shape, want) in cases.items():
+        got = sh.spec_for_param(path, shape, MESH)
+        assert got == want, (path, got, want)
+
+
+def test_fsdp_adds_data_axis():
+    got = sh.spec_for_param("layers/ffn/w_gate", (2, 64, 256), MESH,
+                            fsdp=True, data_axes=("data",))
+    assert got == P(None, ("data",), "model")
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_all_params_get_specs(arch, key):
+    """Every leaf of every arch (bf16 AND tiered) gets a legal spec."""
+    cfg = get_config(arch, smoke=True)
+    mod = family_module(cfg.family)
+    params = jax.eval_shape(partial(mod.init, cfg), key)
+    specs = sh.param_specs(params, MESH, fsdp=True)
+    leaves = jax.tree.leaves(params)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        for i, ax in enumerate(spec):
+            if ax is not None:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                size = int(np.prod([MESH.shape[a] for a in axes]))
+                assert leaf.shape[i] % size == 0
+
+    tiered = jax.eval_shape(lambda p: deploy(p)[0], params)
+    tspecs = sh.param_specs(tiered, MESH)
+    assert len(jax.tree.leaves(tspecs,
+                               is_leaf=lambda x: isinstance(x, P))) == \
+        len(jax.tree.leaves(tiered))
+
+
+def test_flash_weight_children_inherit_rule():
+    """q/parity/scale of a FlashWeight follow the parent weight's rule."""
+    qspec = sh.spec_for_param("layers/ffn/w_down/0", (2, 256, 64), MESH)
+    pspec = sh.spec_for_param("layers/ffn/w_down/1", (2, 32, 64), MESH)
+    sspec = sh.spec_for_param("layers/ffn/w_down/2", (2, 1, 64), MESH)
+    assert qspec == P(None, "model", None)
+    assert pspec == P(None, "model", None)
+    assert sspec == P(None, None, None)      # guard drops on dim=1
+
+
+def test_batch_and_cache_specs():
+    assert sh.batch_spec((8, 64), MESH) == P(("data",), None)
+    assert sh.batch_spec((), MESH) == P()
+    assert sh.cache_spec("k", (4, 8, 64, 2, 16), MESH) == \
+        P(None, ("data",), "model", None, None)
+    assert sh.cache_spec("wkv", (4, 8, 2, 16, 16), MESH) == \
+        P(None, ("data",), None, None, None)
+
+
+def test_constrain_noop_outside_mesh():
+    x = jnp.ones((4, 4))
+    y = sh.constrain(x, "data", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_opt_state_specs_zero1():
+    from repro.optim.adamw import AdamW
+    params = {"layers": {"ffn": {"w_gate": jnp.zeros((4, 64, 256))}}}
+    pspecs = sh.param_specs(params, MESH)
+    opt_state = AdamW().init(params)
+    ospecs = sh.opt_state_specs(opt_state, pspecs, MESH, zero1=True)
+    m_spec = ospecs.m["layers"]["ffn"]["w_gate"]
+    assert "data" in str(m_spec)               # data axis added somewhere
+    assert ospecs.step == P()

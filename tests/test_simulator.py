@@ -1,0 +1,72 @@
+"""Simulator sanity + the paper's headline claims as assertions."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import LLAMA2_7B, OPT_13B, OPT_FAMILY
+from repro.simulator import baselines as bl
+from repro.simulator import hw
+from repro.simulator.system import NVLLMSystem, WorkloadPoint
+
+
+def test_table3_envelope():
+    assert abs(hw.NVLLM_8C.total_gops / 1e9 - 307.2) < 1
+    assert abs(hw.NVLLM_16C.total_gops / 1e9 - 486.4) < 1
+    assert abs(hw.NVLLM_8C.nand_bw / 1e9 - 102.4) < 1
+
+
+def test_area_overhead():
+    assert abs(hw.cmos_area_overhead() * 100 - 2.7) < 0.2
+
+
+def test_fig6a_bands():
+    nv = NVLLMSystem(hw.NVLLM_8C)
+    wp = WorkloadPoint(kv_len=64)
+    for cfg in OPT_FAMILY:
+        r = nv.decode_tps(cfg, wp) / bl.GPU_SSD.decode_tps(cfg)
+        assert 16.7 <= r <= 37.9, (cfg.name, r)
+        assert nv.decode_tps(cfg, wp) / bl.GPU_DRAM.decode_tps(cfg) >= 2.5
+
+
+def test_fig6b_anchors():
+    nv16 = NVLLMSystem(hw.NVLLM_16C)
+    t16 = nv16.decode_tps(LLAMA2_7B, WorkloadPoint(kv_len=64))
+    assert abs(t16 / bl.CAMBRICON.decode_tps(LLAMA2_7B) - 4.7) < 0.5
+    assert abs(t16 / bl.AIF.decode_tps(LLAMA2_7B) - 1.3) < 0.15
+    assert abs(bl.CAMBRICON.decode_tps(LLAMA2_7B) - 3.6) < 0.3
+    assert abs(bl.AIF.decode_tps(LLAMA2_7B) - 13.1) < 0.8
+
+
+def test_fig8b_energy():
+    nv = NVLLMSystem(hw.NVLLM_8C)
+    wp = WorkloadPoint(kv_len=64)
+    ratios = [bl.CAMBRICON.movement_energy_per_token(c)
+              / nv.movement_energy_per_token(c, wp) for c in OPT_FAMILY]
+    assert abs(float(np.mean(ratios)) - 5.63) < 0.6
+
+
+def test_scaling_monotonic():
+    wp = WorkloadPoint(kv_len=64)
+    for cfg in OPT_FAMILY:
+        tps = [NVLLMSystem(c).decode_tps(cfg, wp)
+               for c in (hw.NVLLM_8C, hw.NVLLM_12C, hw.NVLLM_16C)]
+        assert tps[0] <= tps[1] <= tps[2] + 1e-9
+
+
+def test_kv_aware_flat_throughput():
+    on = NVLLMSystem(hw.NVLLM_16C, kv_aware=True)
+    off = NVLLMSystem(hw.NVLLM_16C, kv_aware=False)
+    t_on = [on.decode_tps(OPT_13B, WorkloadPoint(kv_len=k))
+            for k in (64, 2048, 8192)]
+    t_off = [off.decode_tps(OPT_13B, WorkloadPoint(kv_len=k))
+             for k in (64, 2048, 8192)]
+    assert t_on[-1] / t_on[0] > t_off[-1] / t_off[0]
+    assert t_on[-1] >= t_off[-1]
+
+
+def test_prefill_compute_bound():
+    nv = NVLLMSystem(hw.NVLLM_16C)
+    t1 = nv.prefill_time(OPT_13B, 512)
+    t2 = nv.prefill_time(OPT_13B, 1024)
+    assert 1.8 < t2 / t1 < 2.2          # linear in tokens when compute-bound

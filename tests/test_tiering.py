@@ -1,0 +1,93 @@
+"""Tier policy (paper C1): placement, encode/decode, RBER robustness."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ecc
+from repro.core.erdpe import maybe_flash_matmul
+from repro.core.quant import dequantize_int8
+from repro.core.tiering import (FlashWeight, deploy, encode_flash,
+                                flash_bytes, tier_of)
+
+
+def test_tier_policy_paths():
+    flash = ["layers/ffn/w_gate", "layers/ffn/w_up", "layers/ffn/w_down",
+             "lm_head", "layers/moe/experts/w_up",
+             "blocks/r1/mix/w_in_x", "blocks/r2/mix/w_out",
+             "layers/tmix/w_r", "layers/channel_mix/w_up"]
+    dram = ["embed", "pos_embed", "layers/attn/wq", "layers/attn/wo",
+            "layers/ln1", "layers/moe/router", "layers/tmix/mu",
+            "layers/channel_mix/mu_k", "final_norm",
+            "dec/cross/wk", "layers/attn/q_norm"]
+    for p in flash:
+        assert tier_of(p) == "flash", p
+    for p in dram:
+        assert tier_of(p) == "dram", p
+
+
+def test_encode_flash_roundtrip():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64, 32), jnp.float32)
+    fw = encode_flash(w)
+    assert fw.q.shape == (64, 32)
+    assert fw.parity.shape == (8, 32)
+    assert fw.scale.shape == (1, 32)
+    deq = dequantize_int8(fw.q, fw.scale, jnp.float32)
+    assert float(jnp.max(jnp.abs(deq - w))) < float(jnp.max(fw.scale)) * 0.51
+
+
+def test_encode_flash_stacked_layers():
+    key = jax.random.PRNGKey(1)
+    w = jax.random.normal(key, (3, 64, 16), jnp.float32)   # (L, K, N)
+    fw = encode_flash(w)
+    assert fw.q.shape == (3, 64, 16)
+    assert fw.parity.shape == (3, 8, 16)
+    assert fw.scale.shape == (3, 1, 16)
+    # each layer's parity is independently valid
+    for li in range(3):
+        raw = ecc.weights_to_bytes(fw.q[li])
+        _, dirty, _ = ecc.check_and_correct(raw, fw.parity[li])
+        assert int(dirty.sum()) == 0
+
+
+def test_deploy_and_forward_with_rber():
+    from repro.configs import get_config
+    from repro.models import dense
+    cfg = get_config("granite-8b", smoke=True)
+    params = dense.init(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    clean = dense.forward(cfg, params, tokens)
+
+    tiered, tier_map = deploy(params, rber=0.0)
+    quant_out = dense.forward(cfg, tiered, tokens)
+    # INT8 deployment: close to bf16 in logit space
+    base = np.abs(np.asarray(clean)).mean()
+    err0 = np.abs(np.asarray(quant_out) - np.asarray(clean)).mean()
+    assert err0 < 0.25 * base
+
+    # with errors + ECC: same result as rber=0 (all single-bit repaired at 1e-5)
+    tiered_rber, _ = deploy(params, rber=1e-5, seed=9)
+    out_rber = dense.forward(cfg, tiered_rber, tokens)
+    err_vs_clean_enc = np.abs(np.asarray(out_rber)
+                              - np.asarray(quant_out)).mean()
+    assert err_vs_clean_enc < 0.02 * base
+
+    assert tier_map["layers/ffn/w_gate"] == "flash"
+    assert tier_map["layers/attn/wq"] == "dram"
+    fb, db = flash_bytes(tiered)
+    assert fb > 0 and db > 0
+
+
+def test_maybe_flash_dispatch():
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(key, (32, 16), jnp.float32)
+    x = jax.random.normal(key, (4, 32), jnp.bfloat16)
+    plain = maybe_flash_matmul(x, w.astype(jnp.bfloat16))
+    flash = maybe_flash_matmul(x, encode_flash(w))
+    assert plain.shape == flash.shape == (4, 16)
+    np.testing.assert_allclose(np.asarray(plain, np.float32),
+                               np.asarray(flash, np.float32),
+                               rtol=0.1, atol=0.3)
