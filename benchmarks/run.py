@@ -45,10 +45,10 @@ def _kernel_bench() -> str:
 
 def main() -> None:
     from benchmarks import (fig6_throughput, fig7_latency, fig8_energy,
-                            table2_area, table3_scaling)
+                            serve_decode, table2_area, table3_scaling)
     reports = []
     for mod in (fig6_throughput, fig7_latency, fig8_energy, table2_area,
-                table3_scaling):
+                table3_scaling, serve_decode):
         rep = mod.run()
         reports.append(rep)
         print(rep.render())

@@ -51,6 +51,37 @@ def kv_aware_update(
     return jnp.where(clear, 0, bitmap)
 
 
+def kv_aware_step(
+    bitmap: jnp.ndarray,
+    prev_cycles: jnp.ndarray,
+    kv_len: jnp.ndarray,
+    d_model: int,
+    n_kv_heads: int,
+    head_dim: int,
+    cfg: SchedulerConfig,
+    kv_aware: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One full in-graph Algorithm 2 step at decode length ``kv_len``.
+
+    Estimates this step's NPU attention cycles, takes dC against the cycles
+    at the LAST rebalance (a purely per-token increment would never cross
+    C_th in steady decode), updates the bitmap, and resets the baseline only
+    when the bitmap actually moved — gradual, monotone offload. Pure and
+    jit-safe: the serving engine folds this into its compiled decode step.
+
+    Returns (new_bitmap, new_prev_cycles, delta_cycles).
+    """
+    cycles = estimate_attention_cycles(kv_len, d_model, n_kv_heads, head_dim)
+    delta = jnp.maximum(cycles - jnp.asarray(prev_cycles, jnp.int32), 0)
+    if not kv_aware:
+        return bitmap, cycles, delta
+    new_bitmap = kv_aware_update(bitmap, delta, cfg)
+    rebalanced = jnp.sum(new_bitmap) != jnp.sum(bitmap)
+    new_prev = jnp.where(rebalanced, cycles,
+                         jnp.asarray(prev_cycles, jnp.int32))
+    return new_bitmap, new_prev, delta
+
+
 def estimate_attention_cycles(
     kv_len: jnp.ndarray | int,
     d_model: int,

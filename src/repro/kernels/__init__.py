@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel layer for the paper's two serving hot-spots:
+#   ecdp.py        — paged, error-resilient INT8 matmul (ERDPE, §3.2-3.3)
+#   decode_attn.py — slot-paged decode attention over the KV pool (§3.5)
+# ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.

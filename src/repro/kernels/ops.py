@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ecc
+from repro.kernels.decode_attn import decode_attn_pallas
 from repro.kernels.ecdp import ecdp_matmul_pallas
 
 
@@ -68,6 +69,38 @@ def ecdp_matmul(
         ecc_enabled=ecc_enabled, interpret=interp,
     )
     return out * scales.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention_state(
+    q: jnp.ndarray,          # (B, H, Dh) — one query token per slot, UNscaled
+    k_pool: jnp.ndarray,     # (B, S_max, KV, Dh)
+    v_pool: jnp.ndarray,
+    lengths: jnp.ndarray,    # (B,) int32 — live prefix per slot
+    *,
+    block_s: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Slot-paged decode attention (Pallas), returning online-softmax state.
+
+    Returns (acc, m, l) f32 with acc (B, KV, rep, Dh) UNNORMALIZED and
+    m/l (B, KV, rep): callers either normalize (``acc / l``) or merge the
+    current token's self-term before normalizing (the engine's incremental
+    form). Scaling and the GQA (KV, rep) grouping are applied here so the
+    kernel sees the same dtype discipline as the XLA fallback.
+    """
+    b, h, dh = q.shape
+    _, s_max, n_kv, _ = k_pool.shape
+    n_rep = h // n_kv
+    cdt = k_pool.dtype
+    qg = ((q.astype(jnp.float32) * dh ** -0.5)
+          .reshape(b, n_kv, n_rep, dh).astype(cdt))
+    bs = _pick_block(s_max, block_s, 1)
+    interp = _on_cpu() if interpret is None else interpret
+    return decode_attn_pallas(
+        qg, k_pool, v_pool, lengths.astype(jnp.int32),
+        block_s=bs, interpret=interp,
+    )
 
 
 def ecdp_matmul_xla(

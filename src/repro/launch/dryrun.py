@@ -139,6 +139,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
             ma = compiled.memory_analysis()
             xla_cost = compiled.cost_analysis() or {}
+            if isinstance(xla_cost, (list, tuple)):
+                # jax <= 0.4.x returns a one-element list of dicts
+                xla_cost = xla_cost[0] if xla_cost else {}
             text = compiled.as_text()
         cost = hlo_cost.analyze(text)       # trip-count-aware (launch/hlo_cost)
         n_chips = mesh.devices.size

@@ -37,6 +37,23 @@ log = logging.getLogger("repro.sharding")
 MODEL = "model"
 
 
+def get_abstract_mesh():
+    """Guarded ``jax.sharding.get_abstract_mesh``.
+
+    The accessor only exists in jax >= 0.5; on the pinned 0.4.x it is absent
+    and the only mesh context is the thread-local physical mesh. Returns the
+    abstract mesh, or ``None`` when the API (or any mesh context) is
+    unavailable — callers treat ``None`` like an empty mesh.
+    """
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    try:
+        return fn()
+    except Exception:                                    # pragma: no cover
+        return None
+
+
 # --- divisibility guard -----------------------------------------------------
 
 
@@ -67,8 +84,13 @@ def guard(shape, spec: P, mesh, path: str = "?") -> P:
         if tuple(axes) != (axis if isinstance(axis, tuple) else (axis,)):
             log.debug("guard: %s dim %d (%d) %s -> %s",
                       path, i, shape[i], spec[i], axes)
+        orig = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
         if not axes:
             out.append(None)
+        elif tuple(axes) == orig:
+            # untouched: keep the rule's form — P(("data",)) and P("data")
+            # shard identically but don't compare equal
+            out.append(axis)
         elif len(axes) == 1:
             out.append(axes[0])
         else:
@@ -229,8 +251,8 @@ def data_group_count(n_tokens: int) -> int:
         from jax._src import mesh as mesh_lib
         env_mesh = mesh_lib.thread_resources.env.physical_mesh
         if env_mesh.empty:
-            env_mesh = jax.sharding.get_abstract_mesh()
-        if env_mesh.empty:
+            env_mesh = get_abstract_mesh()
+        if env_mesh is None or env_mesh.empty:
             return 1
         g = 1
         for a in ("pod", "data"):
@@ -285,8 +307,8 @@ def constrain(x, *spec):
     except Exception:                                    # pragma: no cover
         return x
     if env_mesh.empty:
-        abstract = jax.sharding.get_abstract_mesh()
-        if abstract.empty:
+        abstract = get_abstract_mesh()
+        if abstract is None or abstract.empty:
             return x
         env_mesh = abstract
     p = guard(x.shape, P(*spec), env_mesh, "constraint")

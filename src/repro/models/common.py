@@ -49,8 +49,8 @@ def pin_layer_grads(lp):
         from jax._src import mesh as mesh_lib
         env_mesh = mesh_lib.thread_resources.env.physical_mesh
         if env_mesh.empty:
-            env_mesh = jax.sharding.get_abstract_mesh()
-        if env_mesh.empty:
+            env_mesh = sh.get_abstract_mesh()
+        if env_mesh is None or env_mesh.empty:
             return lp
     except Exception:                                    # pragma: no cover
         return lp
@@ -62,6 +62,20 @@ def pin_layer_grads(lp):
         return sh.pin_grad(w, tuple(spec))
 
     return jtu.tree_map_with_path(one, lp)
+
+
+@jax.custom_jvp
+def _barrier(x):
+    """optimization_barrier with a differentiation rule: the pinned jax
+    0.4.37 defines none for the primitive, which would fail every training
+    backward. The barrier is an identity, so the tangent passes through
+    (the cotangent stash the primal barrier protects is unaffected)."""
+    return jax.lax.optimization_barrier(x)
+
+
+@_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    return _barrier(primals[0]), tangents[0]
 
 
 def pin_batch(x):
@@ -77,7 +91,7 @@ def pin_batch(x):
     # The barrier stops XLA from sinking the rms_norm f32 upcast into the
     # layer-scan stash, which would store the carry TWICE (bf16 + f32):
     # measured -33.8 GB/chip on llama3-405b train_4k (EXPERIMENTS.md §Perf).
-    x = jax.lax.optimization_barrier(x)
+    x = _barrier(x)
     if SEQ_SHARD_RESIDUAL and x.ndim >= 3 and x.shape[1] > 1:
         return constrain(x, ("pod", "data"), "model",
                          *([None] * (x.ndim - 2)))
@@ -216,19 +230,39 @@ def chunked_attention(
     return out.transpose(0, 2, 1, 3).astype(q.dtype)               # (B,Sq,H,Dh)
 
 
+def _merge_self_term(acc, m, l, s_self, v_self):
+    """Merge the current token's self-term into unnormalized online-softmax
+    state and normalize: acc (B, KV, R, Dh) f32, m/l (B, KV, R) (m may be
+    -inf for empty caches), s_self (B, KV, R) scores, v_self (B, KV, Dh)
+    f32. Shared by the XLA and Pallas decode paths so the merge algebra
+    can't desynchronize between exec modes."""
+    m2 = jnp.maximum(m, s_self)
+    alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m2), 0.0)
+    p_self = jnp.exp(s_self - m2)
+    acc = acc * alpha[..., None] + p_self[..., None] * v_self[:, :, None, :]
+    l = l * alpha + p_self
+    return acc / jnp.maximum(l[..., None], 1e-20)
+
+
 def decode_attention_incremental(
     q: jnp.ndarray,            # (B, 1, H, Dh)
     k_cache: jnp.ndarray,      # (B, S, KV, Dh) — READ-ONLY (token t absent)
     v_cache: jnp.ndarray,
-    kv_len,                    # scalar — valid prefix length
+    kv_len,                    # scalar or (B,) — valid prefix length
     k_new: jnp.ndarray,        # (B, 1, KV, Dh) — this token's K/V
     v_new: jnp.ndarray,
     window: int | None = None,
+    mode: ExecMode = ExecMode.XLA,
 ) -> jnp.ndarray:
     """Decode attention over cache[0:kv_len] + the new token, WITHOUT
     writing the cache: the self-token term is combined analytically
     (online-softmax merge). Keeping the cache read-only inside the layer
-    scan avoids per-layer full-cache rewrites (EXPERIMENTS.md §Perf)."""
+    scan avoids per-layer full-cache rewrites (EXPERIMENTS.md §Perf).
+
+    ``mode=ExecMode.PALLAS`` routes the cache half to the slot-paged Pallas
+    kernel (kernels/decode_attn.py; global attention only) and merges the
+    self-term into the kernel's returned online-softmax state.
+    """
     b, s, n_kv, dh = k_cache.shape
     h = q.shape[2]
     n_rep = h // n_kv
@@ -239,27 +273,30 @@ def decode_attention_incremental(
     cdt = k_cache.dtype
     qf = ((q.astype(jnp.float32)[:, 0] * scale)
           .reshape(b, n_kv, n_rep, dh).astype(cdt))
-    scores = jnp.einsum("bkrd,bskd->bkrs", qf, k_cache,
-                        preferred_element_type=jnp.float32)
-    pos = jnp.arange(s)
-    valid = pos[None, :] < jnp.reshape(jnp.asarray(kv_len), (-1, 1))
-    if window is not None:
-        valid = valid & (pos[None, :]
-                         >= jnp.reshape(jnp.asarray(kv_len), (-1, 1)) - window + 1)
-    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
     s_self = jnp.einsum("bkrd,bkd->bkr", qf, k_new[:, 0].astype(cdt),
                         preferred_element_type=jnp.float32)     # (B,KV,R)
-    m_old = jnp.max(scores, axis=-1)
-    m = jnp.maximum(jnp.where(jnp.isfinite(m_old), m_old, -jnp.inf), s_self)
-    p_old = jnp.exp(jnp.where(jnp.isfinite(scores), scores - m[..., None],
-                              -jnp.inf))
-    p_old = jnp.where(valid[:, None, None, :], p_old, 0.0)
-    p_self = jnp.exp(s_self - m)
-    acc = (jnp.einsum("bkrs,bskd->bkrd", p_old.astype(cdt), v_cache,
-                      preferred_element_type=jnp.float32)
-           + p_self[..., None] * v_new.astype(jnp.float32)[:, 0, :, None, :])
-    l = jnp.sum(p_old, axis=-1) + p_self
-    out = acc / jnp.maximum(l[..., None], 1e-20)
+    if mode == ExecMode.PALLAS and window is None:
+        from repro.kernels import ops
+        lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+        acc, m, l = ops.decode_attention_state(q[:, 0], k_cache, v_cache, lens)
+    else:
+        scores = jnp.einsum("bkrd,bskd->bkrs", qf, k_cache,
+                            preferred_element_type=jnp.float32)
+        pos = jnp.arange(s)
+        valid = pos[None, :] < jnp.reshape(jnp.asarray(kv_len), (-1, 1))
+        if window is not None:
+            valid = valid & (pos[None, :]
+                             >= jnp.reshape(jnp.asarray(kv_len), (-1, 1)) - window + 1)
+        scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+        m = jnp.max(scores, axis=-1)                  # -inf for empty caches
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p_old = jnp.exp(scores - m_safe[..., None])
+        p_old = jnp.where(valid[:, None, None, :], p_old, 0.0)
+        acc = jnp.einsum("bkrs,bskd->bkrd", p_old.astype(cdt), v_cache,
+                         preferred_element_type=jnp.float32)
+        l = jnp.sum(p_old, axis=-1)
+    out = _merge_self_term(acc, m, l, s_self,
+                           v_new.astype(jnp.float32)[:, 0])
     return out.reshape(b, 1, h, dh).astype(q.dtype)
 
 
@@ -269,13 +306,26 @@ def decode_attention(
     v_cache: jnp.ndarray,
     kv_len: jnp.ndarray,       # (B,) or scalar — valid prefix length
     window: int | None = None,
+    mode: ExecMode = ExecMode.XLA,
 ) -> jnp.ndarray:
-    """Single-token decode attention over a (padded) KV cache."""
+    """Single-token decode attention over a (padded) KV cache.
+
+    ``mode`` mirrors the erdpe.flash_matmul split: PALLAS runs the
+    slot-paged online-softmax kernel (kernels/decode_attn.py; global
+    attention only — windowed callers fall back to XLA), XLA the plain
+    masked-softmax math below.
+    """
     b, s, n_kv, dh = k_cache.shape
     h = q.shape[2]
     n_rep = h // n_kv
     scale = dh ** -0.5
     cdt = k_cache.dtype
+    if mode == ExecMode.PALLAS and window is None:
+        from repro.kernels import ops
+        lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+        acc, _, l = ops.decode_attention_state(q[:, 0], k_cache, v_cache, lens)
+        out = acc / jnp.maximum(l[..., None], 1e-20)
+        return out.reshape(b, 1, h, dh).astype(q.dtype)
     qf = ((q.astype(jnp.float32)[:, 0] * scale)
           .reshape(b, n_kv, n_rep, dh).astype(cdt))
     scores = jnp.einsum("bkrd,bskd->bkrs", qf, k_cache,

@@ -8,29 +8,42 @@ Execution model (dense decoder families — the paper's OPT/LLaMA models):
              static capability ratio; attention + KV write on the NPU side;
              FFN fully in flash (§3.5).
   decode   : attention on the NPU over the DRAM KV pool; FFN via ERDPE.
-             After each step, Algorithm 2 compares the attention-latency
-             increment against C_th and flips bitmap bits, moving Q/K/V/O
-             column-groups to the flash engine — the engine's projection
-             matmuls are *dispatched by the bitmap* via
-             scheduler.split_projection, exactly the paper's mechanism.
+             Algorithm 2 compares the attention-latency increment against
+             C_th and flips bitmap bits, moving Q/K/V/O column-groups to the
+             flash engine — the projection matmuls are *dispatched by the
+             bitmap* via scheduler.split_projection.
 
-The engine executes layer-by-layer in Python (edge-scale models; the paper
-is single-batch) with continuous batching across request slots. It is the
-substrate for examples/edge_serve.py, the Alg. 2 ablation (fig8a) and the
-engine tests.
+The engine is split control-plane / data-plane (DESIGN.md §6):
+
+  * data plane — ``_decode_step_impl``: ONE jax.jit-compiled, static-shape
+    function per engine that advances ALL slots one token: embeds, runs a
+    lax.scan over the stacked layer weights (DRAM attn tier + flash attn
+    copies + flash FFN), appends every active slot's K/V row to the
+    device-resident pool with a single batched scatter, bumps per-slot
+    lengths, samples, and folds the Algorithm 2 bitmap update into the same
+    graph. Zero mid-step host syncs; KV buffers are donated. Per-slot
+    decode positions come from the device lengths array, so heterogeneous-
+    length continuous batches RoPE/position-embed correctly.
+  * control plane — the Python ``Engine``: admission, prefill, completion,
+    slot recycling, stats. It feeds the step plain (n_slots,) token/mask
+    arrays, so slot churn never retraces the compiled step.
+
+``compiled=False`` keeps the seed-style eager reference: the *same* per-
+layer math driven by an interpreted Python loop over layers (the benchmark
+baseline and correctness oracle for benchmarks/serve_decode.py).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import scheduler as sched
-from repro.core.erdpe import flash_matmul
-from repro.core.tiering import FlashWeight, deploy
+from repro.core.erdpe import ExecMode, flash_matmul
+from repro.core.tiering import deploy, encode_flash
 from repro.models import common as cm
 from repro.models import dense
 from repro.serving.kvcache import KVCachePool
@@ -55,17 +68,135 @@ def _proj(x, w_dram, w_flash, bitmap):
     return sched.split_projection(x, w_dram, flash_out, bitmap).astype(jnp.bfloat16)
 
 
+def _qkv(cfg, lp, fl, x, positions, bitmap):
+    """Shared QKV block (norm -> bitmap-dispatched projections -> qk-norm ->
+    rope) for both the prefill loop and the compiled decode layer. Only wq
+    is bitmap-dispatched (Alg. 2 rebalances the query path; K/V stay on the
+    NPU as in the seed engine); ``fl=None`` means no flash copies (prefill).
+    """
+    ap = lp["attn"]
+    b, s, _ = x.shape
+    h = dense._norm(cfg, x, lp, "ln1")
+    q = _proj(h, ap["wq"], None if fl is None else fl["wq"], bitmap).reshape(
+        b, s, cfg.n_heads, cfg.head_dim)
+    k = _proj(h, ap["wk"], None, None).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = _proj(h, ap["wv"], None, None).reshape(
+        b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = cm.rms_norm(q, ap["q_norm"])
+        k = cm.rms_norm(k, ap["k_norm"])
+    if cfg.use_rope:
+        q = cm.apply_rope(q, positions, cfg.rope_base)
+        k = cm.apply_rope(k, positions, cfg.rope_base)
+    return q, k, v
+
+
+def _decode_layer(cfg, exec_mode, bitmap, lengths, positions, x, layer):
+    """One decode layer over all slots. ``layer`` = (params slice, flash
+    attn copy slice, read-only K/V pool slices). The pool is never written
+    here — the current token's self-term is merged analytically
+    (decode_attention_incremental), so the scan stays write-free and the
+    step does ONE batched pool write after the scan."""
+    lp, fl, kc, vc = layer
+    ap = lp["attn"]
+    b, s, _ = x.shape                                    # s == 1
+    q, k, v = _qkv(cfg, lp, fl, x, positions, bitmap)
+    attn = cm.decode_attention_incremental(
+        q, kc, vc, lengths, k, v, window=cfg.local_window, mode=exec_mode)
+    out = _proj(attn.reshape(b, s, -1), ap["wo"], fl["wo"], bitmap)
+    x = x + out
+    x = x + dense._ffn_apply(cfg, lp["ffn"], dense._norm(cfg, x, lp, "ln2"))
+    return x, (k[:, 0], v[:, 0])
+
+
+def _decode_step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode,
+                      unroll, params, attn_flash, state, tokens, active, key):
+    """One decode step for ALL pool slots — the engine's data plane.
+
+    state  : {"k","v": (L, slots, S_max, KV, Dh), "lengths": (slots,) i32,
+              "bitmap": (H,) i32, "prev_cycles": i32} — donated when jitted.
+    tokens : (slots,) i32 last token per slot (don't-care when inactive).
+    active : (slots,) bool admission mask.
+
+    Returns (sampled (slots,) i32, new state, stats scalars). Everything —
+    layer scan, KV append, length bump, Algorithm 2, sampling — is one
+    graph; inactive slots compute garbage that is masked out of every state
+    write, so slot churn never changes shapes or retraces.
+    """
+    n_slots = tokens.shape[0]
+    lengths = state["lengths"]
+    bitmap = state["bitmap"] if kv_aware else None
+    positions = lengths[:, None]          # per-slot decode position (B, 1)
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    if "pos_embed" in params:
+        x = x + jnp.take(params["pos_embed"], positions, axis=0)
+
+    body = functools.partial(
+        _decode_layer, cfg, exec_mode, bitmap, lengths, positions)
+    xs = (params["layers"], attn_flash, state["k"], state["v"])
+    if unroll:
+        # eager reference: interpreted Python loop over layers (seed-style)
+        ks, vs = [], []
+        for li in range(cfg.n_layers):
+            x, (kl, vl) = body(x, jax.tree.map(lambda a: a[li], xs))
+            ks.append(kl)
+            vs.append(vl)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)      # (L, slots, KV, Dh)
+    else:
+        x, (k_new, v_new) = jax.lax.scan(body, x, xs)
+
+    if cfg.norm_type == "rms":
+        x = cm.rms_norm(x, params["final_norm"])
+    else:
+        x = cm.layer_norm(x, params["final_norm"]["g"],
+                          params["final_norm"]["b"])
+    logits = flash_matmul(x[:, 0], params["lm_head"], out_dtype=jnp.float32)
+    toks = sample(logits, key, sample_cfg)
+
+    # --- KV pool append: ONE batched scatter for all layers and slots ------
+    ar = jnp.arange(n_slots)
+    sel = active[None, :, None, None]
+    kd, vd = state["k"], state["v"]
+    kd = kd.at[:, ar, lengths].set(
+        jnp.where(sel, k_new.astype(kd.dtype), kd[:, ar, lengths]))
+    vd = vd.at[:, ar, lengths].set(
+        jnp.where(sel, v_new.astype(vd.dtype), vd[:, ar, lengths]))
+    new_lengths = lengths + active.astype(jnp.int32)
+
+    # --- Algorithm 2: KV-cache-aware rebalance, in-graph -------------------
+    kv_len = jnp.max(jnp.where(active, new_lengths, 0))
+    new_bitmap, new_prev, delta = sched.kv_aware_step(
+        state["bitmap"], state["prev_cycles"], kv_len,
+        cfg.d_model, cfg.n_kv_heads, cfg.head_dim, sched_cfg, kv_aware)
+
+    new_state = {"k": kd, "v": vd, "lengths": new_lengths,
+                 "bitmap": new_bitmap, "prev_cycles": new_prev}
+    stats = {"kv_len": kv_len, "delta_cycles": delta,
+             "npu_fraction": sched.npu_fraction(new_bitmap)}
+    return toks, new_state, stats
+
+
 class Engine:
-    """cfg must be a dense-family ArchConfig (the paper's model families)."""
+    """cfg must be a dense-family ArchConfig (the paper's model families).
+
+    ``compiled=True`` (default) serves decode through the single jitted step
+    function; ``compiled=False`` runs the identical math as an interpreted
+    per-layer loop (seed-style eager reference). ``exec_mode`` picks the
+    decode-attention backend (PALLAS kernel vs XLA), mirroring
+    erdpe.flash_matmul's split.
+    """
 
     def __init__(self, cfg, params, max_slots: int = 4, max_seq: int = 256,
                  sample_cfg: SampleConfig = SampleConfig(),
                  sched_cfg: sched.SchedulerConfig | None = None,
-                 kv_aware: bool = True, rber: float = 0.0, seed: int = 0):
+                 kv_aware: bool = True, rber: float = 0.0, seed: int = 0,
+                 compiled: bool = True, exec_mode: ExecMode = ExecMode.XLA):
         assert cfg.family == "dense"
         self.cfg = cfg
         self.sample_cfg = sample_cfg
         self.kv_aware = kv_aware
+        self.compiled = compiled
         # DRAM tier: bf16 attention weights (copied once at init, §3.5);
         # flash tier: INT8+ECC FFN / lm_head AND a flash copy of Q/K/V/O so
         # the bitmap can offload projection columns to the in-flash engine.
@@ -82,25 +213,49 @@ class Engine:
         self.requests: dict[int, Request] = {}
         self._next_rid = 0
         self._key = jax.random.PRNGKey(seed)
-        self._prev_cycles = 0
+        self._prev_cycles = jnp.int32(0)
         self.stats: list[dict] = []
+        step = functools.partial(
+            _decode_step_impl, cfg, self.sched_cfg, sample_cfg, kv_aware,
+            exec_mode, not compiled)
+        self._trace_count = 0
+        if compiled:
+            def counted(params, attn_flash, state, tokens, active, key):
+                # Python body only runs while jax traces; compiled replays
+                # skip it — so this counts traces, not steps.
+                self._trace_count += 1
+                return step(params, attn_flash, state, tokens, active, key)
+
+            # donate the KV pool + scheduler state: decode is an in-place
+            # update of device-resident serving state. (CPU ignores donation
+            # and warns, so only donate where it lands.)
+            donate = (2,) if jax.default_backend() != "cpu" else ()
+            self._step_fn = jax.jit(counted, donate_argnums=donate)
+        else:
+            self._step_fn = step
 
     def _flash_attn_copy(self, params, rber, seed):
-        def conv(path_leaf):
-            return path_leaf
-        out = []
-        from repro.core.tiering import encode_flash
+        """Per-layer flash (INT8+ECC) copies of Q/K/V/O, stacked along a
+        leading layer axis so the compiled step can lax.scan over them."""
         layers = params["layers"]["attn"]
         n_l = layers["wq"].shape[0]
-        for li in range(n_l):
-            out.append({k: encode_flash(layers[k][li], rber=rber,
-                                        seed=seed + li)
-                        for k in ("wq", "wk", "wv", "wo")})
-        return out
+        per_layer = [
+            {k: encode_flash(layers[k][li], rber=rber, seed=seed + li)
+             for k in ("wq", "wk", "wv", "wo")}
+            for li in range(n_l)
+        ]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
 
     # --- request management --------------------------------------------------
 
     def submit(self, prompt: list[int], max_new: int = 16) -> int:
+        # a request peaks at len(prompt) + max_new - 1 KV rows (the last
+        # sampled token is never written back); past max_seq the in-graph
+        # scatter would silently drop writes, so reject at admission.
+        need = len(prompt) + max_new - 1
+        if need > self.pool.max_seq:
+            raise ValueError(
+                f"request needs {need} KV rows > max_seq={self.pool.max_seq}")
         rid = self._next_rid
         self._next_rid += 1
         self.requests[rid] = Request(rid, list(prompt), max_new)
@@ -110,7 +265,7 @@ class Engine:
         self._prefill(slot, self.requests[rid])
         return rid
 
-    # --- model execution -------------------------------------------------------
+    # --- prefill (control plane; per-request, variable length) ---------------
 
     def _embed(self, tokens, positions):
         p = self.params
@@ -123,52 +278,21 @@ class Engine:
         # FlashWeight is a pytree node: indexing maps over (q, parity, scale).
         return jax.tree.map(lambda a: a[li], self.params["layers"])
 
-    def _attention_block(self, li, x, slot_ids, positions, decode: bool):
-        """x: (B, S, D). Returns attention output (B, S, D)."""
-        cfg = self.cfg
-        lp = self._layer_params(li)
-        ap = lp["attn"]
-        fl = self.attn_flash[li]
-        bitmap = self.bitmap if (decode and self.kv_aware) else None
-        b, s, _ = x.shape
-        h = dense._norm(cfg, x, lp, "ln1")
-        q = _proj(h, ap["wq"], fl["wq"], bitmap).reshape(
-            b, s, cfg.n_heads, cfg.head_dim)
-        k = _proj(h, ap["wk"], fl["wk"], None).reshape(
-            b, s, cfg.n_kv_heads, cfg.head_dim)
-        v = _proj(h, ap["wv"], fl["wv"], None).reshape(
-            b, s, cfg.n_kv_heads, cfg.head_dim)
-        if cfg.qk_norm:
-            q = cm.rms_norm(q, ap["q_norm"])
-            k = cm.rms_norm(k, ap["k_norm"])
-        if cfg.use_rope:
-            q = cm.apply_rope(q, positions, cfg.rope_base)
-            k = cm.apply_rope(k, positions, cfg.rope_base)
-        if decode:
-            for bi, slot in enumerate(slot_ids):
-                pos = int(self.pool.lengths[slot])
-                self.pool.write_token(slot, li, k[bi, 0], v[bi, 0], pos)
-            kc = self.pool.k[li, jnp.asarray(slot_ids)]
-            vc = self.pool.v[li, jnp.asarray(slot_ids)]
-            lens = jnp.asarray(
-                [self.pool.lengths[s] + 1 for s in slot_ids], jnp.int32)
-            attn = cm.decode_attention(q, kc, vc, lens)
-        else:
-            attn = cm.chunked_attention(q, k, v, causal=True)
-        out = _proj(attn.reshape(b, s, -1), ap["wo"], fl["wo"], bitmap)
-        return out, (k, v), lp
-
-    def _forward(self, tokens, slot_ids, positions, decode: bool):
+    def _prefill_forward(self, tokens, positions):
+        """Full-sequence prefill forward (B=1); returns (logits, kv list)."""
         cfg = self.cfg
         x = self._embed(tokens, positions)
         kv_all = []
         for li in range(cfg.n_layers):
-            attn, kv, lp = self._attention_block(
-                li, x, slot_ids, positions, decode)
-            x = x + attn
+            lp = self._layer_params(li)
+            b, s, _ = x.shape
+            q, k, v = _qkv(cfg, lp, None, x, positions, None)
+            attn = cm.chunked_attention(q, k, v, causal=True,
+                                        window=cfg.local_window)
+            x = x + _proj(attn.reshape(b, s, -1), lp["attn"]["wo"], None, None)
             x = x + dense._ffn_apply(cfg, lp["ffn"],
                                      dense._norm(cfg, x, lp, "ln2"))
-            kv_all.append(kv)
+            kv_all.append((k, v))
         if cfg.norm_type == "rms":
             x = cm.rms_norm(x, self.params["final_norm"])
         else:
@@ -180,13 +304,15 @@ class Engine:
     def _prefill(self, slot, req: Request):
         toks = jnp.asarray([req.prompt], jnp.int32)
         positions = jnp.arange(len(req.prompt))
-        logits, kv_all = self._forward(toks, [slot], positions, decode=False)
+        logits, kv_all = self._prefill_forward(toks, positions)
         k_stack = jnp.stack([kv[0][0] for kv in kv_all])   # (L, S, KV, Dh)
         v_stack = jnp.stack([kv[1][0] for kv in kv_all])
         self.pool.write_prefill(slot, k_stack, v_stack)
         self._key, sk = jax.random.split(self._key)
         tok = int(sample(logits[:, -1], sk, self.sample_cfg)[0])
         req.out.append(tok)
+
+    # --- decode (data plane: one compiled call per step) ----------------------
 
     def step(self) -> int:
         """One continuous-batching decode step over all active slots.
@@ -195,41 +321,42 @@ class Engine:
                   if not self.requests[r].done]
         if not active:
             return 0
-        slot_ids = [s for s, _ in active]
-        last = [r.out[-1] if r.out else r.prompt[-1] for _, r in active]
-        positions = jnp.asarray([int(self.pool.lengths[s]) for s in slot_ids])
-        tokens = jnp.asarray(last, jnp.int32)[:, None]
-        logits, _ = self._forward(tokens, slot_ids,
-                                  positions[:1], decode=True)
+        n = self.pool.n_slots
+        tokens = np.zeros((n,), np.int32)
+        mask = np.zeros((n,), bool)
+        for slot, req in active:
+            tokens[slot] = req.out[-1] if req.out else req.prompt[-1]
+            mask[slot] = True
         self._key, sk = jax.random.split(self._key)
-        toks = sample(logits[:, 0], sk, self.sample_cfg)
-        for (slot, req), t in zip(active, np.asarray(toks)):
+        state = dict(self.pool.device_state(),
+                     bitmap=self.bitmap, prev_cycles=self._prev_cycles)
+        toks, state, stats = self._step_fn(
+            self.params, self.attn_flash, state,
+            jnp.asarray(tokens), jnp.asarray(mask), sk)
+        self.pool.set_device_state(state)
+        self.bitmap = state["bitmap"]
+        self._prev_cycles = state["prev_cycles"]
+        # the step's only device->host syncs: sampled tokens + stat scalars
+        toks_host = np.asarray(toks)
+        for slot, req in active:
             self.pool.bump(slot)
-            req.out.append(int(t))
+            req.out.append(int(toks_host[slot]))
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.pool.release(slot)
-        # --- Algorithm 2: KV-cache-aware rebalance ---------------------------
-        # dC is the attention-cycle growth since the LAST rebalance (a purely
-        # per-token increment would never cross C_th in steady decode); after
-        # the bitmap moves, the baseline resets — gradual, monotone offload.
-        kv_len = self.pool.max_active_len
-        cycles = int(sched.estimate_attention_cycles(
-            kv_len, self.cfg.d_model, self.cfg.n_kv_heads, self.cfg.head_dim))
-        delta = max(cycles - self._prev_cycles, 0)
-        if self.kv_aware:
-            new_bitmap = sched.kv_aware_update(
-                self.bitmap, jnp.int32(delta), self.sched_cfg)
-            if int(jnp.sum(new_bitmap)) != int(jnp.sum(self.bitmap)):
-                self._prev_cycles = cycles          # rebalanced: reset base
-            self.bitmap = new_bitmap
-        else:
-            self._prev_cycles = cycles
+        st = jax.device_get(stats)
         self.stats.append({
-            "kv_len": kv_len, "delta_cycles": delta,
-            "npu_fraction": float(sched.npu_fraction(self.bitmap)),
+            "kv_len": int(st["kv_len"]),
+            "delta_cycles": int(st["delta_cycles"]),
+            "npu_fraction": float(st["npu_fraction"]),
         })
         return len(active)
+
+    @property
+    def step_traces(self) -> int:
+        """Times the decode step was traced/compiled. A fully static serving
+        path stays at 1 regardless of slot churn; -1 for eager engines."""
+        return self._trace_count if self.compiled else -1
 
     def run(self, max_steps: int = 1000) -> dict[int, list[int]]:
         for _ in range(max_steps):

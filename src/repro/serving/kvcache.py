@@ -1,10 +1,16 @@
-"""Slot-based KV cache pool for continuous batching.
+"""Slot-based, device-resident KV cache pool for continuous batching.
 
 A fixed pool of ``n_slots`` request slots, each a contiguous (S_max, KV, Dh)
 region per layer (the DRAM tier of NVLLM: "attention weights and KV cache
-stay in DRAM", §3). Slots are allocated at admission, freed at completion;
-per-slot lengths drive both the attention masks and the KV-cache-aware
-scheduler's latency estimate (Alg. 2 input).
+stay in DRAM", §3). Slots are allocated at admission, freed at completion.
+
+The pool is split control-plane / data-plane (DESIGN.md §6):
+
+  * ``k`` / ``v`` / ``lengths_dev`` live on device and flow through the
+    engine's compiled decode step as donated buffers — the step appends
+    every active slot's K/V row and bumps its length entirely in-graph.
+  * ``lengths`` is the host MIRROR the Python control plane keeps in sync
+    (admission, completion, stats); it never forces a device sync.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ class KVCachePool:
         self.k = jnp.zeros(shape, self.dtype)
         self.v = jnp.zeros(shape, self.dtype)
         self.lengths = np.zeros((self.n_slots,), np.int32)
+        self.lengths_dev = jnp.zeros((self.n_slots,), jnp.int32)
         self.free = list(range(self.n_slots))[::-1]
         self.active: dict[int, int] = {}        # slot -> request id
 
@@ -38,12 +45,14 @@ class KVCachePool:
         slot = self.free.pop()
         self.active[slot] = request_id
         self.lengths[slot] = 0
+        self.lengths_dev = self.lengths_dev.at[slot].set(0)
         return slot
 
     def release(self, slot: int):
         rid = self.active.pop(slot, None)
         del rid
         self.lengths[slot] = 0
+        self.lengths_dev = self.lengths_dev.at[slot].set(0)
         self.k = self.k.at[:, slot].set(0)
         self.v = self.v.at[:, slot].set(0)
         self.free.append(slot)
@@ -54,15 +63,17 @@ class KVCachePool:
         self.k = self.k.at[:, slot, :s].set(k_new.astype(self.dtype))
         self.v = self.v.at[:, slot, :s].set(v_new.astype(self.dtype))
         self.lengths[slot] = s
-
-    def write_token(self, slot: int, layer: int, k_t, v_t, pos: int):
-        self.k = self.k.at[layer, slot, pos].set(k_t.astype(self.dtype))
-        self.v = self.v.at[layer, slot, pos].set(v_t.astype(self.dtype))
+        self.lengths_dev = self.lengths_dev.at[slot].set(s)
 
     def bump(self, slot: int):
+        """Advance the HOST mirror after a decode step (the device lengths
+        were already bumped in-graph by the compiled step)."""
         self.lengths[slot] += 1
 
-    @property
-    def max_active_len(self) -> int:
-        act = [self.lengths[s] for s in self.active]
-        return int(max(act)) if act else 0
+    def device_state(self) -> dict:
+        """The pool's device-resident half, as fed to the compiled step."""
+        return {"k": self.k, "v": self.v, "lengths": self.lengths_dev}
+
+    def set_device_state(self, state: dict):
+        self.k, self.v = state["k"], state["v"]
+        self.lengths_dev = state["lengths"]

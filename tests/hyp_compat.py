@@ -1,0 +1,38 @@
+"""Optional-`hypothesis` shim for the property-test modules.
+
+The container image does not ship ``hypothesis``; importing it at module
+scope used to fail the whole test *collection* (taking every deterministic
+test in the module down with it). Import ``given``/``settings``/``st`` from
+here instead: with hypothesis installed they are the real thing; without it,
+``@given`` turns the test into a zero-argument skip and the deterministic
+tests in the same module still run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:                              # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed (property test)")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Decoration-time stand-in: every strategy builder returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import ecc
 from repro.core.quant import quantize_int8
@@ -107,3 +107,51 @@ def test_flash_matmul_shapes():
     pal = flash_matmul(x, fw, mode=ExecMode.PALLAS, out_dtype=jnp.float32)
     np.testing.assert_allclose(np.asarray(xla), np.asarray(pal),
                                rtol=2e-2, atol=2e-1)
+
+
+# --- slot-paged decode-attention kernel (kernels/decode_attn.py) -------------
+
+
+def _mk_decode(key, b, s, h, n_kv, dh, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, 1, h, dh), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (b, s, n_kv, dh), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (b, s, n_kv, dh), jnp.float32).astype(dtype)
+    kn = jax.random.normal(ks[3], (b, 1, n_kv, dh), jnp.float32).astype(dtype)
+    vn = jax.random.normal(ks[4], (b, 1, n_kv, dh), jnp.float32).astype(dtype)
+    return q, kc, vc, kn, vn
+
+
+@pytest.mark.parametrize("b,s,h,n_kv,dh", [
+    (1, 64, 4, 4, 32),          # MHA
+    (3, 96, 4, 2, 32),          # GQA, ragged lengths below
+    (2, 80, 8, 1, 16),          # MQA, S not a multiple of the block target
+])
+def test_decode_attn_kernel_matches_xla(b, s, h, n_kv, dh):
+    from repro.core.erdpe import ExecMode
+    from repro.models import common as cm
+    q, kc, vc, _, _ = _mk_decode(jax.random.PRNGKey(b * s), b, s, h, n_kv, dh)
+    lens = jnp.asarray([(7 * (i + 1)) % s + 1 for i in range(b)], jnp.int32)
+    want = cm.decode_attention(q, kc, vc, lens)
+    got = cm.decode_attention(q, kc, vc, lens, mode=ExecMode.PALLAS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attn_incremental_matches_xla(dtype):
+    from repro.core.erdpe import ExecMode
+    from repro.models import common as cm
+    b, s, h, n_kv, dh = 3, 96, 4, 2, 32
+    q, kc, vc, kn, vn = _mk_decode(jax.random.PRNGKey(7), b, s, h, n_kv, dh,
+                                   dtype)
+    # includes a zero-length slot: only the analytically-merged self token
+    lens = jnp.asarray([0, 5, 96], jnp.int32)
+    want = cm.decode_attention_incremental(q, kc, vc, lens, kn, vn)
+    got = cm.decode_attention_incremental(q, kc, vc, lens, kn, vn,
+                                          mode=ExecMode.PALLAS)
+    tol = dict(rtol=1e-5, atol=1e-5) if dtype == jnp.float32 else \
+        dict(rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+    assert not np.any(np.isnan(np.asarray(got, np.float32)))
