@@ -36,8 +36,9 @@ SERVE_BENCH = ArchConfig(
     ffn_type="gelu", use_rope=False, max_seq=512,
 )
 
+SMOKE = os.environ.get("REPRO_SMOKE", "0") != "0"
 WARMUP_STEPS = 5
-TIMED_STEPS = 30
+TIMED_STEPS = 10 if SMOKE else 30
 
 
 def bench_engine(compiled: bool, steps: int = TIMED_STEPS) -> dict:

@@ -42,7 +42,10 @@ def main():
         print(f"deployed engine (RBER=1e-4, ECC on) decoded: {out}")
 
         clean = Engine(OPT_TINY, restored, max_slots=1, max_seq=64, rber=0.0)
-        out_clean = clean.run()[clean.submit([1, 2, 3, 4], max_new=8)]
+        # NB: subscripting run() with an inline submit() evaluates run()
+        # FIRST (empty engine) — submit must happen before run.
+        rid_clean = clean.submit([1, 2, 3, 4], max_new=8)
+        out_clean = clean.run()[rid_clean]
         assert out == out_clean, "ECC must make RBER invisible"
         print("deploy_nvllm OK — corrupted flash reads decode identically")
 

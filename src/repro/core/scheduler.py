@@ -103,6 +103,65 @@ def npu_fraction(bitmap: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean((bitmap > 0).astype(jnp.float32))
 
 
+# --- token-budget admission (mixed prefill/decode batching) -------------------
+#
+# The serving engine's compiled step is a STATIC (n_slots, chunk_tokens)
+# batch; which slots spend how many of those lanes each step is the host-side
+# admission problem. Decode slots always run (one lane each — inter-token
+# latency never stalls behind someone else's prompt); prefilling slots
+# consume their prompt in chunks funded by a per-step token budget. The
+# budget is coupled to Algorithm 2's bitmap: as the scheduler offloads
+# column-groups to the in-flash engine (npu_fraction falls, i.e. attention
+# over the grown KV cache is eating the NPU), the budget contracts and with
+# it the prefill share of the step — Algorithm 2 deciding the prefill/decode
+# mix, not just the projection split.
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    chunk_tokens: int = 16     # T_chunk: static chunk lanes per slot per step
+    token_budget: int = 32     # per-step token budget at npu_fraction = 1.0
+    budget_floor: float = 0.25 # budget fraction kept at npu_fraction = 0.0
+    adaptive: bool = True      # couple the budget to the Alg. 2 bitmap
+
+
+def step_token_budget(cfg: AdmissionConfig, npu_frac: float) -> int:
+    """Per-step token budget, contracted by Algorithm 2's offload state.
+    Always >= 1: a non-positive budget would plan empty steps forever and
+    wedge prefill-only workloads."""
+    if not cfg.adaptive:
+        return max(1, cfg.token_budget)
+    f = min(max(float(npu_frac), 0.0), 1.0)
+    scale = cfg.budget_floor + (1.0 - cfg.budget_floor) * f
+    return max(1, int(round(cfg.token_budget * scale)))
+
+
+def plan_chunks(
+    decode_slots: list[int],
+    prefill_slots: list[tuple[int, int]],   # (slot, prompt tokens remaining)
+    budget: int,
+    chunk_tokens: int,
+) -> dict[int, int]:
+    """Pure host-side step plan: slot -> token lanes this step.
+
+    Decode slots are funded first and unconditionally (1 lane each);
+    leftover budget funds prefill chunks in the order given — the caller
+    passes them ARRIVAL-ordered, so admission stays FCFS — each capped at
+    the static chunk width. A long prompt therefore spreads over several
+    steps while concurrent decoders keep producing a token every step.
+    """
+    plan = {s: 1 for s in decode_slots}
+    left = budget - len(decode_slots)
+    for slot, remaining in prefill_slots:
+        if left <= 0:
+            break
+        n = min(chunk_tokens, remaining, left)
+        if n > 0:
+            plan[slot] = n
+            left -= n
+    return plan
+
+
 def split_projection(
     x: jnp.ndarray,
     w_dram: jnp.ndarray,

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import zlib
 from typing import Any, Callable
 
 import jax
@@ -125,7 +126,13 @@ def deploy(
         )
         tier_map[p] = FLASH if flash else DRAM
         if flash:
-            return encode_flash(leaf, rber=rber, seed=seed + hash(p) % (2**31))
+            # crc32, NOT hash(): Python string hashing is randomized per
+            # process (PYTHONHASHSEED), which made the injected bit-error
+            # positions — and thus every rber>0 engine — nondeterministic
+            # across runs despite the documented "deterministic in seed".
+            return encode_flash(leaf,
+                                rber=rber,
+                                seed=seed + zlib.crc32(p.encode()) % (2**31))
         return leaf.astype(jnp.bfloat16)
 
     tiered = jax.tree_util.tree_map_with_path(convert, params)

@@ -1,4 +1,6 @@
-# Pallas kernel layer for the paper's two serving hot-spots:
+# Pallas kernel layer for the paper's serving hot-spots:
 #   ecdp.py        — paged, error-resilient INT8 matmul (ERDPE, §3.2-3.3)
-#   decode_attn.py — slot-paged decode attention over the KV pool (§3.5)
+#   decode_attn.py — slot-contiguous decode attention (dense.decode_step)
+#   paged_attn.py  — block-paged chunk/decode attention over the serving
+#                    engine's KV pool (block tables via scalar prefetch)
 # ops.py holds the jit'd public wrappers; ref.py the pure-jnp oracles.

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.core import ecc
 from repro.kernels.decode_attn import decode_attn_pallas
 from repro.kernels.ecdp import ecdp_matmul_pallas
+from repro.kernels.paged_attn import paged_attn_pallas, paged_attn_xla
 
 
 def _pick_block(dim: int, target: int, mult: int) -> int:
@@ -101,6 +102,66 @@ def decode_attention_state(
         qg, k_pool, v_pool, lengths.astype(jnp.int32),
         block_s=bs, interpret=interp,
     )
+
+
+def _group_chunk_queries(q: jnp.ndarray, n_kv: int, cdt) -> jnp.ndarray:
+    """(B, T, H, Dh) unscaled -> (B, KV, T*rep, Dh) scaled, pool dtype.
+
+    With the context mask uniform across a chunk (every cached token
+    precedes every chunk query), folding (T, rep) into one query axis makes
+    the chunk case identical to decode at rep' = T*rep — both the Pallas
+    kernel and the XLA reference consume this layout. TR index = t*rep + r.
+    """
+    b, t, h, dh = q.shape
+    n_rep = h // n_kv
+    qg = (q.astype(jnp.float32) * dh ** -0.5).reshape(b, t, n_kv, n_rep, dh)
+    return qg.transpose(0, 2, 1, 3, 4).reshape(b, n_kv, t * n_rep, dh).astype(cdt)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_state(
+    q: jnp.ndarray,             # (B, T, H, Dh) — chunk queries, UNscaled
+    k_pool: jnp.ndarray,        # (n_blocks, block_size, KV, Dh)
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, max_blocks) int32
+    ctx_lens: jnp.ndarray,      # (B,) int32 — cached context per slot
+    *,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Block-paged context attention (Pallas), returning online-softmax
+    state: (acc, m, l) f32 with acc (B, KV, T*rep, Dh) UNNORMALIZED and
+    m/l (B, KV, T*rep). Covers decode (T=1) and chunked prefill (T>1);
+    the caller merges the intra-chunk causal term
+    (models/common.chunk_attention_paged) before normalizing."""
+    n_kv = k_pool.shape[2]
+    qg = _group_chunk_queries(q, n_kv, k_pool.dtype)
+    interp = _on_cpu() if interpret is None else interpret
+    return paged_attn_pallas(
+        qg, k_pool, v_pool, block_tables.astype(jnp.int32),
+        ctx_lens.astype(jnp.int32), interpret=interp)
+
+
+def paged_attention_state_xla(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    ctx_lens: jnp.ndarray,
+    *,
+    window: int | None = None,
+    q_positions: jnp.ndarray | None = None,   # (B, T) abs positions (window)
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """XLA-native equivalent (gather through the block table, same math and
+    dtype discipline) — the reference the kernel is tested against, and the
+    windowed-attention fallback."""
+    b, t, h, dh = q.shape
+    n_kv = k_pool.shape[2]
+    qg = _group_chunk_queries(q, n_kv, k_pool.dtype)
+    if q_positions is not None:
+        q_positions = jnp.repeat(q_positions, h // n_kv, axis=1)   # (B, TR)
+    return paged_attn_xla(
+        qg, k_pool, v_pool, block_tables.astype(jnp.int32),
+        ctx_lens.astype(jnp.int32), window=window, q_positions=q_positions)
 
 
 def ecdp_matmul_xla(

@@ -35,20 +35,32 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
                  sample_cfg=SampleConfig(temperature=0.8, top_k=40),
                  kv_aware=kv_aware, seed=seed)
     rng = np.random.default_rng(seed)
+    # submit enqueues: the whole burst goes in up front and the engine's
+    # waiting->running queue admits as slots/blocks free up (no host-side
+    # slot polling; oversubscription is the normal case).
+    first_tok: dict[int, int] = {}
+    for _ in range(n_requests):
+        prompt = rng.integers(1, cfg.vocab_size, rng.integers(3, 10)).tolist()
+        eng.submit(prompt, max_new=max_new)
     t0 = time.time()
-    n_tokens = 0
-    pending = list(range(n_requests))
-    outs = {}
-    while pending or any(not r.done for r in eng.requests.values()):
-        while pending and eng.pool.free:
-            rid_l = pending.pop()
-            prompt = rng.integers(1, cfg.vocab_size, rng.integers(3, 10)).tolist()
-            eng.submit(prompt, max_new=max_new)
-        n_tokens += eng.step()
+    n_processed = n_steps = 0
+    while any(not r.done for r in eng.requests.values()):
+        n_processed += eng.step()        # prefill lanes + decode lanes
+        n_steps += 1
+        for r in eng.requests.values():          # first-token step (TTFT)
+            if r.out and r.rid not in first_tok:
+                first_tok[r.rid] = n_steps
     dt = time.time() - t0
     outs = {r.rid: r.out for r in eng.requests.values()}
-    return {"outputs": outs, "tokens": n_tokens, "seconds": dt,
-            "tps": n_tokens / max(dt, 1e-9), "stats": eng.stats}
+    # "tokens"/"tps" stay GENERATED tokens (comparable with PR 1 /
+    # serve_decode.py numbers); processed counts every prompt lane too.
+    n_generated = sum(len(o) for o in outs.values())
+    return {"outputs": outs, "tokens": n_generated, "seconds": dt,
+            "tps": n_generated / max(dt, 1e-9),
+            "processed": n_processed,
+            "processed_tps": n_processed / max(dt, 1e-9),
+            "stats": eng.stats,
+            "ttft_steps": first_tok, "traces": eng.step_traces}
 
 
 def main():
@@ -62,8 +74,12 @@ def main():
     args = ap.parse_args()
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
                 max_new=args.max_new, rber=args.rber, kv_aware=args.kv_aware)
-    print(f"served {len(out['outputs'])} requests, {out['tokens']} tokens "
-          f"in {out['seconds']:.1f}s ({out['tps']:.1f} tok/s on CPU)")
+    print(f"served {len(out['outputs'])} requests, {out['tokens']} generated "
+          f"tokens in {out['seconds']:.1f}s ({out['tps']:.1f} generated "
+          f"tok/s, {out['processed_tps']:.1f} processed tok/s on CPU), "
+          f"step traces={out['traces']}")
+    tt = sorted(out["ttft_steps"].values())
+    print(f"TTFT (steps to first token) per request: {tt}")
     fr = [s["npu_fraction"] for s in out["stats"]]
     print(f"scheduler npu_fraction trace: {fr[:8]} ... {fr[-3:]}")
 

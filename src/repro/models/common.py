@@ -230,18 +230,31 @@ def chunked_attention(
     return out.transpose(0, 2, 1, 3).astype(q.dtype)               # (B,Sq,H,Dh)
 
 
+def merge_attn_states(acc1, m1, l1, acc2, m2, l2):
+    """Merge two unnormalized online-softmax states over disjoint key sets
+    and normalize: acc (..., Dh) f32, m/l (...) f32 (m may be -inf where a
+    state saw only masked keys). The single source of the merge algebra —
+    decode's self-term, chunked prefill's intra-chunk term, and the paged
+    context state all combine through here, so the math can't
+    desynchronize between exec modes or phases."""
+    m = jnp.maximum(m1, m2)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    a1 = jnp.where(jnp.isfinite(m1), jnp.exp(m1 - m_safe), 0.0)
+    a2 = jnp.where(jnp.isfinite(m2), jnp.exp(m2 - m_safe), 0.0)
+    acc = acc1 * a1[..., None] + acc2 * a2[..., None]
+    l = l1 * a1 + l2 * a2
+    return acc / jnp.maximum(l[..., None], 1e-20)
+
+
 def _merge_self_term(acc, m, l, s_self, v_self):
     """Merge the current token's self-term into unnormalized online-softmax
     state and normalize: acc (B, KV, R, Dh) f32, m/l (B, KV, R) (m may be
     -inf for empty caches), s_self (B, KV, R) scores, v_self (B, KV, Dh)
-    f32. Shared by the XLA and Pallas decode paths so the merge algebra
-    can't desynchronize between exec modes."""
-    m2 = jnp.maximum(m, s_self)
-    alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m2), 0.0)
-    p_self = jnp.exp(s_self - m2)
-    acc = acc * alpha[..., None] + p_self[..., None] * v_self[:, :, None, :]
-    l = l * alpha + p_self
-    return acc / jnp.maximum(l[..., None], 1e-20)
+    f32. The self token is a one-key state (m2 = s_self, l2 = 1,
+    acc2 = v_self) fed to the shared ``merge_attn_states``."""
+    acc_self = jnp.broadcast_to(v_self[:, :, None, :], acc.shape)
+    return merge_attn_states(acc, m, l, acc_self, s_self,
+                             jnp.ones_like(s_self))
 
 
 def decode_attention_incremental(
@@ -339,6 +352,76 @@ def decode_attention(
     out = jnp.einsum("bkrs,bskd->bkrd", p.astype(cdt), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def chunk_attention_paged(
+    q: jnp.ndarray,             # (B, T, H, Dh) — this step's chunk queries
+    k_pool: jnp.ndarray,        # (n_blocks, block_size, KV, Dh) — READ-ONLY
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, max_blocks) int32; 0 = unmapped
+    ctx_lens,                   # (B,) int32 — tokens already in the pool
+    k_new: jnp.ndarray,         # (B, T, KV, Dh) — this chunk's K/V
+    v_new: jnp.ndarray,
+    window: int | None = None,
+    mode: ExecMode = ExecMode.XLA,
+) -> jnp.ndarray:
+    """Mixed-batch attention over a block-paged KV pool, WITHOUT writing it.
+
+    Chunk query t sits at absolute position ``ctx_lens[b] + t`` and splits
+    its keys in two: (1) the CONTEXT — everything already in the pool, all
+    of which precedes the whole chunk, so the mask ``kv_pos < ctx_len`` is
+    uniform across the chunk and the paged kernel / XLA reference
+    (kernels/paged_attn.py) needs no per-query state; (2) the INTRA-CHUNK
+    causal term over the chunk's own freshly-computed K/V (a small (T, T)
+    block, computed inline). The two online-softmax states combine through
+    the shared ``merge_attn_states`` — decode is exactly the T=1 case, so
+    one code path serves prefilling and decoding slots in the same batch.
+
+    Keeping the pool read-only inside the layer scan preserves the
+    single-batched-scatter-per-step property (EXPERIMENTS.md §Perf).
+
+    ``mode=ExecMode.PALLAS`` routes the context half to the paged Pallas
+    kernel (global attention only); windowed callers and XLA mode share
+    the gather-based reference.
+    """
+    from repro.kernels import ops
+    b, t, h, dh = q.shape
+    n_kv = k_new.shape[2]
+    n_rep = h // n_kv
+    ctx = jnp.broadcast_to(jnp.asarray(ctx_lens, jnp.int32), (b,))
+    # --- context half: paged pool, uniform mask ------------------------------
+    if mode == ExecMode.PALLAS and window is None:
+        acc1, m1, l1 = ops.paged_attention_state(
+            q, k_pool, v_pool, block_tables, ctx)
+    else:
+        q_pos = ctx[:, None] + jnp.arange(t) if window is not None else None
+        acc1, m1, l1 = ops.paged_attention_state_xla(
+            q, k_pool, v_pool, block_tables, ctx,
+            window=window, q_positions=q_pos)
+    # (B, KV, T*rep, ...) -> (B, KV, T, rep, ...)
+    acc1 = acc1.reshape(b, n_kv, t, n_rep, dh)
+    m1 = m1.reshape(b, n_kv, t, n_rep)
+    l1 = l1.reshape(b, n_kv, t, n_rep)
+    # --- intra-chunk causal half (T is small; plain masked softmax) ----------
+    cdt = k_pool.dtype
+    qf = ((q.astype(jnp.float32) * dh ** -0.5)
+          .reshape(b, t, n_kv, n_rep, dh).astype(cdt))
+    s2 = jnp.einsum("btkrd,bukd->bktru", qf, k_new.astype(cdt),
+                    preferred_element_type=jnp.float32)   # (B, KV, T, rep, U)
+    tt = jnp.arange(t)
+    mask = tt[None, :] <= tt[:, None]                     # key u <= query t
+    if window is not None:
+        mask = mask & (tt[None, :] > tt[:, None] - window)
+    mask = mask[None, None, :, None, :]
+    s2 = jnp.where(mask, s2, -jnp.inf)
+    m2 = jnp.max(s2, axis=-1)                 # finite: the self key survives
+    p2 = jnp.exp(s2 - m2[..., None])
+    p2 = jnp.where(mask, p2, 0.0)
+    acc2 = jnp.einsum("bktru,bukd->bktrd", p2.astype(cdt), v_new.astype(cdt),
+                      preferred_element_type=jnp.float32)
+    l2 = jnp.sum(p2, axis=-1)
+    out = merge_attn_states(acc1, m1, l1, acc2, m2, l2)   # (B, KV, T, rep, Dh)
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, t, h, dh).astype(q.dtype)
 
 
 # --- attention block ---------------------------------------------------------

@@ -3,10 +3,10 @@ level, with the KV-cache-aware scheduler (Algorithm 2) in the loop.
 
 Execution model (dense decoder families — the paper's OPT/LLaMA models):
 
-  prefill  : Q/K/V/O projections split between "NAND CMOS" (ERDPE over
-             flash-tier INT8+ECC weights) and "NPU" (bf16 DRAM weights) by a
-             static capability ratio; attention + KV write on the NPU side;
-             FFN fully in flash (§3.5).
+  prefill  : consumed in CHUNKS through the same step as decode — Q/K/V/O
+             split between "NAND CMOS" (ERDPE over flash-tier INT8+ECC
+             weights) and "NPU" (bf16 DRAM weights) by the Alg. 2 bitmap;
+             attention + KV write on the NPU side; FFN fully in flash.
   decode   : attention on the NPU over the DRAM KV pool; FFN via ERDPE.
              Algorithm 2 compares the attention-latency increment against
              C_th and flips bitmap bits, moving Q/K/V/O column-groups to the
@@ -15,25 +15,33 @@ Execution model (dense decoder families — the paper's OPT/LLaMA models):
 
 The engine is split control-plane / data-plane (DESIGN.md §6):
 
-  * data plane — ``_decode_step_impl``: ONE jax.jit-compiled, static-shape
-    function per engine that advances ALL slots one token: embeds, runs a
-    lax.scan over the stacked layer weights (DRAM attn tier + flash attn
-    copies + flash FFN), appends every active slot's K/V row to the
-    device-resident pool with a single batched scatter, bumps per-slot
-    lengths, samples, and folds the Algorithm 2 bitmap update into the same
-    graph. Zero mid-step host syncs; KV buffers are donated. Per-slot
-    decode positions come from the device lengths array, so heterogeneous-
-    length continuous batches RoPE/position-embed correctly.
-  * control plane — the Python ``Engine``: admission, prefill, completion,
-    slot recycling, stats. It feeds the step plain (n_slots,) token/mask
-    arrays, so slot churn never retraces the compiled step.
+  * data plane — ``_step_impl``: ONE jax.jit-compiled, static-shape MIXED-
+    BATCH step per engine. Every step, each slot contributes up to
+    ``chunk_tokens`` lanes of a (n_slots, chunk_tokens) token batch —
+    prefilling slots a chunk of their prompt, decoding slots their single
+    last-sampled token — and the step embeds, runs a lax.scan over the
+    stacked layer weights with block-PAGED attention over the KV pool
+    (models/common.chunk_attention_paged), evaluates lm_head ONLY at each
+    slot's last valid lane, samples, scatters every new K/V row through the
+    block tables in ONE batched write, bumps per-slot lengths, and folds
+    the Algorithm 2 bitmap update into the same graph. Zero mid-step host
+    syncs; KV buffers are donated. Out-of-range scatter lanes land in the
+    pool's reserved dump block, so every write is unconditional and static.
+  * control plane — the Python ``Engine``: a waiting->running admission
+    queue (submit ENQUEUES; slots and worst-case block reservations are
+    claimed at admission), per-step chunk planning under the Alg.2-coupled
+    token budget (core/scheduler.plan_chunks), completion, O(1) slot
+    release, stats. It feeds the step plain (n_slots, chunk_tokens) token
+    arrays plus the block tables, so slot churn, ragged prompts, and
+    oversubscribed admission never retrace the compiled step.
 
 ``compiled=False`` keeps the seed-style eager reference: the *same* per-
 layer math driven by an interpreted Python loop over layers (the benchmark
-baseline and correctness oracle for benchmarks/serve_decode.py).
+baseline and correctness oracle for benchmarks/serve_{decode,mixed}.py).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 
@@ -46,8 +54,8 @@ from repro.core.erdpe import ExecMode, flash_matmul
 from repro.core.tiering import deploy, encode_flash
 from repro.models import common as cm
 from repro.models import dense
-from repro.serving.kvcache import KVCachePool
-from repro.serving.sampler import SampleConfig, sample
+from repro.serving.kvcache import PagedKVPool
+from repro.serving.sampler import SampleConfig, last_valid_hidden, sample
 
 
 @dataclasses.dataclass
@@ -55,8 +63,22 @@ class Request:
     rid: int
     prompt: list[int]
     max_new: int
+    pos: int = 0                     # prompt tokens consumed (chunked prefill)
+    slot: int | None = None          # None while waiting for admission
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < len(self.prompt)
+
+    @property
+    def kv_rows(self) -> int:
+        """Worst-case KV footprint: every prompt token plus every decode
+        step writes one row; the LAST sampled token is never written back
+        (prefill always writes the whole prompt, so max_new=0 still needs
+        len(prompt) rows). Admission validates and reserves this count."""
+        return len(self.prompt) + max(self.max_new - 1, 0)
 
 
 def _proj(x, w_dram, w_flash, bitmap):
@@ -70,10 +92,8 @@ def _proj(x, w_dram, w_flash, bitmap):
 
 def _qkv(cfg, lp, fl, x, positions, bitmap):
     """Shared QKV block (norm -> bitmap-dispatched projections -> qk-norm ->
-    rope) for both the prefill loop and the compiled decode layer. Only wq
-    is bitmap-dispatched (Alg. 2 rebalances the query path; K/V stay on the
-    NPU as in the seed engine); ``fl=None`` means no flash copies (prefill).
-    """
+    rope). Only wq is bitmap-dispatched (Alg. 2 rebalances the query path;
+    K/V stay on the NPU as in the seed engine)."""
     ap = lp["attn"]
     b, s, _ = x.shape
     h = dense._norm(cfg, x, lp, "ln1")
@@ -92,48 +112,70 @@ def _qkv(cfg, lp, fl, x, positions, bitmap):
     return q, k, v
 
 
-def _decode_layer(cfg, exec_mode, bitmap, lengths, positions, x, layer):
-    """One decode layer over all slots. ``layer`` = (params slice, flash
-    attn copy slice, read-only K/V pool slices). The pool is never written
-    here — the current token's self-term is merged analytically
-    (decode_attention_incremental), so the scan stays write-free and the
-    step does ONE batched pool write after the scan."""
+def _chunk_layer(cfg, exec_mode, bitmap, lengths, positions, block_tables,
+                 x, layer):
+    """One mixed-batch layer over all slots' chunk lanes. ``layer`` =
+    (params slice, flash attn copy slice, read-only paged K/V pool slices).
+    The pool is never written here — the chunk's own K/V enters through the
+    intra-chunk causal term of chunk_attention_paged, so the scan stays
+    write-free and the step does ONE batched paged scatter after it."""
     lp, fl, kc, vc = layer
     ap = lp["attn"]
-    b, s, _ = x.shape                                    # s == 1
+    b, t, _ = x.shape                                    # t == chunk_tokens
     q, k, v = _qkv(cfg, lp, fl, x, positions, bitmap)
-    attn = cm.decode_attention_incremental(
-        q, kc, vc, lengths, k, v, window=cfg.local_window, mode=exec_mode)
-    out = _proj(attn.reshape(b, s, -1), ap["wo"], fl["wo"], bitmap)
+    attn = cm.chunk_attention_paged(
+        q, kc, vc, block_tables, lengths, k, v,
+        window=cfg.local_window, mode=exec_mode)
+    out = _proj(attn.reshape(b, t, -1), ap["wo"], fl["wo"], bitmap)
     x = x + out
     x = x + dense._ffn_apply(cfg, lp["ffn"], dense._norm(cfg, x, lp, "ln2"))
-    return x, (k[:, 0], v[:, 0])
+    return x, (k, v)
 
 
-def _decode_step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode,
-                      unroll, params, attn_flash, state, tokens, active, key):
-    """One decode step for ALL pool slots — the engine's data plane.
+def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
+               params, attn_flash, state, tokens, q_lens, admitted,
+               block_tables, key):
+    """One mixed prefill/decode step for ALL pool slots — the data plane.
 
-    state  : {"k","v": (L, slots, S_max, KV, Dh), "lengths": (slots,) i32,
-              "bitmap": (H,) i32, "prev_cycles": i32} — donated when jitted.
-    tokens : (slots,) i32 last token per slot (don't-care when inactive).
-    active : (slots,) bool admission mask.
+    state  : {"k","v": (L, n_blocks, block_size, KV, Dh),
+              "lengths": (slots,) i32, "bitmap": (H,) i32,
+              "prev_cycles": i32} — donated when jitted.
+    tokens : (slots, T) i32 chunk lanes per slot (don't-care past q_lens).
+    q_lens : (slots,) i32 valid lanes per slot (0 = no work this step).
+    admitted : (slots,) bool — slot holds a live request (it may still get
+             0 lanes when the token budget starves it; its cached KV must
+             keep counting toward Algorithm 2's kv_len).
+    block_tables : (slots, max_blocks) i32; entry 0 = unmapped/dump.
 
     Returns (sampled (slots,) i32, new state, stats scalars). Everything —
-    layer scan, KV append, length bump, Algorithm 2, sampling — is one
-    graph; inactive slots compute garbage that is masked out of every state
-    write, so slot churn never changes shapes or retraces.
+    layer scan, paged attention, paged KV scatter, length bump, Algorithm 2,
+    last-lane sampling — is one graph; idle slots compute garbage that is
+    steered into the reserved dump block, so slot churn, ragged chunks, and
+    admission churn never change shapes or retrace.
     """
-    n_slots = tokens.shape[0]
+    n_slots, t_chunk = tokens.shape
     lengths = state["lengths"]
     bitmap = state["bitmap"] if kv_aware else None
-    positions = lengths[:, None]          # per-slot decode position (B, 1)
-    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    worked = q_lens > 0
+    # absolute position of each chunk lane: cached context + lane offset
+    lane = jnp.arange(t_chunk)[None, :]
+    positions = lengths[:, None] + lane
+    x = jnp.take(params["embed"], tokens, axis=0)
     if "pos_embed" in params:
-        x = x + jnp.take(params["pos_embed"], positions, axis=0)
+        # padding lanes can point past the learned-position table, and an
+        # out-of-bounds jnp.take fills NaN under jit — which would poison
+        # VALID lanes through the intra-chunk 0*NaN products. Steer them
+        # to row 0 (their K/V is causally masked and scatters to the dump
+        # block, so the value never matters — it just must stay finite).
+        emb_pos = jnp.where(lane < q_lens[:, None], positions, 0)
+        x = x + jnp.take(params["pos_embed"], emb_pos, axis=0)
 
-    body = functools.partial(
-        _decode_layer, cfg, exec_mode, bitmap, lengths, positions)
+    # slots with no lanes this step keep stale/irrelevant lengths (O(1)
+    # release never writes the device array); zero their attention context
+    # so the paged kernel's dead-block skip holds — no valid query reads it.
+    ctx_lens = jnp.where(worked, lengths, 0)
+    body = functools.partial(_chunk_layer, cfg, exec_mode, bitmap, ctx_lens,
+                             positions, block_tables)
     xs = (params["layers"], attn_flash, state["k"], state["v"])
     if unroll:
         # eager reference: interpreted Python loop over layers (seed-style)
@@ -142,7 +184,7 @@ def _decode_step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode,
             x, (kl, vl) = body(x, jax.tree.map(lambda a: a[li], xs))
             ks.append(kl)
             vs.append(vl)
-        k_new, v_new = jnp.stack(ks), jnp.stack(vs)      # (L, slots, KV, Dh)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)   # (L, slots, T, KV, Dh)
     else:
         x, (k_new, v_new) = jax.lax.scan(body, x, xs)
 
@@ -151,21 +193,30 @@ def _decode_step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode,
     else:
         x = cm.layer_norm(x, params["final_norm"]["g"],
                           params["final_norm"]["b"])
-    logits = flash_matmul(x[:, 0], params["lm_head"], out_dtype=jnp.float32)
+    # lm_head ONLY at each slot's last valid lane — mid-prompt positions
+    # never sample, so the (T-1) other vocab projections are skipped.
+    x_last = last_valid_hidden(x, q_lens)
+    logits = flash_matmul(x_last, params["lm_head"], out_dtype=jnp.float32)
     toks = sample(logits, key, sample_cfg)
 
-    # --- KV pool append: ONE batched scatter for all layers and slots ------
-    ar = jnp.arange(n_slots)
-    sel = active[None, :, None, None]
-    kd, vd = state["k"], state["v"]
-    kd = kd.at[:, ar, lengths].set(
-        jnp.where(sel, k_new.astype(kd.dtype), kd[:, ar, lengths]))
-    vd = vd.at[:, ar, lengths].set(
-        jnp.where(sel, v_new.astype(vd.dtype), vd[:, ar, lengths]))
-    new_lengths = lengths + active.astype(jnp.int32)
+    # --- paged KV scatter: ONE batched write for all layers/slots/lanes ------
+    block_size = state["k"].shape[2]
+    max_blocks = block_tables.shape[1]
+    pos = positions                                      # (slots, T)
+    valid = lane < q_lens[:, None]
+    blk_idx = jnp.clip(pos // block_size, 0, max_blocks - 1)
+    blk = jnp.take_along_axis(block_tables, blk_idx, axis=1)
+    # invalid lanes (and any unmapped table hit) land in the dump block 0
+    blk = jnp.where(valid, blk, 0)
+    off = jnp.where(valid, pos % block_size, 0)
+    kd = state["k"].at[:, blk, off].set(k_new.astype(state["k"].dtype))
+    vd = state["v"].at[:, blk, off].set(v_new.astype(state["v"].dtype))
+    new_lengths = lengths + q_lens
 
     # --- Algorithm 2: KV-cache-aware rebalance, in-graph -------------------
-    kv_len = jnp.max(jnp.where(active, new_lengths, 0))
+    # admitted (not worked): a budget-starved prefill slot's cached KV
+    # still sets the attention-latency picture Algorithm 2 reacts to.
+    kv_len = jnp.max(jnp.where(admitted, new_lengths, 0))
     new_bitmap, new_prev, delta = sched.kv_aware_step(
         state["bitmap"], state["prev_cycles"], kv_len,
         cfg.d_model, cfg.n_kv_heads, cfg.head_dim, sched_cfg, kv_aware)
@@ -180,23 +231,28 @@ def _decode_step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode,
 class Engine:
     """cfg must be a dense-family ArchConfig (the paper's model families).
 
-    ``compiled=True`` (default) serves decode through the single jitted step
-    function; ``compiled=False`` runs the identical math as an interpreted
-    per-layer loop (seed-style eager reference). ``exec_mode`` picks the
-    decode-attention backend (PALLAS kernel vs XLA), mirroring
-    erdpe.flash_matmul's split.
+    ``compiled=True`` (default) serves prefill AND decode through the single
+    jitted mixed-batch step; ``compiled=False`` runs the identical math as
+    an interpreted per-layer loop (seed-style eager reference).
+    ``exec_mode`` picks the paged-attention backend (PALLAS kernel vs XLA),
+    mirroring erdpe.flash_matmul's split. ``block_size``/``n_blocks`` size
+    the paged KV pool; ``admission_cfg`` sets the chunk width and the
+    Alg.2-coupled per-step token budget.
     """
 
     def __init__(self, cfg, params, max_slots: int = 4, max_seq: int = 256,
                  sample_cfg: SampleConfig = SampleConfig(),
                  sched_cfg: sched.SchedulerConfig | None = None,
                  kv_aware: bool = True, rber: float = 0.0, seed: int = 0,
-                 compiled: bool = True, exec_mode: ExecMode = ExecMode.XLA):
+                 compiled: bool = True, exec_mode: ExecMode = ExecMode.XLA,
+                 block_size: int = 16, n_blocks: int | None = None,
+                 admission_cfg: sched.AdmissionConfig | None = None):
         assert cfg.family == "dense"
         self.cfg = cfg
         self.sample_cfg = sample_cfg
         self.kv_aware = kv_aware
         self.compiled = compiled
+        self.admission_cfg = admission_cfg or sched.AdmissionConfig()
         # DRAM tier: bf16 attention weights (copied once at init, §3.5);
         # flash tier: INT8+ECC FFN / lm_head AND a flash copy of Q/K/V/O so
         # the bitmap can offload projection columns to the in-flash engine.
@@ -208,25 +264,30 @@ class Engine:
         self.sched_cfg = sched_cfg or sched.SchedulerConfig(
             column_bytes=cfg.d_model, h=h)
         self.bitmap = sched.init_bitmap(self.sched_cfg)
-        self.pool = KVCachePool(cfg.n_layers, max_slots, max_seq,
-                                cfg.n_kv_heads, cfg.head_dim)
+        self.pool = PagedKVPool(cfg.n_layers, max_slots, max_seq,
+                                cfg.n_kv_heads, cfg.head_dim,
+                                block_size=block_size, n_blocks=n_blocks)
         self.requests: dict[int, Request] = {}
+        self.waiting: collections.deque[Request] = collections.deque()
         self._next_rid = 0
         self._key = jax.random.PRNGKey(seed)
         self._prev_cycles = jnp.int32(0)
+        self._npu_frac = 1.0             # host view of the Alg. 2 bitmap
         self.stats: list[dict] = []
         step = functools.partial(
-            _decode_step_impl, cfg, self.sched_cfg, sample_cfg, kv_aware,
+            _step_impl, cfg, self.sched_cfg, sample_cfg, kv_aware,
             exec_mode, not compiled)
         self._trace_count = 0
         if compiled:
-            def counted(params, attn_flash, state, tokens, active, key):
+            def counted(params, attn_flash, state, tokens, q_lens,
+                        admitted, block_tables, key):
                 # Python body only runs while jax traces; compiled replays
                 # skip it — so this counts traces, not steps.
                 self._trace_count += 1
-                return step(params, attn_flash, state, tokens, active, key)
+                return step(params, attn_flash, state, tokens, q_lens,
+                            admitted, block_tables, key)
 
-            # donate the KV pool + scheduler state: decode is an in-place
+            # donate the KV pool + scheduler state: the step is an in-place
             # update of device-resident serving state. (CPU ignores donation
             # and warns, so only donate where it lands.)
             donate = (2,) if jax.default_backend() != "cpu" else ()
@@ -246,116 +307,140 @@ class Engine:
         ]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
 
-    # --- request management --------------------------------------------------
+    # --- request management (control plane) -----------------------------------
 
     def submit(self, prompt: list[int], max_new: int = 16) -> int:
-        # a request peaks at len(prompt) + max_new - 1 KV rows (the last
-        # sampled token is never written back); past max_seq the in-graph
-        # scatter would silently drop writes, so reject at admission.
-        need = len(prompt) + max_new - 1
-        if need > self.pool.max_seq:
-            raise ValueError(
-                f"request needs {need} KV rows > max_seq={self.pool.max_seq}")
+        """Enqueue a request and return its id immediately. Admission
+        (slot + worst-case block reservation) happens when capacity frees
+        up — oversubscription waits, it never errors."""
+        if not prompt:
+            raise ValueError("empty prompt (a request needs >= 1 token)")
+        if max_new < 1:
+            raise ValueError("max_new must be >= 1 (every request samples "
+                             "at least the token after its prompt)")
+        # a request that can never fit the per-slot table or the whole
+        # pool is rejected up front.
         rid = self._next_rid
         self._next_rid += 1
-        self.requests[rid] = Request(rid, list(prompt), max_new)
-        slot = self.pool.alloc(rid)
-        if slot is None:
-            raise RuntimeError("no free slots (admission control)")
-        self._prefill(slot, self.requests[rid])
+        req = Request(rid, list(prompt), max_new)
+        pool = self.pool
+        # bound by the EXACT max_seq (rounding up to block granularity
+        # would admit valid lanes past the learned-position table), by the
+        # physical pool minus the dump block, and — for learned-position
+        # models — by the table itself (a valid lane's out-of-bounds
+        # jnp.take would fill NaN under jit)
+        cap = min(pool.max_seq, (pool.n_blocks - 1) * pool.block_size)
+        if "pos_embed" in self.params:
+            cap = min(cap, self.params["pos_embed"].shape[0])
+        if req.kv_rows > cap:
+            self._next_rid = rid
+            raise ValueError(
+                f"request needs {req.kv_rows} KV rows > max_seq={cap}")
+        self.requests[rid] = req
+        self.waiting.append(req)
+        self._admit()
         return rid
 
-    # --- prefill (control plane; per-request, variable length) ---------------
+    def _admit(self):
+        """waiting -> running, FCFS: claim a slot and reserve the request's
+        worst-case block count so lazily-growing slots never deadlock on an
+        exhausted pool mid-flight."""
+        while self.waiting:
+            req = self.waiting[0]
+            slot = self.pool.alloc(req.rid, req.kv_rows)
+            if slot is None:
+                break
+            req.slot = slot
+            self.waiting.popleft()
 
-    def _embed(self, tokens, positions):
-        p = self.params
-        x = jnp.take(p["embed"], tokens, axis=0)
-        if "pos_embed" in p:
-            x = x + jnp.take(p["pos_embed"], positions, axis=0)
-        return x
-
-    def _layer_params(self, li):
-        # FlashWeight is a pytree node: indexing maps over (q, parity, scale).
-        return jax.tree.map(lambda a: a[li], self.params["layers"])
-
-    def _prefill_forward(self, tokens, positions):
-        """Full-sequence prefill forward (B=1); returns (logits, kv list)."""
-        cfg = self.cfg
-        x = self._embed(tokens, positions)
-        kv_all = []
-        for li in range(cfg.n_layers):
-            lp = self._layer_params(li)
-            b, s, _ = x.shape
-            q, k, v = _qkv(cfg, lp, None, x, positions, None)
-            attn = cm.chunked_attention(q, k, v, causal=True,
-                                        window=cfg.local_window)
-            x = x + _proj(attn.reshape(b, s, -1), lp["attn"]["wo"], None, None)
-            x = x + dense._ffn_apply(cfg, lp["ffn"],
-                                     dense._norm(cfg, x, lp, "ln2"))
-            kv_all.append((k, v))
-        if cfg.norm_type == "rms":
-            x = cm.rms_norm(x, self.params["final_norm"])
-        else:
-            x = cm.layer_norm(x, self.params["final_norm"]["g"],
-                              self.params["final_norm"]["b"])
-        logits = flash_matmul(x, self.params["lm_head"], out_dtype=jnp.float32)
-        return logits, kv_all
-
-    def _prefill(self, slot, req: Request):
-        toks = jnp.asarray([req.prompt], jnp.int32)
-        positions = jnp.arange(len(req.prompt))
-        logits, kv_all = self._prefill_forward(toks, positions)
-        k_stack = jnp.stack([kv[0][0] for kv in kv_all])   # (L, S, KV, Dh)
-        v_stack = jnp.stack([kv[1][0] for kv in kv_all])
-        self.pool.write_prefill(slot, k_stack, v_stack)
-        self._key, sk = jax.random.split(self._key)
-        tok = int(sample(logits[:, -1], sk, self.sample_cfg)[0])
-        req.out.append(tok)
-
-    # --- decode (data plane: one compiled call per step) ----------------------
+    # --- the serving step (one compiled call; mixed prefill/decode) -----------
 
     def step(self) -> int:
-        """One continuous-batching decode step over all active slots.
-        Returns number of tokens produced."""
-        active = [(s, self.requests[r]) for s, r in self.pool.active.items()
-                  if not self.requests[r].done]
-        if not active:
+        """One continuous-batching step over all running slots: decoding
+        slots advance one token, prefilling slots consume a prompt chunk
+        under the Alg.2-coupled token budget. Returns tokens processed."""
+        self._admit()
+        decode_slots, prefill_slots = [], []
+        # ARRIVAL order (rid), not slot order: recycled slot ids would
+        # otherwise let a later prompt monopolize the prefill budget ahead
+        # of an earlier one (plan_chunks funds prefill FCFS as given).
+        for slot, rid in sorted(self.pool.active.items(), key=lambda kv: kv[1]):
+            req = self.requests[rid]
+            if req.done:
+                continue
+            if req.prefilling:
+                prefill_slots.append((slot, len(req.prompt) - req.pos))
+            else:
+                decode_slots.append(slot)
+        budget = sched.step_token_budget(self.admission_cfg, self._npu_frac)
+        plan = sched.plan_chunks(decode_slots, prefill_slots, budget,
+                                 self.admission_cfg.chunk_tokens)
+        if not plan:
             return 0
-        n = self.pool.n_slots
-        tokens = np.zeros((n,), np.int32)
-        mask = np.zeros((n,), bool)
-        for slot, req in active:
-            tokens[slot] = req.out[-1] if req.out else req.prompt[-1]
-            mask[slot] = True
+        n, t_chunk = self.pool.n_slots, self.admission_cfg.chunk_tokens
+        tokens = np.zeros((n, t_chunk), np.int32)
+        q_lens = np.zeros((n,), np.int32)
+        admitted = np.zeros((n,), bool)
+        for slot, _ in prefill_slots:
+            admitted[slot] = True
+        admitted[decode_slots] = True
+        for slot, cnt in plan.items():
+            req = self.requests[self.pool.active[slot]]
+            if req.prefilling:
+                chunk = req.prompt[req.pos:req.pos + cnt]
+                tokens[slot, :len(chunk)] = chunk
+                q_lens[slot] = len(chunk)
+            else:
+                tokens[slot, 0] = req.out[-1]
+                q_lens[slot] = 1
+            # map physical blocks for this step's writes (host control plane;
+            # draws on the admission reservation, so it cannot fail)
+            self.pool.ensure(slot, int(self.pool.lengths[slot]) + int(q_lens[slot]))
         self._key, sk = jax.random.split(self._key)
         state = dict(self.pool.device_state(),
                      bitmap=self.bitmap, prev_cycles=self._prev_cycles)
         toks, state, stats = self._step_fn(
             self.params, self.attn_flash, state,
-            jnp.asarray(tokens), jnp.asarray(mask), sk)
+            jnp.asarray(tokens), jnp.asarray(q_lens),
+            jnp.asarray(admitted), self.pool.block_tables_dev(), sk)
         self.pool.set_device_state(state)
         self.bitmap = state["bitmap"]
         self._prev_cycles = state["prev_cycles"]
         # the step's only device->host syncs: sampled tokens + stat scalars
         toks_host = np.asarray(toks)
-        for slot, req in active:
-            self.pool.bump(slot)
+        n_processed = n_prefill = 0
+        for slot in plan:
+            req = self.requests[self.pool.active[slot]]
+            cnt = int(q_lens[slot])
+            n_processed += cnt
+            self.pool.bump(slot, cnt)
+            if req.prefilling:
+                req.pos += cnt
+                n_prefill += cnt
+                if req.prefilling:
+                    continue         # more prompt chunks to go: no sample yet
+            # decoding slots and just-completed prefills sampled a token
             req.out.append(int(toks_host[slot]))
             if len(req.out) >= req.max_new:
                 req.done = True
-                self.pool.release(slot)
+                self.pool.release(slot)   # O(1): no device work
         st = jax.device_get(stats)
+        self._npu_frac = float(st["npu_fraction"])
         self.stats.append({
             "kv_len": int(st["kv_len"]),
             "delta_cycles": int(st["delta_cycles"]),
-            "npu_fraction": float(st["npu_fraction"]),
+            "npu_fraction": self._npu_frac,
+            "prefill_tokens": n_prefill,
+            "decode_tokens": n_processed - n_prefill,
         })
-        return len(active)
+        self._admit()                    # freed slots host waiting requests
+        return n_processed
 
     @property
     def step_traces(self) -> int:
-        """Times the decode step was traced/compiled. A fully static serving
-        path stays at 1 regardless of slot churn; -1 for eager engines."""
+        """Times the serving step was traced/compiled. A fully static
+        serving path stays at 1 regardless of slot churn, chunked prefills,
+        and oversubscribed admission; -1 for eager engines."""
         return self._trace_count if self.compiled else -1
 
     def run(self, max_steps: int = 1000) -> dict[int, list[int]]:

@@ -1,16 +1,34 @@
-"""Slot-based, device-resident KV cache pool for continuous batching.
+"""Block-paged, device-resident KV pool for continuous batching.
 
-A fixed pool of ``n_slots`` request slots, each a contiguous (S_max, KV, Dh)
-region per layer (the DRAM tier of NVLLM: "attention weights and KV cache
-stay in DRAM", §3). Slots are allocated at admission, freed at completion.
+The DRAM tier of NVLLM ("attention weights and KV cache stay in DRAM", §3)
+is carved into fixed-size BLOCKS instead of per-slot contiguous regions —
+the nano-vLLM block-manager design, and the software analogue of the
+paper's NAND/DRAM page granularity: a block is the unit the tier manager
+moves and the unit the paged-attention kernel streams.
 
-The pool is split control-plane / data-plane (DESIGN.md §6):
+Layout (DESIGN.md §6):
 
-  * ``k`` / ``v`` / ``lengths_dev`` live on device and flow through the
-    engine's compiled decode step as donated buffers — the step appends
-    every active slot's K/V row and bumps its length entirely in-graph.
-  * ``lengths`` is the host MIRROR the Python control plane keeps in sync
-    (admission, completion, stats); it never forces a device sync.
+  * ``k`` / ``v``: ``(n_layers, n_blocks, block_size, KV, Dh)`` on device.
+    Block 0 is a RESERVED dump block — never allocated, never read (length
+    masks exclude it); padded block-table entries and the compiled step's
+    out-of-range scatter lanes land there, which keeps every write
+    unconditional and jit-static.
+  * ``block_tables``: host ``(n_slots, max_blocks)`` int32 mapping a slot's
+    logical block index to a pool block id (0 = unmapped). Uploaded to the
+    compiled step each call (a few hundred bytes; never retraces).
+  * ``lengths_dev`` flows through the compiled step as donated device state
+    (the step bumps it in-graph); ``lengths`` is the host MIRROR the control
+    plane keeps in sync without device syncs.
+
+The allocator is host-side control plane: a free list plus per-block ref
+counts (ref counts > 1 are reserved for prefix sharing). Admission RESERVES
+a request's worst-case block count up front, so lazily growing slots can
+never deadlock on an exhausted pool mid-flight; physical blocks are still
+mapped on demand (``ensure``), one chunk ahead of the writes.
+
+``release`` is O(1) host bookkeeping: freed blocks keep their stale K/V
+(already unreachable — no live block table maps them and length masks
+bound every read) so completing a request issues ZERO device work.
 """
 from __future__ import annotations
 
@@ -20,55 +38,117 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
 @dataclasses.dataclass
-class KVCachePool:
+class PagedKVPool:
     n_layers: int
     n_slots: int
     max_seq: int
     n_kv_heads: int
     head_dim: int
     dtype: type = jnp.bfloat16
+    block_size: int = 16
+    n_blocks: int | None = None          # total pool blocks incl. dump block
 
     def __post_init__(self):
-        shape = (self.n_layers, self.n_slots, self.max_seq,
+        self.max_blocks = cdiv(self.max_seq, self.block_size)
+        if self.n_blocks is None:
+            # fully provisioned by default; pass fewer to actually page
+            self.n_blocks = self.n_slots * self.max_blocks + 1
+        assert self.n_blocks >= 2, "need at least the dump block + one real"
+        shape = (self.n_layers, self.n_blocks, self.block_size,
                  self.n_kv_heads, self.head_dim)
         self.k = jnp.zeros(shape, self.dtype)
         self.v = jnp.zeros(shape, self.dtype)
         self.lengths = np.zeros((self.n_slots,), np.int32)
         self.lengths_dev = jnp.zeros((self.n_slots,), jnp.int32)
-        self.free = list(range(self.n_slots))[::-1]
-        self.active: dict[int, int] = {}        # slot -> request id
+        self.block_tables = np.zeros((self.n_slots, self.max_blocks), np.int32)
+        self.ref_count = np.zeros((self.n_blocks,), np.int32)
+        self.free_blocks = list(range(1, self.n_blocks))[::-1]  # 0 = dump
+        self.free_slots = list(range(self.n_slots))[::-1]
+        self.reserved = np.zeros((self.n_slots,), np.int32)  # unmapped claim
+        self.active: dict[int, int] = {}                     # slot -> rid
 
-    def alloc(self, request_id: int) -> int | None:
-        if not self.free:
+    # --- capacity arithmetic -------------------------------------------------
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return cdiv(max(n_tokens, 0), self.block_size)
+
+    @property
+    def n_free_blocks(self) -> int:
+        """Blocks neither mapped nor reserved by an admitted request."""
+        return len(self.free_blocks) - int(self.reserved.sum())
+
+    def n_mapped(self, slot: int) -> int:
+        return int(np.count_nonzero(self.block_tables[slot]))
+
+    def capacity(self, slot: int) -> int:
+        """Tokens the slot's mapped blocks can hold."""
+        return self.n_mapped(slot) * self.block_size
+
+    # --- slot lifecycle ------------------------------------------------------
+
+    def alloc(self, request_id: int, need_tokens: int) -> int | None:
+        """Admit a request: claim a slot and RESERVE its worst-case block
+        count (``need_tokens`` KV rows). Returns the slot, or None when no
+        slot is free or the reservation would oversubscribe the pool."""
+        need_blocks = self.blocks_for(need_tokens)
+        if need_blocks > self.max_blocks:
+            raise ValueError(
+                f"request needs {need_tokens} KV rows > "
+                f"max_seq={self.max_blocks * self.block_size}")
+        if not self.free_slots or need_blocks > self.n_free_blocks:
             return None
-        slot = self.free.pop()
+        slot = self.free_slots.pop()
         self.active[slot] = request_id
+        self.reserved[slot] = need_blocks
         self.lengths[slot] = 0
         self.lengths_dev = self.lengths_dev.at[slot].set(0)
         return slot
 
+    def ensure(self, slot: int, new_len: int):
+        """Map physical blocks so the slot can hold ``new_len`` tokens,
+        drawing from its admission reservation."""
+        want = self.blocks_for(new_len)
+        have = self.n_mapped(slot)
+        for i in range(have, want):
+            assert self.reserved[slot] > 0, "grew past admission reservation"
+            blk = self.free_blocks.pop()
+            assert self.ref_count[blk] == 0
+            self.ref_count[blk] = 1
+            self.block_tables[slot, i] = blk
+            self.reserved[slot] -= 1
+
     def release(self, slot: int):
-        rid = self.active.pop(slot, None)
-        del rid
-        self.lengths[slot] = 0
-        self.lengths_dev = self.lengths_dev.at[slot].set(0)
-        self.k = self.k.at[:, slot].set(0)
-        self.v = self.v.at[:, slot].set(0)
-        self.free.append(slot)
+        """O(1) bookkeeping, ZERO device work: stale K/V in freed blocks is
+        unreachable (no table maps it; length masks bound every read), so
+        nothing is zeroed (the seed pool's two full-pool ``.at[].set(0)``
+        writes per completed request are gone — benchmarks/serve_mixed.py
+        asserts k/v/lengths buffers are all untouched). Even the slot's
+        length stays stale — an idle slot is excluded from every read by
+        its zero lane count, and ``alloc`` resets both length views before
+        the slot is reused."""
+        self.active.pop(slot, None)
+        for i in range(self.max_blocks):
+            blk = int(self.block_tables[slot, i])
+            if blk == 0:
+                continue
+            self.ref_count[blk] -= 1
+            if self.ref_count[blk] == 0:
+                self.free_blocks.append(blk)
+            self.block_tables[slot, i] = 0
+        self.reserved[slot] = 0
+        self.free_slots.append(slot)
 
-    def write_prefill(self, slot: int, k_new, v_new):
-        """k_new/v_new: (L, S, KV, Dh) from a prefill pass."""
-        s = k_new.shape[1]
-        self.k = self.k.at[:, slot, :s].set(k_new.astype(self.dtype))
-        self.v = self.v.at[:, slot, :s].set(v_new.astype(self.dtype))
-        self.lengths[slot] = s
-        self.lengths_dev = self.lengths_dev.at[slot].set(s)
+    def bump(self, slot: int, n: int = 1):
+        """Advance the HOST mirror after a step (the device lengths were
+        already bumped in-graph by the compiled step)."""
+        self.lengths[slot] += n
 
-    def bump(self, slot: int):
-        """Advance the HOST mirror after a decode step (the device lengths
-        were already bumped in-graph by the compiled step)."""
-        self.lengths[slot] += 1
+    # --- device-facing views --------------------------------------------------
 
     def device_state(self) -> dict:
         """The pool's device-resident half, as fed to the compiled step."""
@@ -77,3 +157,6 @@ class KVCachePool:
     def set_device_state(self, state: dict):
         self.k, self.v = state["k"], state["v"]
         self.lengths_dev = state["lengths"]
+
+    def block_tables_dev(self) -> jnp.ndarray:
+        return jnp.asarray(self.block_tables)

@@ -14,6 +14,18 @@ class SampleConfig:
     top_p: float = 1.0             # 1 -> off
 
 
+def last_valid_hidden(x: jnp.ndarray, q_lens: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, D) chunk hidden states; q_lens: (B,) valid lanes per slot.
+
+    Returns (B, D) — each slot's hidden state at its LAST valid chunk
+    position, the only position whose logits the mixed-batch step needs
+    (mid-prompt positions never sample, so evaluating lm_head anywhere else
+    is wasted vocab-sized work). Idle slots (q_lens == 0) clamp to lane 0;
+    their sample is discarded by the control plane."""
+    idx = jnp.maximum(jnp.asarray(q_lens, jnp.int32) - 1, 0)
+    return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+
+
 def sample(logits: jnp.ndarray, key, cfg: SampleConfig) -> jnp.ndarray:
     """logits: (B, V) -> (B,) int32."""
     if cfg.temperature <= 0.0:

@@ -1,6 +1,7 @@
-"""Compiled serving path: the jitted scan-over-layers decode step must be
-token-identical to the eager reference, stay at ONE trace across slot churn,
-and honor per-slot decode positions (the seed `positions[:1]` bug)."""
+"""Compiled serving path: the jitted mixed-batch (chunked prefill + decode)
+step must be token-identical to the eager reference, stay at ONE trace
+across slot churn / chunked prefills / oversubscribed admission, and honor
+per-slot decode positions (the seed `positions[:1]` bug)."""
 from __future__ import annotations
 
 import jax
@@ -9,6 +10,7 @@ import pytest
 
 from repro.configs.paper_models import OPT_TINY
 from repro.core.erdpe import ExecMode
+from repro.core.scheduler import AdmissionConfig
 from repro.models import dense
 from repro.serving.engine import Engine
 
@@ -26,11 +28,12 @@ def _engine(params, compiled, **kw):
 
 def test_jitted_matches_eager_heterogeneous_batch(params):
     """Token-for-token identity on a two-slot continuous batch with
-    different prompt lengths (greedy, fixed seed)."""
+    different prompt lengths — one long enough to prefill in chunks
+    (greedy, fixed seed)."""
     outs = {}
     for compiled in (False, True):
         eng = _engine(params, compiled)
-        r1 = eng.submit([1, 2, 3, 4, 5, 6, 7], max_new=8)
+        r1 = eng.submit(list(range(1, 30)), max_new=8)   # 29 tokens: 2 chunks
         r2 = eng.submit([9, 8], max_new=8)
         res = eng.run()
         outs[compiled] = (res[r1], res[r2])
@@ -67,6 +70,44 @@ def test_single_trace_across_slot_churn(params):
     out = eng.run()
     assert len(out[r2]) == 12 and len(out[r3]) == 4
     assert eng.step_traces == 1, "slot churn retraced the decode step"
+
+
+def test_single_trace_mixed_workload(params):
+    """Acceptance (ISSUE 2): a workload mixing prompt lengths, chunked
+    prefills, slot churn, AND oversubscribed admission replays exactly one
+    compiled trace."""
+    eng = _engine(params, True,
+                  admission_cfg=AdmissionConfig(chunk_tokens=8,
+                                                token_budget=16))
+    prompts = [[7], list(range(1, 9)), list(range(1, 21)),
+               list(range(1, 30)), [3, 1, 4]]              # 5 reqs, 2 slots
+    rids = [eng.submit(p, max_new=4 + i) for i, p in enumerate(prompts)]
+    out = eng.run()
+    assert [len(out[r]) for r in rids] == [4, 5, 6, 7, 8]
+    assert eng.step_traces == 1, "mixed workload retraced the serving step"
+    # chunked prefill actually happened (20/29-token prompts, 8-wide chunks)
+    assert any(s["prefill_tokens"] and s["decode_tokens"] for s in eng.stats)
+
+
+def test_decode_continues_during_prefill(params):
+    """Chunked prefill must not block concurrent decoders: while a long
+    prompt prefills over several steps, an already-decoding slot keeps
+    producing a token every step."""
+    eng = _engine(params, True,
+                  admission_cfg=AdmissionConfig(chunk_tokens=8,
+                                                token_budget=16))
+    r1 = eng.submit([5, 6], max_new=40)
+    for _ in range(3):
+        eng.step()                                 # r1 is decoding now
+    before = len(eng.requests[r1].out)
+    r2 = eng.submit(list(range(1, 41)), max_new=4)  # 40 tokens: 5 chunks
+    prefill_steps = 0
+    while eng.requests[r2].prefilling:
+        eng.step()
+        prefill_steps += 1
+    assert prefill_steps >= 5
+    gained = len(eng.requests[r1].out) - before
+    assert gained >= prefill_steps, "decode stalled behind a prefill"
 
 
 def test_realloc_matches_eager(params):
@@ -108,6 +149,34 @@ def test_device_lengths_track_host_mirror(params):
                                   eng.pool.lengths)
 
 
+def test_padding_lanes_never_poison_the_pool():
+    """Regression: a request decoding near the position-table boundary puts
+    PADDING lanes past the table; an out-of-bounds jnp.take fills NaN under
+    jit, and 0*NaN products in the intra-chunk term would poison valid
+    lanes. The step must steer padding lanes to a safe table row."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    cfg = dc.replace(OPT_TINY, max_seq=64)       # learned-position table: 64
+    p = dense.init(cfg, jax.random.PRNGKey(1))
+    eng = Engine(cfg, p, max_slots=2, max_seq=64, rber=0.0, compiled=True)
+    rid = eng.submit(list(range(1, 41)), max_new=25)   # needs all 64 rows
+    out = eng.run()[rid]
+    assert len(out) == 25
+    # every real (non-dump) pool block must stay finite: pre-fix, the NaN
+    # embeddings of padding lanes reached valid lanes' attention outputs
+    # (0 * NaN in the intra-chunk PV product) and were scattered into the
+    # pool. (Exact token parity across DIFFERENT chunk widths is not
+    # asserted — reordering the f32 accumulation can flip a near-tie
+    # greedy argmax.)
+    real = jnp.arange(1, eng.pool.n_blocks)
+    assert not bool(jnp.any(jnp.isnan(
+        eng.pool.k[:, real].astype(jnp.float32))))
+    assert not bool(jnp.any(jnp.isnan(
+        eng.pool.v[:, real].astype(jnp.float32))))
+
+
 def test_submit_rejects_over_capacity(params):
     """Admission control: a request whose KV footprint exceeds max_seq must
     be rejected up front (the in-graph scatter would silently drop rows)."""
@@ -115,3 +184,39 @@ def test_submit_rejects_over_capacity(params):
     with pytest.raises(ValueError, match="max_seq"):
         eng.submit([1, 2, 3, 4], max_new=14)      # needs 17 rows > 16
     eng.submit([1, 2, 3, 4], max_new=13)          # exactly 16 rows: admitted
+
+
+def test_submit_cap_is_exact_max_seq_not_block_rounded(params):
+    """Regression: with max_seq not a multiple of block_size, the cap must
+    stay the EXACT max_seq — rounding up to block granularity would admit
+    valid lanes past the learned-position table (NaN fill under jit)."""
+    eng = _engine(params, True, max_seq=60)       # table cap: 4 blocks = 64
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(list(range(1, 41)), max_new=25)   # 64 rows > 60
+    eng.submit(list(range(1, 41)), max_new=21)        # 60 rows: admitted
+
+
+def test_submit_caps_at_learned_position_table(params):
+    """Regression: a pool sized past the learned-position table must not
+    admit requests whose VALID lanes would jnp.take past the table (NaN
+    fill under jit — unreachable by the padding-lane steering)."""
+    import dataclasses as dc
+    cfg = dc.replace(OPT_TINY, max_seq=32)        # 32-row pos_embed table
+    p = dense.init(cfg, jax.random.PRNGKey(2))
+    eng = Engine(cfg, p, max_slots=2, max_seq=64, rber=0.0)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(list(range(1, 30)), max_new=5)     # 33 rows > 32-row table
+    rid = eng.submit(list(range(1, 30)), max_new=4)   # 32 rows: admitted
+    assert len(eng.run()[rid]) == 4
+
+
+def test_submit_rejects_degenerate_requests(params):
+    """Empty prompts would crash the decode lane (no token to feed) and
+    max_new=0 would still sample one token past its bound — both are
+    API-contract errors, rejected at submit."""
+    eng = _engine(params, True, max_seq=64)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([], max_new=4)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit([1, 2, 3], max_new=0)
+    assert not eng.requests and not eng.waiting   # nothing half-registered
