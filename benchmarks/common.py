@@ -2,6 +2,9 @@
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import time
 
 
 @dataclasses.dataclass
@@ -44,3 +47,31 @@ class Report:
     @property
     def ok(self) -> bool:
         return all(c.ok for c in self.checks)
+
+
+def bench_json_path() -> str:
+    """Where the serving benchmarks accumulate machine-readable results
+    (override with REPRO_BENCH_JSON; CI uploads it as an artifact)."""
+    return os.environ.get(
+        "REPRO_BENCH_JSON",
+        os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "BENCH_serve.json"))
+
+
+def write_bench_json(section: str, payload: dict) -> str:
+    """Merge one benchmark's results into BENCH_serve.json under
+    ``section`` so the perf trajectory is tracked across PRs. Values must
+    be JSON-serializable (cast numpy scalars first)."""
+    path = bench_json_path()
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            data = {}
+    data[section] = {**payload, "unix_time": int(time.time())}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True, default=float)
+        f.write("\n")
+    return path

@@ -45,11 +45,11 @@ def _kernel_bench() -> str:
 
 def main() -> None:
     from benchmarks import (fig6_throughput, fig7_latency, fig8_energy,
-                            serve_decode, serve_mixed, table2_area,
-                            table3_scaling)
+                            serve_decode, serve_mixed, serve_stream,
+                            table2_area, table3_scaling)
     reports = []
     for mod in (fig6_throughput, fig7_latency, fig8_energy, table2_area,
-                table3_scaling, serve_decode, serve_mixed):
+                table3_scaling, serve_decode, serve_mixed, serve_stream):
         rep = mod.run()
         reports.append(rep)
         print(rep.render())

@@ -22,7 +22,7 @@ if __package__ in (None, ""):                            # direct invocation
 import jax
 import numpy as np
 
-from benchmarks.common import Report
+from benchmarks.common import Report, write_bench_json
 from repro.configs.base import ArchConfig
 from repro.models import dense
 from repro.serving.engine import Engine
@@ -76,6 +76,12 @@ def run() -> Report:
     rep.add("jitted/eager steady-state decode speedup (>= 3x)",
             speedup, 3.0, float("inf"))
     rep.add("compiled step traced exactly once", jitted["traces"], 1, 1)
+    write_bench_json("serve_decode", {
+        "eager_tps": eager["tps"], "jitted_tps": jitted["tps"],
+        "eager_ms_per_step": eager["ms_per_step"],
+        "jitted_ms_per_step": jitted["ms_per_step"],
+        "speedup": speedup, "traces": jitted["traces"],
+    })
     return rep
 
 

@@ -30,7 +30,7 @@ if __package__ in (None, ""):                            # direct invocation
 import jax
 import numpy as np
 
-from benchmarks.common import Report
+from benchmarks.common import Report, write_bench_json
 from benchmarks.serve_decode import SERVE_BENCH
 from repro.core.scheduler import AdmissionConfig
 from repro.models import dense
@@ -153,6 +153,17 @@ def run() -> Report:
     rep.add("arrival phase traced exactly once", cont["traces"], 1, 1)
     rep.add("O(1) releases (no device copy; guard ran per completion)",
             cont["releases"], N_REQUESTS, N_REQUESTS)
+    write_bench_json("serve_mixed", {
+        "processed_tps": cont["processed_tps"],
+        "produced_tps": cont["produced_tps"],
+        "ttft_mean_steps": cont["ttft_mean"],
+        "ttft_max_steps": cont["ttft_max"],
+        "interleave_ttft_s": inter["ttft_s"],
+        "decoded_during_prefill": inter["decoded_during_prefill"],
+        "prefill_tokens": cont["prefill_tokens"],
+        "decode_tokens": cont["decode_tokens"],
+        "traces": cont["traces"],
+    })
     return rep
 
 

@@ -31,10 +31,15 @@ class ExecMode(str, enum.Enum):
 # time). On TPU the flash tier lives in HBM whose reads are clean, so the
 # hardware-adapted mode is "load" — correct once when weights are uploaded
 # (deploy/restore), then serve on raw int8 (EXPERIMENTS.md §Perf: 77x less
-# decode HBM traffic). Toggle via env REPRO_SERVE_ECC=inline|load.
+# decode HBM traffic). Toggle via env REPRO_SERVE_ECC=inline|load, read
+# LATE (at call time): freezing it at import broke per-run toggling in
+# tests/benchmarks that set the env after `import repro`.
 import os as _os
 
-SERVE_ECC = _os.environ.get("REPRO_SERVE_ECC", "inline")
+
+def serve_ecc_mode() -> str:
+    """Current serve-time ECC policy ("inline" | "load"), late-binding."""
+    return _os.environ.get("REPRO_SERVE_ECC", "inline")
 
 
 def flash_matmul(
@@ -76,6 +81,6 @@ def maybe_flash_matmul(
     """Dispatch on tier: FlashWeight -> ERDPE; plain array -> bf16 matmul."""
     if isinstance(w, FlashWeight):
         if ecc_enabled is None:
-            ecc_enabled = SERVE_ECC == "inline"
+            ecc_enabled = serve_ecc_mode() == "inline"
         return flash_matmul(x, w, mode=mode, ecc_enabled=ecc_enabled, out_dtype=out_dtype)
     return jnp.dot(x, w.astype(x.dtype)).astype(out_dtype)

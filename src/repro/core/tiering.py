@@ -110,11 +110,21 @@ def deploy(
     rber: float = 0.0,
     seed: int = 0,
     predicate: Callable[[str, jnp.ndarray], bool] | None = None,
+    store: Any = None,
 ) -> tuple[Any, dict[str, str]]:
     """Convert a param pytree to tiered NVLLM deployment form.
 
     Returns (tiered_params, tier_map). Flash-tier leaves become FlashWeight;
     DRAM-tier leaves are cast to bf16.
+
+    ``store`` (a ``repro.store.pagestore.PageStore``) redirects the flash
+    tier into a HOST-RESIDENT page store instead of device arrays: each
+    flash leaf is encoded exactly as in the device path (same quant, parity,
+    RBER seed derivation) but then serialized into 16 KiB plane-interleaved
+    pages, and the returned pytree carries a lightweight ``StoreRef``
+    placeholder in its place. This is the paper's deployment shape — FFN
+    weights live in the NAND array, never in DRAM (§3.5) — and what the
+    streamed serving engine consumes.
     """
     tier_map: dict[str, str] = {}
 
@@ -130,9 +140,12 @@ def deploy(
             # process (PYTHONHASHSEED), which made the injected bit-error
             # positions — and thus every rber>0 engine — nondeterministic
             # across runs despite the documented "deterministic in seed".
-            return encode_flash(leaf,
-                                rber=rber,
-                                seed=seed + zlib.crc32(p.encode()) % (2**31))
+            fw = encode_flash(leaf,
+                              rber=rber,
+                              seed=seed + zlib.crc32(p.encode()) % (2**31))
+            if store is not None:
+                return store.put_param(p, fw)
+            return fw
         return leaf.astype(jnp.bfloat16)
 
     tiered = jax.tree_util.tree_map_with_path(convert, params)
@@ -140,13 +153,17 @@ def deploy(
 
 
 def flash_bytes(tiered: Any) -> tuple[int, int]:
-    """(flash_tier_bytes, dram_tier_bytes) of a deployed pytree."""
+    """(flash_tier_bytes, dram_tier_bytes) of a deployed pytree. Handles
+    both deployment shapes: device-resident FlashWeight leaves and
+    store-resident StoreRef placeholders (``deploy(store=...)``)."""
     fb = db = 0
     for leaf in jax.tree_util.tree_leaves(
         tiered, is_leaf=lambda x: isinstance(x, FlashWeight)
     ):
         if isinstance(leaf, FlashWeight):
             fb += leaf.nbytes()
+        elif getattr(leaf, "is_store_ref", False):
+            fb += leaf.nbytes
         else:
             db += leaf.size * leaf.dtype.itemsize
     return fb, db

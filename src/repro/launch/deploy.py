@@ -8,6 +8,13 @@ DRAM at init; FFN weights quantized INT8, ECC-encoded, page-laid-out in
 NAND). Programming is write-once — endurance-friendly (§2.2). ``--rber``
 injects raw-NAND bit errors into the stored codewords so the serving path
 exercises the ERDPE correction machinery end to end.
+
+``--store nand.img`` programs the flash tier into an actual page-granular
+die image (16 KiB plane-interleaved pages + JSON page table, DESIGN.md §7;
+``PageStore.open`` mmaps it back bit-exactly) and checkpoints only the
+DRAM tier next to it. Serving straight off a persisted image (instead of
+re-programming a fresh store from params, as ``serve --stream`` does
+today) is the restore flow tracked in ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ from repro.models import family_module
 
 
 def run_deploy(arch: str, smoke: bool, ckpt_dir: str | None, out_dir: str,
-               rber: float = 0.0, seed: int = 0) -> dict:
+               rber: float = 0.0, seed: int = 0,
+               store_path: str | None = None) -> dict:
     cfg = get_config(arch, smoke=smoke)
     mod = family_module(cfg.family)
     params = mod.init(cfg, jax.random.PRNGKey(seed))
@@ -36,11 +44,24 @@ def run_deploy(arch: str, smoke: bool, ckpt_dir: str | None, out_dir: str,
             (params, _), _ = mgr.restore((params, opt_template))
         except Exception:
             params, _ = mgr.restore(params)
-    tiered, tier_map = deploy(params, rber=rber, seed=seed)
+    store = None
+    if store_path is not None:
+        from repro.store import PageStore
+        store = PageStore()
+    tiered, tier_map = deploy(params, rber=rber, seed=seed, store=store)
     fb, db = flash_bytes(tiered)
     out = CheckpointManager(out_dir, keep=1)
-    out.save(0, tiered, {"arch": arch, "rber": rber,
-                         "flash_bytes": fb, "dram_bytes": db})
+    if store is not None:
+        # flash tier -> the page-granular NAND die image (mmap'able at
+        # serve time); the checkpoint keeps only the DRAM tier.
+        from repro.store import drop_store_refs
+        store.save(store_path)
+        out.save(0, drop_store_refs(tiered),
+                 {"arch": arch, "rber": rber, "flash_bytes": fb,
+                  "dram_bytes": db, "store": store_path})
+    else:
+        out.save(0, tiered, {"arch": arch, "rber": rber,
+                             "flash_bytes": fb, "dram_bytes": db})
     n_flash = sum(1 for t in tier_map.values() if t == "flash")
     stats = {
         "arch": arch,
@@ -50,6 +71,8 @@ def run_deploy(arch: str, smoke: bool, ckpt_dir: str | None, out_dir: str,
         "dram_leaves": len(tier_map) - n_flash,
         "flash_fraction": fb / max(fb + db, 1),
     }
+    if store is not None:
+        stats["store"] = {"path": store_path, **store.stats()}
     print(json.dumps(stats, indent=1))
     return stats
 
@@ -61,8 +84,13 @@ def main():
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--out", required=True)
     ap.add_argument("--rber", type=float, default=0.0)
+    ap.add_argument("--store", default=None, metavar="IMAGE",
+                    help="serialize the flash tier into a page-granular "
+                         "NAND die image (+ .meta.json page table) instead "
+                         "of checkpointing it as device arrays")
     args = ap.parse_args()
-    run_deploy(args.arch, args.smoke, args.ckpt, args.out, args.rber)
+    run_deploy(args.arch, args.smoke, args.ckpt, args.out, args.rber,
+               store_path=args.store)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,10 @@
 Deploys the model into the tiered INT8+ECC form, spins the engine with a
 stream of synthetic requests, and reports tokens/s plus the KV-cache-aware
 scheduler trace (NPU fraction over time).
+
+``--stream [--device-budget-mib N]`` keeps the flash tier HOST-resident in
+the FlashStore page store and streams it under compute per layer group —
+serving models whose flash tier exceeds device weight memory (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -24,16 +28,29 @@ from repro.serving.sampler import SampleConfig
 
 def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
           max_new: int = 12, rber: float = 0.0, seed: int = 0,
-          kv_aware: bool = True) -> dict:
+          kv_aware: bool = True, stream: bool = False,
+          device_budget_mib: float | None = None,
+          group_size: int = 1) -> dict:
     cfg = OPT_TINY if arch == "opt-tiny" else get_config(arch, smoke=smoke)
     if cfg.family != "dense":
         raise SystemExit("engine serves dense-family archs "
                          "(the paper's OPT/LLaMA models)")
     mod = family_module(cfg.family)
     params = mod.init(cfg, jax.random.PRNGKey(seed))
+    store = stream_cfg = None
+    if stream:
+        # flash tier host-resident in the page store, streamed per layer
+        # group under a device weight budget (DESIGN.md §7)
+        from repro.store import PageStore, StreamConfig
+        store = PageStore()
+        budget = (None if device_budget_mib is None
+                  else int(device_budget_mib * 2**20))
+        stream_cfg = StreamConfig(device_budget_bytes=budget,
+                                  group_size=group_size)
     eng = Engine(cfg, params, max_slots=4, max_seq=256, rber=rber,
                  sample_cfg=SampleConfig(temperature=0.8, top_k=40),
-                 kv_aware=kv_aware, seed=seed)
+                 kv_aware=kv_aware, seed=seed,
+                 weight_store=store, stream_cfg=stream_cfg)
     rng = np.random.default_rng(seed)
     # submit enqueues: the whole burst goes in up front and the engine's
     # waiting->running queue admits as slots/blocks free up (no host-side
@@ -55,12 +72,15 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
     # "tokens"/"tps" stay GENERATED tokens (comparable with PR 1 /
     # serve_decode.py numbers); processed counts every prompt lane too.
     n_generated = sum(len(o) for o in outs.values())
-    return {"outputs": outs, "tokens": n_generated, "seconds": dt,
-            "tps": n_generated / max(dt, 1e-9),
-            "processed": n_processed,
-            "processed_tps": n_processed / max(dt, 1e-9),
-            "stats": eng.stats,
-            "ttft_steps": first_tok, "traces": eng.step_traces}
+    out = {"outputs": outs, "tokens": n_generated, "seconds": dt,
+           "tps": n_generated / max(dt, 1e-9),
+           "processed": n_processed,
+           "processed_tps": n_processed / max(dt, 1e-9),
+           "stats": eng.stats,
+           "ttft_steps": first_tok, "traces": eng.step_traces}
+    if stream:
+        out["stream"] = eng.stream_stats()
+    return out
 
 
 def main():
@@ -71,13 +91,32 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--rber", type=float, default=1e-4)
     ap.add_argument("--no-kv-aware", dest="kv_aware", action="store_false")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve the flash tier from a host-resident page "
+                         "store, streamed per layer group")
+    ap.add_argument("--device-budget-mib", type=float, default=None,
+                    help="device weight budget for --stream (window + "
+                         "residency cache); default unbounded")
+    ap.add_argument("--group-size", type=int, default=1,
+                    help="layers per streamed group (--stream)")
     args = ap.parse_args()
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
-                max_new=args.max_new, rber=args.rber, kv_aware=args.kv_aware)
+                max_new=args.max_new, rber=args.rber, kv_aware=args.kv_aware,
+                stream=args.stream,
+                device_budget_mib=args.device_budget_mib,
+                group_size=args.group_size)
     print(f"served {len(out['outputs'])} requests, {out['tokens']} generated "
           f"tokens in {out['seconds']:.1f}s ({out['tps']:.1f} generated "
           f"tok/s, {out['processed_tps']:.1f} processed tok/s on CPU), "
           f"step traces={out['traces']}")
+    if args.stream:
+        st = out["stream"]
+        print(f"streamed {st['bytes_streamed']/2**20:.1f} MiB "
+              f"(stall {st['stall_s']*1e3:.0f} ms / stream "
+              f"{st['stream_s']*1e3:.0f} ms), cache {st['cache_hits']} hits "
+              f"/ {st['cache_misses']} misses, {st['pages_read']} page reads "
+              f"over {st['planes']} planes -> "
+              f"{st['nand_seconds']*1e3:.2f} ms analytical NAND time")
     tt = sorted(out["ttft_steps"].values())
     print(f"TTFT (steps to first token) per request: {tt}")
     fr = [s["npu_fraction"] for s in out["stats"]]

@@ -51,7 +51,7 @@ import numpy as np
 
 from repro.core import scheduler as sched
 from repro.core.erdpe import ExecMode, flash_matmul
-from repro.core.tiering import deploy, encode_flash
+from repro.core.tiering import FlashWeight, deploy, encode_flash
 from repro.models import common as cm
 from repro.models import dense
 from repro.serving.kvcache import PagedKVPool
@@ -132,31 +132,12 @@ def _chunk_layer(cfg, exec_mode, bitmap, lengths, positions, block_tables,
     return x, (k, v)
 
 
-def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
-               params, attn_flash, state, tokens, q_lens, admitted,
-               block_tables, key):
-    """One mixed prefill/decode step for ALL pool slots — the data plane.
+def _embed_chunk(cfg, params, lengths, tokens, q_lens):
+    """Token embedding + lane bookkeeping — the head of the serving step,
+    shared by the monolithic and streamed data planes.
 
-    state  : {"k","v": (L, n_blocks, block_size, KV, Dh),
-              "lengths": (slots,) i32, "bitmap": (H,) i32,
-              "prev_cycles": i32} — donated when jitted.
-    tokens : (slots, T) i32 chunk lanes per slot (don't-care past q_lens).
-    q_lens : (slots,) i32 valid lanes per slot (0 = no work this step).
-    admitted : (slots,) bool — slot holds a live request (it may still get
-             0 lanes when the token budget starves it; its cached KV must
-             keep counting toward Algorithm 2's kv_len).
-    block_tables : (slots, max_blocks) i32; entry 0 = unmapped/dump.
-
-    Returns (sampled (slots,) i32, new state, stats scalars). Everything —
-    layer scan, paged attention, paged KV scatter, length bump, Algorithm 2,
-    last-lane sampling — is one graph; idle slots compute garbage that is
-    steered into the reserved dump block, so slot churn, ragged chunks, and
-    admission churn never change shapes or retrace.
-    """
-    n_slots, t_chunk = tokens.shape
-    lengths = state["lengths"]
-    bitmap = state["bitmap"] if kv_aware else None
-    worked = q_lens > 0
+    Returns (x, positions, ctx_lens) for the (slots, T) chunk batch."""
+    t_chunk = tokens.shape[1]
     # absolute position of each chunk lane: cached context + lane offset
     lane = jnp.arange(t_chunk)[None, :]
     positions = lengths[:, None] + lane
@@ -173,35 +154,31 @@ def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
     # slots with no lanes this step keep stale/irrelevant lengths (O(1)
     # release never writes the device array); zero their attention context
     # so the paged kernel's dead-block skip holds — no valid query reads it.
-    ctx_lens = jnp.where(worked, lengths, 0)
-    body = functools.partial(_chunk_layer, cfg, exec_mode, bitmap, ctx_lens,
-                             positions, block_tables)
-    xs = (params["layers"], attn_flash, state["k"], state["v"])
-    if unroll:
-        # eager reference: interpreted Python loop over layers (seed-style)
-        ks, vs = [], []
-        for li in range(cfg.n_layers):
-            x, (kl, vl) = body(x, jax.tree.map(lambda a: a[li], xs))
-            ks.append(kl)
-            vs.append(vl)
-        k_new, v_new = jnp.stack(ks), jnp.stack(vs)   # (L, slots, T, KV, Dh)
-    else:
-        x, (k_new, v_new) = jax.lax.scan(body, x, xs)
+    ctx_lens = jnp.where(q_lens > 0, lengths, 0)
+    return x, positions, ctx_lens
 
+
+def _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, final_norm, lm_head,
+                 state, x, k_new, v_new, q_lens, admitted, positions,
+                 block_tables, key):
+    """Everything after the layer stack — final norm, last-lane sampling,
+    ONE batched paged KV scatter, in-graph Algorithm 2 — shared by the
+    monolithic and streamed data planes."""
+    lengths = state["lengths"]
     if cfg.norm_type == "rms":
-        x = cm.rms_norm(x, params["final_norm"])
+        x = cm.rms_norm(x, final_norm)
     else:
-        x = cm.layer_norm(x, params["final_norm"]["g"],
-                          params["final_norm"]["b"])
+        x = cm.layer_norm(x, final_norm["g"], final_norm["b"])
     # lm_head ONLY at each slot's last valid lane — mid-prompt positions
     # never sample, so the (T-1) other vocab projections are skipped.
     x_last = last_valid_hidden(x, q_lens)
-    logits = flash_matmul(x_last, params["lm_head"], out_dtype=jnp.float32)
+    logits = flash_matmul(x_last, lm_head, out_dtype=jnp.float32)
     toks = sample(logits, key, sample_cfg)
 
     # --- paged KV scatter: ONE batched write for all layers/slots/lanes ------
     block_size = state["k"].shape[2]
     max_blocks = block_tables.shape[1]
+    lane = jnp.arange(positions.shape[1])[None, :]
     pos = positions                                      # (slots, T)
     valid = lane < q_lens[:, None]
     blk_idx = jnp.clip(pos // block_size, 0, max_blocks - 1)
@@ -228,6 +205,80 @@ def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
     return toks, new_state, stats
 
 
+def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
+               params, attn_flash, state, tokens, q_lens, admitted,
+               block_tables, key):
+    """One mixed prefill/decode step for ALL pool slots — the data plane.
+
+    state  : {"k","v": (L, n_blocks, block_size, KV, Dh),
+              "lengths": (slots,) i32, "bitmap": (H,) i32,
+              "prev_cycles": i32} — donated when jitted.
+    tokens : (slots, T) i32 chunk lanes per slot (don't-care past q_lens).
+    q_lens : (slots,) i32 valid lanes per slot (0 = no work this step).
+    admitted : (slots,) bool — slot holds a live request (it may still get
+             0 lanes when the token budget starves it; its cached KV must
+             keep counting toward Algorithm 2's kv_len).
+    block_tables : (slots, max_blocks) i32; entry 0 = unmapped/dump.
+
+    Returns (sampled (slots,) i32, new state, stats scalars). Everything —
+    layer scan, paged attention, paged KV scatter, length bump, Algorithm 2,
+    last-lane sampling — is one graph; idle slots compute garbage that is
+    steered into the reserved dump block, so slot churn, ragged chunks, and
+    admission churn never change shapes or retrace.
+    """
+    bitmap = state["bitmap"] if kv_aware else None
+    x, positions, ctx_lens = _embed_chunk(cfg, params, state["lengths"],
+                                          tokens, q_lens)
+    body = functools.partial(_chunk_layer, cfg, exec_mode, bitmap, ctx_lens,
+                             positions, block_tables)
+    xs = (params["layers"], attn_flash, state["k"], state["v"])
+    if unroll:
+        # eager reference: interpreted Python loop over layers (seed-style)
+        ks, vs = [], []
+        for li in range(cfg.n_layers):
+            x, (kl, vl) = body(x, jax.tree.map(lambda a: a[li], xs))
+            ks.append(kl)
+            vs.append(vl)
+        k_new, v_new = jnp.stack(ks), jnp.stack(vs)   # (L, slots, T, KV, Dh)
+    else:
+        x, (k_new, v_new) = jax.lax.scan(body, x, xs)
+
+    return _finish_step(cfg, sched_cfg, sample_cfg, kv_aware,
+                        params["final_norm"], params["lm_head"], state, x,
+                        k_new, v_new, q_lens, admitted, positions,
+                        block_tables, key)
+
+
+def _stream_group_impl(cfg, exec_mode, kv_aware, group_size, layers_dram,
+                       window, k_pool, v_pool, x, positions, ctx_lens,
+                       block_tables, bitmap, lo):
+    """One STREAMED layer group — the same per-layer math as the monolithic
+    step's scan, but the flash-tier params arrive through ``window`` (the
+    rotating device buffer the LayerStreamer fills from the PageStore)
+    instead of living resident. ``lo`` — the group's first layer — is a
+    traced scalar, so every group of every step replays ONE trace."""
+    bm = bitmap if kv_aware else None
+
+    def sl(a):
+        return jax.lax.dynamic_slice_in_dim(a, lo, group_size, axis=0)
+
+    lp_g = jax.tree.map(sl, layers_dram)
+    kc, vc = sl(k_pool), sl(v_pool)
+
+    def body(x, layer):
+        lp_d, fl_ffn, fl_attn, kcl, vcl = layer
+        # graft the streamed flash FFN weights into the DRAM layer params:
+        # the merged dict is exactly what the resident scan sees.
+        lp = dict(lp_d)
+        lp["ffn"] = {**lp.get("ffn", {}), **fl_ffn}
+        return _chunk_layer(cfg, exec_mode, bm, ctx_lens, positions,
+                            block_tables, x, (lp, fl_attn, kcl, vcl))
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (lp_g, window["ffn"], window["attn"], kc, vc))
+    return x, k_new, v_new
+
+
 class Engine:
     """cfg must be a dense-family ArchConfig (the paper's model families).
 
@@ -246,18 +297,35 @@ class Engine:
                  kv_aware: bool = True, rber: float = 0.0, seed: int = 0,
                  compiled: bool = True, exec_mode: ExecMode = ExecMode.XLA,
                  block_size: int = 16, n_blocks: int | None = None,
-                 admission_cfg: sched.AdmissionConfig | None = None):
+                 admission_cfg: sched.AdmissionConfig | None = None,
+                 weight_store=None, stream_cfg=None):
         assert cfg.family == "dense"
         self.cfg = cfg
         self.sample_cfg = sample_cfg
         self.kv_aware = kv_aware
         self.compiled = compiled
         self.admission_cfg = admission_cfg or sched.AdmissionConfig()
+        self.store = weight_store
+        self.streamed = weight_store is not None
+        if self.streamed and not compiled:
+            raise ValueError("streamed mode runs through the compiled data "
+                             "plane (compiled=False has no layer groups)")
         # DRAM tier: bf16 attention weights (copied once at init, §3.5);
         # flash tier: INT8+ECC FFN / lm_head AND a flash copy of Q/K/V/O so
         # the bitmap can offload projection columns to the in-flash engine.
-        self.params, self.tier_map = deploy(params, rber=rber, seed=seed)
-        self.attn_flash = self._flash_attn_copy(params, rber, seed)
+        # With a ``weight_store`` the flash tier is serialized into the
+        # host-resident PageStore instead (its leaves become StoreRefs) and
+        # streamed under compute per layer group (DESIGN.md §7).
+        self.params, self.tier_map = deploy(params, rber=rber, seed=seed,
+                                            store=weight_store)
+        if self.streamed:
+            from repro.store.streamer import StreamConfig
+            self.stream_cfg = stream_cfg or StreamConfig()
+            self.attn_flash = None
+            self._init_streamed(params, rber, seed)
+        else:
+            self.stream_cfg = None
+            self.attn_flash = self._flash_attn_copy(params, rber, seed)
         h = sched_cfg.h if sched_cfg else 32
         while cfg.n_heads * cfg.head_dim % h:
             h //= 2
@@ -278,7 +346,9 @@ class Engine:
             _step_impl, cfg, self.sched_cfg, sample_cfg, kv_aware,
             exec_mode, not compiled)
         self._trace_count = 0
-        if compiled:
+        if self.streamed:
+            self._build_stream_fns(exec_mode)
+        elif compiled:
             def counted(params, attn_flash, state, tokens, q_lens,
                         admitted, block_tables, key):
                 # Python body only runs while jax traces; compiled replays
@@ -306,6 +376,173 @@ class Engine:
             for li in range(n_l)
         ]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+    # --- streamed mode (FlashStore weight tier, DESIGN.md §7) -----------------
+
+    _ATTN_FLASH_KEYS = ("wq", "wk", "wv", "wo")
+
+    def _init_streamed(self, raw_params, rber, seed):
+        """Flash tier lives in the PageStore: program the per-layer attn
+        flash copies next to deploy()'s FFN/lm_head entries, split the DRAM
+        remainder out of the tiered pytree, and stand up the residency
+        cache + layer streamer under the device weight budget."""
+        from repro.store.pagestore import StoreRef, drop_store_refs
+        from repro.store.streamer import LayerStreamer, ResidencyCache
+
+        cfg, sc = self.cfg, self.stream_cfg
+        if cfg.n_layers % sc.group_size:
+            raise ValueError(f"group_size={sc.group_size} must divide "
+                             f"n_layers={cfg.n_layers}")
+        # per-layer flash Q/K/V/O copies, same seed derivation as the
+        # resident engine's _flash_attn_copy (numerically identical tiers)
+        layers = raw_params["layers"]["attn"]
+        for li in range(cfg.n_layers):
+            for k in self._ATTN_FLASH_KEYS:
+                self.store.put(
+                    f"attn_flash/{k}@{li}",
+                    encode_flash(layers[k][li], rber=rber, seed=seed + li))
+        self._ffn_refs = {k: v for k, v in self.params["layers"]["ffn"].items()
+                          if isinstance(v, StoreRef)}
+        stray = [p for p, t in self.tier_map.items()
+                 if t == "flash" and p != "lm_head"
+                 and not p.startswith("layers/ffn/")]
+        if stray:
+            raise ValueError("streamed mode expects the dense flash layout "
+                             f"(layers/ffn/* + lm_head); stray flash leaves "
+                             f"would silently never be fetched: {stray}")
+        # DRAM-resident halves of the tiered pytree, fed to the jitted fns
+        self._layers_dram = drop_store_refs(self.params["layers"])
+        self._dram_params = {k: self.params[k]
+                             for k in ("embed", "pos_embed", "final_norm")
+                             if k in self.params}
+        self.n_groups = cfg.n_layers // sc.group_size
+
+        group_bytes = max(
+            sum(self.store.entry_nbytes(n) for n in self._group_entries(g))
+            for g in range(self.n_groups))
+        lm_bytes = self.store.entry_nbytes("lm_head")
+        # the rotating window holds up to prefetch_depth groups in flight;
+        # whatever budget remains is residency-cache capacity.
+        window_bytes = sc.prefetch_depth * group_bytes
+        if sc.device_budget_bytes is None or sc.pin_all:
+            cache_cap = None
+        else:
+            cache_cap = sc.device_budget_bytes - window_bytes
+            if cache_cap < lm_bytes:
+                raise ValueError(
+                    f"device_budget_bytes={sc.device_budget_bytes} cannot "
+                    f"hold {sc.prefetch_depth} prefetch windows "
+                    f"({window_bytes}B) + pinned lm_head ({lm_bytes}B)")
+        self.cache = ResidencyCache(cache_cap)
+        self.streamer = LayerStreamer(self.n_groups, self._fetch_group,
+                                      self.cache, sc.prefetch_depth)
+        # hot pins: lm_head is read EVERY step (sampling); first/last layer
+        # groups bound the stream's cold start and tail when they fit.
+        self._lm_head = self.store.get("lm_head")
+        self.cache.insert("lm_head", self._lm_head, lm_bytes, pin=True)
+        if sc.pin_all:
+            for g in range(self.n_groups):
+                self.streamer.pin(g)
+        elif sc.pin_edges:
+            for g in dict.fromkeys((0, self.n_groups - 1)):
+                self.streamer.pin(g)
+        # init-time reads (lm_head fetch, pinned-group fetches) are
+        # deployment, not serving: start the NAND/page accounting clean so
+        # stream_stats reports what SERVING actually read.
+        self.store.reset_counters()
+
+    def _group_entries(self, g: int) -> list[str]:
+        """Store entry names backing layer group ``g``'s device window."""
+        lo = g * self.stream_cfg.group_size
+        names = []
+        for li in range(lo, lo + self.stream_cfg.group_size):
+            names += [ref.entry(li) for ref in self._ffn_refs.values()]
+            names += [f"attn_flash/{k}@{li}" for k in self._ATTN_FLASH_KEYS]
+        return names
+
+    def _fetch_group(self, g: int):
+        """Read one layer group's pages out of the store and assemble its
+        device window: (G,)-stacked FlashWeights for the flash FFN params
+        and the Q/K/V/O flash copies. Runs on the streamer's worker thread."""
+        sc = self.stream_cfg
+        lis = range(g * sc.group_size, (g + 1) * sc.group_size)
+
+        def stack(names):
+            hs = [self.store.get_host(n) for n in names]
+            return FlashWeight(
+                q=np.stack([h["q"] for h in hs]),
+                parity=np.stack([h["parity"] for h in hs]),
+                scale=np.stack([h["scale"] for h in hs]))
+
+        win = {
+            "ffn": {k: stack([ref.entry(li) for li in lis])
+                    for k, ref in self._ffn_refs.items()},
+            "attn": {k: stack([f"attn_flash/{k}@{li}" for li in lis])
+                     for k in self._ATTN_FLASH_KEYS},
+        }
+        nbytes = sum(self.store.entry_nbytes(n) for n in self._group_entries(g))
+        return jax.device_put(win), nbytes
+
+    def _build_stream_fns(self, exec_mode):
+        """The streamed data plane: three jitted pieces (embed -> layer
+        groups x N -> finish) instead of one monolithic step. The group fn
+        takes its layer offset as a TRACED scalar, so all groups share one
+        trace; steady state is exactly 3 traces total."""
+        cfg = self.cfg
+        group = functools.partial(_stream_group_impl, cfg, exec_mode,
+                                  self.kv_aware, self.stream_cfg.group_size)
+        finish = functools.partial(_finish_step, cfg, self.sched_cfg,
+                                   self.sample_cfg, self.kv_aware)
+
+        def embed_fn(params, lengths, tokens, q_lens):
+            self._trace_count += 1        # runs only while jax traces
+            return _embed_chunk(cfg, params, lengths, tokens, q_lens)
+
+        def group_fn(*args):
+            self._trace_count += 1
+            return group(*args)
+
+        def finish_fn(*args):
+            self._trace_count += 1
+            return finish(*args)
+
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._embed_fn = jax.jit(embed_fn)
+        self._group_fn = jax.jit(group_fn)
+        self._finish_fn = jax.jit(finish_fn, donate_argnums=donate)
+        self._step_fn = self._streamed_step
+
+    def _streamed_step(self, params, attn_flash, state, tokens, q_lens,
+                       admitted, block_tables, key):
+        """Streamed data plane: the flash tier never sits device-resident
+        as a whole — the streamer fills group l+1's window while group l's
+        asynchronously-dispatched compute runs."""
+        del params, attn_flash                       # store-resident tier
+        x, positions, ctx_lens = self._embed_fn(
+            self._dram_params, state["lengths"], tokens, q_lens)
+        ks, vs = [], []
+        for g, window in self.streamer.stream():
+            lo = jnp.int32(g * self.stream_cfg.group_size)
+            x, k_g, v_g = self._group_fn(
+                self._layers_dram, window, state["k"], state["v"], x,
+                positions, ctx_lens, block_tables, state["bitmap"], lo)
+            ks.append(k_g)
+            vs.append(v_g)
+        k_new = jnp.concatenate(ks, axis=0)          # (L, slots, T, KV, Dh)
+        v_new = jnp.concatenate(vs, axis=0)
+        return self._finish_fn(self._dram_params["final_norm"],
+                               self._lm_head, state, x, k_new, v_new,
+                               q_lens, admitted, positions, block_tables,
+                               key)
+
+    def stream_stats(self) -> dict:
+        """Streamer + residency-cache + page-store counters (streamed mode):
+        stall/stream seconds, streamed bytes, cache hit/miss, per-plane page
+        reads and the analytical NAND seconds they imply. Page counters
+        cover SERVING only (init-time programming/pin reads are reset)."""
+        if not self.streamed:
+            raise ValueError("stream_stats: engine is not in streamed mode")
+        return {**self.streamer.stats(), **self.store.stats()}
 
     # --- request management (control plane) -----------------------------------
 
@@ -438,9 +675,11 @@ class Engine:
 
     @property
     def step_traces(self) -> int:
-        """Times the serving step was traced/compiled. A fully static
-        serving path stays at 1 regardless of slot churn, chunked prefills,
-        and oversubscribed admission; -1 for eager engines."""
+        """Times the serving data plane was traced/compiled. A fully static
+        monolithic path stays at 1 regardless of slot churn, chunked
+        prefills, and oversubscribed admission; the streamed path stays at
+        3 (embed + ONE group trace shared by every layer group + finish);
+        -1 for eager engines."""
         return self._trace_count if self.compiled else -1
 
     def run(self, max_steps: int = 1000) -> dict[int, list[int]]:

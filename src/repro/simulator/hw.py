@@ -86,6 +86,18 @@ class NVLLMConfig:
         return self.nand_gops + self.npu_gops
 
 
+def nand_read_seconds(plane_reads) -> float:
+    """Analytical NAND time for a per-plane page-read histogram.
+
+    Planes read in parallel (§3.2 multi-plane reads), so the array time is
+    set by the SLOWEST plane: max(reads per plane) * PLANE_READ_S. The
+    FlashStore page store feeds its per-plane counters through this to
+    report an analytical NAND-time next to streamed-serving wall-clock.
+    """
+    reads = list(plane_reads)
+    return (max(reads) * PLANE_READ_S) if reads else 0.0
+
+
 NVLLM_8C = NVLLMConfig("NVLLM", n_ecdp=8, n_clusters=8, n_planes=32)
 NVLLM_12C = NVLLMConfig("NVLLM-12C", n_ecdp=12, n_clusters=12, n_planes=48)
 NVLLM_16C = NVLLMConfig("NVLLM-16C", n_ecdp=16, n_clusters=16, n_planes=64)

@@ -1,0 +1,290 @@
+"""FlashStore page store: the flash tier as host-resident 16 KiB NAND pages.
+
+NVLLM's central claim is that FFN weights never live in DRAM: they stay in
+multi-plane 3D NAND and are consumed page-by-page by compute co-located
+with the array (§3.2, §3.5). ``PageStore`` is that tier as a subsystem: a
+deployed ``FlashWeight`` (raw INT8 codeword bytes + Hamming parity + dequant
+scales) is serialized into a PLANE-INTERLEAVED array of 16 KiB pages — page
+``pid`` lives on plane ``pid % n_planes``, so the consecutive tiles of one
+parameter stripe across planes exactly like the paper's multi-plane layout,
+and a full-parameter read engages every plane in parallel.
+
+The page table maps ``(param, k_tile, n_tile) -> (plane, page)`` for the
+128x128 INT8 weight tiles (one tile == one 16 KiB page); parity and scale
+planes ride along as flat page runs per parameter. Stacked (L, K, N) params
+are split per layer at ``put_param`` so the streaming engine can fetch one
+layer group's pages without touching the rest of the die.
+
+The store is host-resident numpy by default; ``save``/``open`` persist it
+as an mmap-backed "NAND die image" + JSON page table, so a multi-GiB flash
+tier costs no RSS until its pages are actually read.
+
+Every read increments per-plane page counters; ``nand_seconds`` feeds them
+through ``simulator/hw.py`` plane-read latency (planes read in parallel →
+the slowest plane bounds the array), so streamed serving can report an
+analytical NAND-time alongside wall-clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiering import FlashWeight
+from repro.serving.kvcache import cdiv
+from repro.simulator import hw
+
+PAGE_BYTES = hw.PAGE_BYTES
+TILE = 128                       # 128x128 int8 tile == one 16 KiB page
+
+
+@dataclasses.dataclass(frozen=True)
+class StoreRef:
+    """Placeholder pytree leaf for a flash param that lives in a PageStore.
+
+    ``deploy(store=...)`` returns these in place of device-resident
+    FlashWeights; only the streamed serving engine dereferences them.
+    ``lead`` is the stacked leading shape ((L,) for scan-stacked layers),
+    split into per-slice store entries named ``{name}@{i[.j...]}``.
+    """
+    name: str
+    shape: tuple                 # full logical q shape, leading dims included
+    nbytes: int                  # stored payload bytes (q + parity + scale)
+    lead: tuple = ()
+
+    is_store_ref = True
+
+    def entry(self, *idx: int) -> str:
+        """Store entry name of one stacked slice (no idx = unstacked)."""
+        if not idx:
+            return self.name
+        return f"{self.name}@{'.'.join(str(i) for i in idx)}"
+
+
+def drop_store_refs(tree):
+    """A dict pytree minus its StoreRef leaves — the DRAM-resident remainder
+    after ``deploy(store=...)`` (StoreRefs are host-side placeholders and
+    must never reach a jax trace or a checkpoint write)."""
+    if isinstance(tree, dict):
+        return {k: drop_store_refs(v) for k, v in tree.items()
+                if not getattr(v, "is_store_ref", False)}
+    return tree
+
+
+@dataclasses.dataclass
+class _Component:
+    """One serialized array of a parameter (q / parity / scale)."""
+    shape: tuple
+    dtype: str
+    pages: list                  # page ids, tile-row-major (q) or flat runs
+    grid: tuple = ()             # (k_tiles, n_tiles) — q only
+
+    def to_json(self):
+        return {"shape": list(self.shape), "dtype": self.dtype,
+                "pages": [int(p) for p in self.pages],
+                "grid": list(self.grid)}
+
+    @classmethod
+    def from_json(cls, d):
+        return cls(tuple(d["shape"]), d["dtype"], list(d["pages"]),
+                   tuple(d["grid"]))
+
+
+class PageStore:
+    """Host-resident, page-granular store for the flash weight tier."""
+
+    def __init__(self, n_planes: int = hw.NVLLM_8C.n_planes,
+                 page_bytes: int = PAGE_BYTES):
+        self.n_planes = int(n_planes)
+        if page_bytes != TILE * TILE:
+            # the q layout is one 128x128 int8 tile per page; _put_tiled /
+            # _get_tiled bake that in, so other page sizes would corrupt.
+            raise ValueError(f"page_bytes must be {TILE * TILE} "
+                             f"(one {TILE}x{TILE} int8 tile per page)")
+        self.page_bytes = int(page_bytes)
+        self.table: dict[str, dict[str, _Component]] = {}
+        self._data = np.zeros((0, self.page_bytes), np.uint8)
+        self.n_pages = 0
+        self.total_bytes = 0         # logical payload bytes across entries
+        self.reset_counters()
+
+    # --- write path (deploy-time "flash programming"; write-once) ------------
+
+    def _alloc_pages(self, n: int) -> np.ndarray:
+        if isinstance(self._data, np.memmap):
+            raise ValueError("store opened from a die image is read-only "
+                             "(NAND programming is write-once)")
+        if self.n_pages + n > len(self._data):
+            cap = max(64, 2 * len(self._data), self.n_pages + n)
+            grown = np.zeros((cap, self.page_bytes), np.uint8)
+            grown[:self.n_pages] = self._data[:self.n_pages]
+            self._data = grown
+        ids = np.arange(self.n_pages, self.n_pages + n, dtype=np.int64)
+        self.n_pages += n
+        return ids
+
+    def _put_flat(self, arr: np.ndarray) -> _Component:
+        """Serialize an array as a flat byte run over whole pages."""
+        raw = np.ascontiguousarray(arr).view(np.uint8).reshape(-1)
+        ids = self._alloc_pages(cdiv(raw.size, self.page_bytes))
+        for i, pid in enumerate(ids):
+            chunk = raw[i * self.page_bytes:(i + 1) * self.page_bytes]
+            self._data[pid, :chunk.size] = chunk
+        return _Component(tuple(arr.shape), str(arr.dtype), ids.tolist())
+
+    def _put_tiled(self, q: np.ndarray) -> _Component:
+        """Serialize a (K, N) int8 matrix as 128x128 tiles, one per page."""
+        k, n = q.shape
+        kt, nt = cdiv(k, TILE), cdiv(n, TILE)
+        padded = np.zeros((kt * TILE, nt * TILE), np.int8)
+        padded[:k, :n] = np.asarray(q, np.int8)
+        ids = self._alloc_pages(kt * nt)
+        tiles = padded.reshape(kt, TILE, nt, TILE).transpose(0, 2, 1, 3)
+        self._data[ids] = tiles.reshape(kt * nt, TILE * TILE).view(np.uint8)
+        return _Component((k, n), "int8", ids.tolist(), grid=(kt, nt))
+
+    def put(self, name: str, fw: FlashWeight) -> None:
+        """Program ONE 2-D FlashWeight into pages under ``name``."""
+        if name in self.table:
+            raise ValueError(f"store entry {name!r} already programmed "
+                             "(NAND programming is write-once)")
+        if fw.q.ndim != 2:
+            raise ValueError("put() takes a single (K, N) FlashWeight; "
+                             "use put_param() for stacked params")
+        self.table[name] = {
+            "q": self._put_tiled(np.asarray(fw.q)),
+            "parity": self._put_flat(np.asarray(fw.parity, np.uint8)),
+            "scale": self._put_flat(np.asarray(fw.scale, np.float32)),
+        }
+        self.total_bytes += fw.nbytes()
+
+    def put_param(self, name: str, fw: FlashWeight) -> StoreRef:
+        """Program a (possibly layer-stacked) FlashWeight; returns the
+        StoreRef placeholder that replaces it in the deployed pytree."""
+        lead = tuple(int(d) for d in fw.q.shape[:-2])
+        ref = StoreRef(name=name, shape=tuple(int(d) for d in fw.q.shape),
+                       nbytes=fw.nbytes(), lead=lead)
+        q = np.asarray(fw.q)
+        parity = np.asarray(fw.parity)
+        scale = np.asarray(fw.scale)
+        for idx in np.ndindex(lead) if lead else [()]:
+            self.put(ref.entry(*idx),
+                     FlashWeight(q=q[idx], parity=parity[idx],
+                                 scale=scale[idx]))
+        return ref
+
+    # --- read path (page-granular, plane-counted) ----------------------------
+
+    def reset_counters(self):
+        self.plane_reads = np.zeros((self.n_planes,), np.int64)
+        self.pages_read = 0
+        self.bytes_read = 0
+
+    def plane_of(self, pid: int) -> tuple[int, int]:
+        """Physical (plane, page-in-plane) of a global page id."""
+        return int(pid) % self.n_planes, int(pid) // self.n_planes
+
+    def page_of(self, name: str, k_tile: int, n_tile: int) -> tuple[int, int]:
+        """The page-table lookup: (param, k_tile, n_tile) -> (plane, page)."""
+        comp = self.table[name]["q"]
+        kt, nt = comp.grid
+        if not (0 <= k_tile < kt and 0 <= n_tile < nt):
+            raise IndexError(f"tile ({k_tile}, {n_tile}) outside grid {comp.grid}")
+        return self.plane_of(comp.pages[k_tile * nt + n_tile])
+
+    def read_pages(self, ids) -> np.ndarray:
+        """Raw page reads (len(ids), page_bytes) — counts per-plane traffic."""
+        ids = np.asarray(ids, np.int64)
+        np.add.at(self.plane_reads, ids % self.n_planes, 1)
+        self.pages_read += ids.size
+        self.bytes_read += ids.size * self.page_bytes
+        return self._data[ids]
+
+    def _get_flat(self, comp: _Component) -> np.ndarray:
+        raw = self.read_pages(comp.pages).reshape(-1)
+        n = int(np.prod(comp.shape)) * np.dtype(comp.dtype).itemsize
+        return raw[:n].view(comp.dtype).reshape(comp.shape).copy()
+
+    def _get_tiled(self, comp: _Component) -> np.ndarray:
+        kt, nt = comp.grid
+        tiles = self.read_pages(comp.pages).view(np.int8)
+        padded = tiles.reshape(kt, nt, TILE, TILE).transpose(0, 2, 1, 3)
+        k, n = comp.shape
+        return padded.reshape(kt * TILE, nt * TILE)[:k, :n].copy()
+
+    def get_host(self, name: str) -> dict[str, np.ndarray]:
+        """Read one entry back as host numpy arrays (bit-exact)."""
+        e = self.table[name]
+        return {"q": self._get_tiled(e["q"]),
+                "parity": self._get_flat(e["parity"]),
+                "scale": self._get_flat(e["scale"])}
+
+    def get(self, name: str) -> FlashWeight:
+        h = self.get_host(name)
+        return FlashWeight(q=jnp.asarray(h["q"]),
+                           parity=jnp.asarray(h["parity"]),
+                           scale=jnp.asarray(h["scale"]))
+
+    def entry_pages(self, name: str) -> int:
+        return sum(len(c.pages) for c in self.table[name].values())
+
+    def entry_nbytes(self, name: str) -> int:
+        e = self.table[name]
+        return (int(np.prod(e["q"].shape))
+                + int(np.prod(e["parity"].shape))
+                + int(np.prod(e["scale"].shape)) * 4)
+
+    # --- accounting -----------------------------------------------------------
+
+    @property
+    def image_bytes(self) -> int:
+        return self.n_pages * self.page_bytes
+
+    def nand_seconds(self) -> float:
+        """Analytical NAND array time for all reads since reset_counters."""
+        return hw.nand_read_seconds(self.plane_reads)
+
+    def stats(self) -> dict[str, Any]:
+        return {"entries": len(self.table), "pages": self.n_pages,
+                "planes": self.n_planes, "image_bytes": self.image_bytes,
+                "payload_bytes": self.total_bytes,
+                "pages_read": int(self.pages_read),
+                "bytes_read": int(self.bytes_read),
+                "nand_seconds": self.nand_seconds()}
+
+    # --- NAND die image (optional mmap backing) -------------------------------
+
+    def save(self, path: str) -> None:
+        """Persist the die image (raw pages) + page table (JSON sidecar)."""
+        self._data[:self.n_pages].tofile(path)
+        meta = {
+            "page_bytes": self.page_bytes, "n_planes": self.n_planes,
+            "n_pages": self.n_pages, "total_bytes": self.total_bytes,
+            "table": {name: {c: comp.to_json() for c, comp in e.items()}
+                      for name, e in self.table.items()},
+        }
+        with open(path + ".meta.json", "w") as f:
+            json.dump(meta, f)
+
+    @classmethod
+    def open(cls, path: str) -> "PageStore":
+        """mmap an existing die image: pages stay on disk until read."""
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+        self = cls(n_planes=meta["n_planes"], page_bytes=meta["page_bytes"])
+        self.n_pages = meta["n_pages"]
+        self.total_bytes = meta["total_bytes"]
+        self.table = {name: {c: _Component.from_json(d)
+                             for c, d in e.items()}
+                      for name, e in meta["table"].items()}
+        expect = self.n_pages * self.page_bytes
+        if os.path.getsize(path) != expect:
+            raise ValueError(f"die image {path} is {os.path.getsize(path)} "
+                             f"bytes, page table says {expect}")
+        self._data = np.memmap(path, np.uint8, mode="r",
+                               shape=(self.n_pages, self.page_bytes))
+        return self

@@ -1,0 +1,239 @@
+"""Overlapped layer streaming + residency cache for the FlashStore tier.
+
+The streamed serving engine partitions its compiled step into per-layer-
+group calls; ``LayerStreamer`` keeps the device window for group *l+1*
+filling WHILE group *l*'s (asynchronously dispatched) compute runs: a
+worker thread reads the group's pages out of the host-resident
+``PageStore``, assembles the device window (``jax.device_put``), and hands
+it over a bounded queue of depth ``prefetch_depth`` — the rotating device
+window. Time the consumer spends blocked on that queue is the STALL time;
+time the worker spends reading + uploading is the STREAM time. Overlap
+means stall << stream (benchmarks/serve_stream.py asserts it).
+
+``ResidencyCache`` is the same free-list/ref-count discipline as the paged
+KV pool (serving/kvcache.py), applied to weight groups: a byte-budgeted
+map of store keys to device-resident windows with LRU eviction, where
+PINNED or ref-held entries are never evicted. The engine pins the hot
+entries — lm_head (read every step for sampling) and the first/last layer
+groups — and streams the cold middle through the window; ``pin_all=True``
+degenerates to the fully-resident engine (the parity baseline).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """How the engine runs the flash tier when given a ``weight_store``."""
+    device_budget_bytes: int | None = None  # window + cache; None = unbounded
+    group_size: int = 1                     # layers per streamed group
+    prefetch_depth: int = 2                 # device windows in flight
+    pin_all: bool = False                   # residency = everything (parity)
+    pin_edges: bool = True                  # pin first/last groups if room
+
+
+@dataclasses.dataclass
+class _Entry:
+    value: Any
+    nbytes: int
+    refs: int = 0
+    pinned: bool = False
+
+
+class ResidencyCache:
+    """Byte-budgeted LRU of device-resident weight groups.
+
+    Invariants (property-tested in tests/test_store.py):
+      * pinned entries and entries with refs > 0 are NEVER evicted;
+      * bytes_used == sum of resident entries' nbytes <= capacity
+        (when capacity is bounded);
+      * hits + misses == number of acquire() calls.
+    """
+
+    def __init__(self, capacity_bytes: int | None = None):
+        self.capacity = capacity_bytes
+        self._entries: "collections.OrderedDict[Any, _Entry]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.rejects = 0              # inserts that could not fit
+
+    @property
+    def bytes_used(self) -> int:
+        with self._lock:
+            return sum(e.nbytes for e in self._entries.values())
+
+    def __contains__(self, key) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def acquire(self, key):
+        """Return the resident value (refs += 1, LRU-touch) or None."""
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            e.refs += 1
+            self._entries.move_to_end(key)
+            return e.value
+
+    def release(self, key):
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None and e.refs > 0:
+                e.refs -= 1
+
+    def insert(self, key, value, nbytes: int, pin: bool = False) -> bool:
+        """Admit an entry, LRU-evicting unpinned ref-free entries to make
+        room. Returns False (entry stays non-resident) if it cannot fit."""
+        with self._lock:
+            if key in self._entries:
+                e = self._entries[key]
+                e.pinned = e.pinned or pin
+                self._entries.move_to_end(key)
+                return True
+            used = sum(e.nbytes for e in self._entries.values())
+            if self.capacity is not None:
+                if nbytes > self.capacity:
+                    self.rejects += 1
+                    return False
+                for k in list(self._entries):
+                    if used + nbytes <= self.capacity:
+                        break
+                    e = self._entries[k]
+                    if e.pinned or e.refs > 0:
+                        continue
+                    used -= e.nbytes
+                    del self._entries[k]
+                    self.evictions += 1
+                if used + nbytes > self.capacity:
+                    self.rejects += 1
+                    return False
+            self._entries[key] = _Entry(value, int(nbytes), pinned=pin)
+            return True
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"entries": len(self._entries),
+                    "pinned": sum(e.pinned for e in self._entries.values()),
+                    "bytes_used": sum(e.nbytes
+                                      for e in self._entries.values()),
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions, "rejects": self.rejects}
+
+
+class LayerStreamer:
+    """Double-buffered streaming of layer-group windows from a PageStore.
+
+    ``fetch(group) -> (device_window, nbytes)`` is supplied by the engine
+    (it knows the window pytree layout); the streamer owns overlap,
+    residency, and the stall/stream accounting.
+    """
+
+    def __init__(self, n_groups: int,
+                 fetch: Callable[[int], tuple[Any, int]],
+                 cache: ResidencyCache,
+                 prefetch_depth: int = 2):
+        self.n_groups = int(n_groups)
+        self._fetch = fetch
+        self.cache = cache
+        self.prefetch_depth = max(1, int(prefetch_depth))
+        self.stall_s = 0.0            # consumer blocked on the window queue
+        self.stream_s = 0.0           # worker reading pages + device_put
+        self.bytes_streamed = 0
+        self.groups_streamed = 0
+
+    def pin(self, g: int) -> bool:
+        """Force-fetch a group's window and pin it device-resident."""
+        window, nbytes = self._fetch(g)
+        return self.cache.insert(g, window, nbytes, pin=True)
+
+    def _window(self, g: int):
+        win = self.cache.acquire(g)
+        if win is not None:
+            return win, True
+        t0 = time.perf_counter()
+        win, nbytes = self._fetch(g)
+        self.stream_s += time.perf_counter() - t0
+        self.bytes_streamed += nbytes
+        self.groups_streamed += 1
+        # opportunistic residency: a rotating scan thrashes plain LRU, so a
+        # miss only becomes resident if it fits WITHOUT evicting (pinned
+        # entries own the budget; the window stays a transient rotation).
+        self.cache.insert(g, win, nbytes)
+        return win, False
+
+    def stream(self) -> Iterator[tuple[int, Any]]:
+        """Yield (group, device_window) for groups 0..n-1 in order, with a
+        worker thread prefetching ahead of the consumer.
+
+        The slot semaphore bounds fetched-but-unretired windows (the one
+        the consumer holds INCLUDED) at ``prefetch_depth`` — the worker
+        only starts reading group l+d's pages once the consumer has
+        retired group l, so device-resident window bytes never exceed the
+        ``prefetch_depth * group_bytes`` the engine's budget reserves."""
+        q: "queue.Queue" = queue.Queue()
+        stop = threading.Event()
+        slots = threading.Semaphore(self.prefetch_depth)
+
+        def worker():
+            for g in range(self.n_groups):
+                while not slots.acquire(timeout=0.05):
+                    if stop.is_set():
+                        return
+                if stop.is_set():
+                    return
+                try:
+                    q.put((g, self._window(g)))
+                except BaseException as e:    # surface in the consumer
+                    q.put((g, e))
+                    return
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        held_hit: int | None = None           # hit yielded but not released
+        try:
+            for _ in range(self.n_groups):
+                t0 = time.perf_counter()
+                g, item = q.get()
+                self.stall_s += time.perf_counter() - t0
+                if isinstance(item, BaseException):
+                    raise item                # worker-side fetch failure
+                win, hit = item
+                held_hit = g if hit else None
+                yield g, win
+                if hit:
+                    self.cache.release(g)
+                held_hit = None
+                slots.release()
+        finally:
+            stop.set()
+            # an abandoned iteration must not leak cache refs (a ref-held
+            # entry is never evictable): release the yielded-but-unretired
+            # hit and any hits still sitting in the queue.
+            if held_hit is not None:
+                self.cache.release(held_hit)
+            while True:
+                try:
+                    g, item = q.get_nowait()
+                except queue.Empty:
+                    break
+                if isinstance(item, tuple) and item[1]:
+                    self.cache.release(g)
+            t.join()
+
+    def stats(self) -> dict:
+        return {"stall_s": self.stall_s, "stream_s": self.stream_s,
+                "bytes_streamed": self.bytes_streamed,
+                "groups_streamed": self.groups_streamed,
+                **{f"cache_{k}": v for k, v in self.cache.stats().items()}}

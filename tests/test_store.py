@@ -1,0 +1,218 @@
+"""FlashStore subsystem: page-store round-trips, plane interleave + read
+accounting, die-image persistence, and residency-cache invariants
+(ISSUE 3). Property tests ride the optional-hypothesis shim."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tiering import FlashWeight, deploy, encode_flash, flash_bytes
+from repro.simulator import hw
+from repro.store import PageStore, ResidencyCache, StoreRef, drop_store_refs
+from tests.hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+
+def _fw(key, k, n, layers=None):
+    shape = (k, n) if layers is None else (layers, k, n)
+    return encode_flash(jax.random.normal(key, shape, jnp.float32))
+
+
+def _assert_fw_equal(a: FlashWeight, b: FlashWeight):
+    np.testing.assert_array_equal(np.asarray(a.q), np.asarray(b.q))
+    np.testing.assert_array_equal(np.asarray(a.parity), np.asarray(b.parity))
+    np.testing.assert_array_equal(np.asarray(a.scale), np.asarray(b.scale))
+
+
+# --- page store ---------------------------------------------------------------
+
+def test_roundtrip_bit_exact():
+    """serialize -> read pages -> reconstruct is bit-exact, including
+    shapes that don't fill whole 128x128 tiles or whole pages."""
+    store = PageStore(n_planes=4)
+    for i, (k, n) in enumerate([(64, 32), (128, 128), (256, 130), (8, 700)]):
+        fw = _fw(jax.random.PRNGKey(i), k, n)
+        store.put(f"p{i}", fw)
+        _assert_fw_equal(store.get(f"p{i}"), fw)
+
+
+def test_put_param_splits_stacked_layers():
+    fw = _fw(jax.random.PRNGKey(0), 64, 48, layers=3)
+    store = PageStore(n_planes=4)
+    ref = store.put_param("layers/ffn/w_up", fw)
+    assert isinstance(ref, StoreRef) and ref.lead == (3,)
+    assert ref.nbytes == fw.nbytes()
+    for li in range(3):
+        got = store.get(ref.entry(li))
+        _assert_fw_equal(got, FlashWeight(q=fw.q[li], parity=fw.parity[li],
+                                          scale=fw.scale[li]))
+
+
+def test_page_bytes_must_match_tile():
+    """The q layout is one 128x128 int8 tile per page; other page sizes
+    would silently corrupt the tiled serialization."""
+    with pytest.raises(ValueError, match="page_bytes"):
+        PageStore(page_bytes=32768)
+
+
+def test_programming_is_write_once():
+    store = PageStore()
+    store.put("a", _fw(jax.random.PRNGKey(0), 64, 32))
+    with pytest.raises(ValueError, match="write-once"):
+        store.put("a", _fw(jax.random.PRNGKey(1), 64, 32))
+
+
+def test_plane_interleave_and_page_table():
+    """Consecutive q tiles stripe round-robin across planes, and the page
+    table maps (param, k_tile, n_tile) -> (plane, page)."""
+    store = PageStore(n_planes=4)
+    fw = _fw(jax.random.PRNGKey(0), 256, 256)      # 2x2 tile grid
+    store.put("w", fw)
+    seen = [store.page_of("w", kt, nt)
+            for kt in range(2) for nt in range(2)]
+    assert [p for p, _ in seen] == [0, 1, 2, 3]    # striped across planes
+    with pytest.raises(IndexError):
+        store.page_of("w", 2, 0)
+
+
+def test_read_counters_feed_nand_latency():
+    store = PageStore(n_planes=4)
+    store.put("w", _fw(jax.random.PRNGKey(0), 256, 256))
+    assert store.pages_read == 0 and store.nand_seconds() == 0.0
+    store.get("w")
+    assert store.pages_read == store.entry_pages("w") > 0
+    assert store.bytes_read == store.pages_read * store.page_bytes
+    # planes read in parallel: analytical time is the slowest plane
+    assert store.nand_seconds() == pytest.approx(
+        max(store.plane_reads) * hw.PLANE_READ_S)
+    store.reset_counters()
+    assert store.pages_read == 0 and int(store.plane_reads.sum()) == 0
+
+
+def test_die_image_save_open(tmp_path):
+    """The mmap-backed NAND die image round-trips bit-exactly and stays
+    write-once after open."""
+    store = PageStore(n_planes=8)
+    fws = {f"p{i}": _fw(jax.random.PRNGKey(i), 128, 96) for i in range(3)}
+    for name, fw in fws.items():
+        store.put(name, fw)
+    img = str(tmp_path / "nand.img")
+    store.save(img)
+    loaded = PageStore.open(img)
+    assert isinstance(loaded._data, np.memmap)
+    assert loaded.n_pages == store.n_pages
+    for name, fw in fws.items():
+        _assert_fw_equal(loaded.get(name), fw)
+    with pytest.raises(ValueError, match="write-once"):
+        loaded.put("new", _fw(jax.random.PRNGKey(9), 64, 32))
+
+
+def test_deploy_store_target():
+    """deploy(store=...) turns flash leaves into StoreRefs whose store
+    entries decode to the exact FlashWeights the device path would hold,
+    and flash_bytes still accounts the tier."""
+    from repro.configs import get_config
+    from repro.models import dense
+    cfg = get_config("granite-8b", smoke=True)
+    params = dense.init(cfg, jax.random.PRNGKey(0))
+    tiered_dev, _ = deploy(params)
+    store = PageStore()
+    tiered_ref, tier_map = deploy(params, store=store)
+    assert tier_map["layers/ffn/w_gate"] == "flash"
+    ref = tiered_ref["layers"]["ffn"]["w_gate"]
+    assert isinstance(ref, StoreRef)
+    dev = tiered_dev["layers"]["ffn"]["w_gate"]
+    for li in range(cfg.n_layers):
+        _assert_fw_equal(store.get(ref.entry(li)),
+                         FlashWeight(q=dev.q[li], parity=dev.parity[li],
+                                     scale=dev.scale[li]))
+    # tier accounting matches the device deployment; DRAM side unaffected
+    assert flash_bytes(tiered_ref) == flash_bytes(tiered_dev)
+    # the DRAM remainder has no refs left
+    for leaf in jax.tree_util.tree_leaves(drop_store_refs(tiered_ref)):
+        assert not isinstance(leaf, StoreRef)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 300), st.integers(0, 2 ** 31 - 1))
+def test_roundtrip_property(k8, n, seed):
+    """Property: any (8*k8, n) FlashWeight round-trips bit-exactly through
+    page serialization, whatever the tile/page padding."""
+    fw = _fw(jax.random.PRNGKey(seed % 1000), 8 * k8, n)
+    store = PageStore(n_planes=2)
+    store.put("w", fw)
+    _assert_fw_equal(store.get("w"), fw)
+
+
+# --- residency cache ----------------------------------------------------------
+
+def test_cache_hit_miss_accounting():
+    c = ResidencyCache(capacity_bytes=100)
+    assert c.acquire("a") is None                      # miss
+    assert c.insert("a", "A", 60)
+    assert c.acquire("a") == "A"                       # hit (refs=1)
+    c.release("a")
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 1
+    assert s["hits"] + s["misses"] == 2                # every acquire counted
+
+
+def test_cache_lru_evicts_only_unpinned_unreferenced():
+    c = ResidencyCache(capacity_bytes=100)
+    c.insert("pinned", 1, 40, pin=True)
+    c.insert("held", 2, 30)
+    assert c.acquire("held") == 2                      # refs=1, not evictable
+    c.insert("cold", 3, 30)
+    # needs 30 free: only "cold" is evictable; "held" (ref) and "pinned" stay
+    assert c.insert("new", 4, 30)
+    assert "pinned" in c and "held" in c and "cold" not in c
+    assert c.bytes_used <= 100
+    # an entry that can never fit is rejected, not force-evicted
+    assert not c.insert("huge", 5, 101)
+    assert c.stats()["rejects"] == 1
+
+
+def test_cache_unbounded_capacity():
+    c = ResidencyCache(None)
+    for i in range(50):
+        assert c.insert(i, i, 1 << 20)
+    assert c.stats()["entries"] == 50 and c.stats()["evictions"] == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["ins", "pin", "acq", "rel"]),
+                          st.integers(0, 7), st.integers(1, 60)),
+                max_size=40))
+def test_cache_invariants_property(ops):
+    """Property: under any op sequence — bytes_used never exceeds capacity,
+    pinned/ref-held entries survive every eviction, and hit+miss counts
+    stay consistent with acquire calls."""
+    cap = 100
+    c = ResidencyCache(cap)
+    pinned, held = set(), {}
+    acquires = 0
+    for op, key, nbytes in ops:
+        if op == "ins":
+            c.insert(key, key, nbytes)
+        elif op == "pin":
+            if c.insert(key, key, nbytes, pin=True):
+                pinned.add(key)
+        elif op == "acq":
+            acquires += 1
+            if c.acquire(key) is not None:
+                held[key] = held.get(key, 0) + 1
+        elif op == "rel" and held.get(key):
+            c.release(key)
+            held[key] -= 1
+        s = c.stats()
+        assert s["bytes_used"] <= cap
+        assert s["hits"] + s["misses"] == acquires
+        for k in pinned | {k for k, v in held.items() if v > 0}:
+            assert k in c, f"pinned/held entry {k} was evicted"
+
+
+def test_hypothesis_available_in_ci():
+    """Informational: property tests above only run with hypothesis."""
+    if not HAVE_HYPOTHESIS:
+        pytest.skip("hypothesis not installed; property tests skipped")

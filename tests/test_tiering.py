@@ -81,6 +81,35 @@ def test_deploy_and_forward_with_rber():
     assert fb > 0 and db > 0
 
 
+def test_serve_ecc_env_is_late_binding(monkeypatch):
+    """Regression: REPRO_SERVE_ECC used to be read ONCE at import, so a
+    test/benchmark toggling inline-vs-load ECC after `import repro` was
+    silently ignored. maybe_flash_matmul must honor the env per call:
+    with a single stored bit flipped, inline mode corrects it (output
+    matches the clean encoding) while load mode serves the raw bytes."""
+    from repro.core import erdpe
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (64, 16), jnp.float32)
+    fw = encode_flash(w)
+    raw = np.asarray(fw.q).view(np.uint8).copy()
+    raw[0, 0] ^= np.uint8(0x40)                  # one bit: correctable
+    bad = FlashWeight(q=jnp.asarray(raw.view(np.int8)),
+                      parity=fw.parity, scale=fw.scale)
+    x = jnp.ones((2, 64), jnp.bfloat16)
+    clean = np.asarray(maybe_flash_matmul(x, fw, ecc_enabled=True), np.float32)
+
+    monkeypatch.setenv("REPRO_SERVE_ECC", "inline")
+    assert erdpe.serve_ecc_mode() == "inline"
+    got_inline = np.asarray(maybe_flash_matmul(x, bad), np.float32)
+    np.testing.assert_allclose(got_inline, clean)   # error repaired
+
+    monkeypatch.setenv("REPRO_SERVE_ECC", "load")
+    assert erdpe.serve_ecc_mode() == "load"
+    got_load = np.asarray(maybe_flash_matmul(x, bad), np.float32)
+    assert not np.allclose(got_load, clean), \
+        "load mode must serve raw bytes (env change was ignored)"
+
+
 def test_maybe_flash_dispatch():
     key = jax.random.PRNGKey(3)
     w = jax.random.normal(key, (32, 16), jnp.float32)
