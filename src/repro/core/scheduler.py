@@ -122,36 +122,56 @@ class AdmissionConfig:
     chunk_tokens: int = 16     # T_chunk: static chunk lanes per slot per step
     token_budget: int = 32     # per-step token budget at npu_fraction = 1.0
     budget_floor: float = 0.25 # budget fraction kept at npu_fraction = 0.0
-    adaptive: bool = True      # couple the budget to the Alg. 2 bitmap
+    adaptive: bool = True      # couple the budget to Alg. 2 + streamer stall
 
 
-def step_token_budget(cfg: AdmissionConfig, npu_frac: float) -> int:
-    """Per-step token budget, contracted by Algorithm 2's offload state.
+def step_token_budget(cfg: AdmissionConfig, npu_frac: float,
+                      stall_frac: float = 0.0) -> int:
+    """Per-step token budget, contracted by Algorithm 2's offload state AND
+    by the weight streamer's stall fraction — the same floor-anchored
+    contraction, applied once per signal: a step that is weight-stream-
+    bound (the consumer blocked on the window queue for ``stall_frac`` of
+    the last steps' wall time) should shrink its prefill share exactly
+    like one whose NPU is eaten by attention over a grown KV cache.
     Always >= 1: a non-positive budget would plan empty steps forever and
     wedge prefill-only workloads."""
     if not cfg.adaptive:
         return max(1, cfg.token_budget)
+    lo, span = cfg.budget_floor, 1.0 - cfg.budget_floor
     f = min(max(float(npu_frac), 0.0), 1.0)
-    scale = cfg.budget_floor + (1.0 - cfg.budget_floor) * f
+    s = min(max(float(stall_frac), 0.0), 1.0)
+    scale = (lo + span * f) * (lo + span * (1.0 - s))
     return max(1, int(round(cfg.token_budget * scale)))
 
 
 def plan_chunks(
-    decode_slots: list[int],
+    decode_slots: list,                     # slot, or (slot, want_lanes)
     prefill_slots: list[tuple[int, int]],   # (slot, prompt tokens remaining)
     budget: int,
     chunk_tokens: int,
 ) -> dict[int, int]:
     """Pure host-side step plan: slot -> token lanes this step.
 
-    Decode slots are funded first and unconditionally (1 lane each);
-    leftover budget funds prefill chunks in the order given — the caller
+    Decode slots are funded first: ONE base lane each unconditionally
+    (inter-token latency never stalls behind someone else's prompt), then
+    their speculative VERIFY lanes — a decode entry may be ``(slot,
+    want_lanes)`` asking for ``want_lanes = 1 + k`` lanes (last token + k
+    draft proposals) — are funded from the remaining budget, clamped when
+    it runs short (verify lanes amortize the weight stream, but they are
+    still step tokens and must be accounted like everyone else's).
+    Leftover budget funds prefill chunks in the order given — the caller
     passes them ARRIVAL-ordered, so admission stays FCFS — each capped at
     the static chunk width. A long prompt therefore spreads over several
     steps while concurrent decoders keep producing a token every step.
     """
-    plan = {s: 1 for s in decode_slots}
-    left = budget - len(decode_slots)
+    wants = [(s, 1) if isinstance(s, int) else (s[0], max(1, int(s[1])))
+             for s in decode_slots]
+    plan = {s: 1 for s, _ in wants}
+    left = budget - len(wants)
+    for slot, want in wants:                 # verify lanes, budget-clamped
+        extra = min(want - 1, max(left, 0))
+        plan[slot] += extra
+        left -= extra
     for slot, remaining in prefill_slots:
         if left <= 0:
             break

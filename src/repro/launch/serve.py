@@ -10,10 +10,16 @@ scheduler trace (NPU fraction over time).
 ``--stream [--device-budget-mib N]`` keeps the flash tier HOST-resident in
 the FlashStore page store and streams it under compute per layer group —
 serving models whose flash tier exceeds device weight memory (DESIGN.md §7).
+``--auto-depth`` re-picks the prefetch depth from the first steps'
+stall/stream telemetry. ``--spec-k K [--drafter ngram|model]`` serves
+SPECULATIVELY: K draft tokens per decoding slot verified in one forward
+pass — one weight-stream window rotation — emitting n_accept+1 tokens per
+step (DESIGN.md §8).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -30,7 +36,8 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
           max_new: int = 12, rber: float = 0.0, seed: int = 0,
           kv_aware: bool = True, stream: bool = False,
           device_budget_mib: float | None = None,
-          group_size: int = 1) -> dict:
+          group_size: int = 1, auto_depth: bool = False,
+          spec_k: int = 0, drafter: str = "ngram") -> dict:
     cfg = OPT_TINY if arch == "opt-tiny" else get_config(arch, smoke=smoke)
     if cfg.family != "dense":
         raise SystemExit("engine serves dense-family archs "
@@ -46,11 +53,28 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
         budget = (None if device_budget_mib is None
                   else int(device_budget_mib * 2**20))
         stream_cfg = StreamConfig(device_budget_bytes=budget,
-                                  group_size=group_size)
+                                  group_size=group_size,
+                                  auto_depth=auto_depth)
+    spec_cfg = draft_cfg = draft_params = None
+    if spec_k > 0:
+        from repro.serving.spec import SpecConfig
+        spec_cfg = SpecConfig(k=spec_k, drafter=drafter)
+        if drafter == "model":
+            # a ~4x-smaller resident draft model of the same family
+            draft_cfg = dataclasses.replace(
+                cfg, name=f"{cfg.name}-draft",
+                n_layers=max(cfg.n_layers // 4, 1),
+                d_model=max(cfg.d_model // 2, 64),
+                n_heads=max(cfg.n_heads // 2, 1),
+                n_kv_heads=max(cfg.n_kv_heads // 2, 1),
+                d_ff=max(cfg.d_ff // 2, 128))
+            draft_params = mod.init(draft_cfg, jax.random.PRNGKey(seed + 1))
     eng = Engine(cfg, params, max_slots=4, max_seq=256, rber=rber,
                  sample_cfg=SampleConfig(temperature=0.8, top_k=40),
                  kv_aware=kv_aware, seed=seed,
-                 weight_store=store, stream_cfg=stream_cfg)
+                 weight_store=store, stream_cfg=stream_cfg,
+                 spec_cfg=spec_cfg, draft_cfg=draft_cfg,
+                 draft_params=draft_params)
     rng = np.random.default_rng(seed)
     # submit enqueues: the whole burst goes in up front and the engine's
     # waiting->running queue admits as slots/blocks free up (no host-side
@@ -80,6 +104,8 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
            "ttft_steps": first_tok, "traces": eng.step_traces}
     if stream:
         out["stream"] = eng.stream_stats()
+    if spec_k > 0:
+        out["spec"] = eng.spec_stats()
     return out
 
 
@@ -99,12 +125,22 @@ def main():
                          "residency cache); default unbounded")
     ap.add_argument("--group-size", type=int, default=1,
                     help="layers per streamed group (--stream)")
+    ap.add_argument("--auto-depth", action="store_true",
+                    help="re-pick prefetch depth from the first steps' "
+                         "stall/stream telemetry (--stream)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens verified per "
+                         "slot per step (0 = off)")
+    ap.add_argument("--drafter", choices=("ngram", "model"), default="ngram",
+                    help="draft proposer for --spec-k: in-graph prompt "
+                         "lookup, or a small resident draft model")
     args = ap.parse_args()
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
                 max_new=args.max_new, rber=args.rber, kv_aware=args.kv_aware,
                 stream=args.stream,
                 device_budget_mib=args.device_budget_mib,
-                group_size=args.group_size)
+                group_size=args.group_size, auto_depth=args.auto_depth,
+                spec_k=args.spec_k, drafter=args.drafter)
     print(f"served {len(out['outputs'])} requests, {out['tokens']} generated "
           f"tokens in {out['seconds']:.1f}s ({out['tps']:.1f} generated "
           f"tok/s, {out['processed_tps']:.1f} processed tok/s on CPU), "
@@ -116,7 +152,16 @@ def main():
               f"{st['stream_s']*1e3:.0f} ms), cache {st['cache_hits']} hits "
               f"/ {st['cache_misses']} misses, {st['pages_read']} page reads "
               f"over {st['planes']} planes -> "
-              f"{st['nand_seconds']*1e3:.2f} ms analytical NAND time")
+              f"{st['nand_seconds']*1e3:.2f} ms analytical NAND time, "
+              f"prefetch depth {st['prefetch_depth']}"
+              + (" (auto)" if args.auto_depth else ""))
+    if args.spec_k > 0:
+        sp = out["spec"]
+        print(f"speculative k={args.spec_k} ({args.drafter}): "
+              f"{100*sp['spec_acceptance_rate']:.0f}% drafts accepted, "
+              f"{sp['spec_tokens_per_step']:.2f} tokens per verify step "
+              f"({sp['spec_emitted']} tokens over "
+              f"{sp['spec_verify_steps']} weight passes)")
     tt = sorted(out["ttft_steps"].values())
     print(f"TTFT (steps to first token) per request: {tt}")
     fr = [s["npu_fraction"] for s in out["stats"]]

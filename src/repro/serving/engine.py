@@ -38,12 +38,19 @@ The engine is split control-plane / data-plane (DESIGN.md §6):
 ``compiled=False`` keeps the seed-style eager reference: the *same* per-
 layer math driven by an interpreted Python loop over layers (the benchmark
 baseline and correctness oracle for benchmarks/serve_{decode,mixed}.py).
+
+``spec_cfg`` adds SPECULATIVE serving (DESIGN.md §8) on top of either data
+plane: decoding slots pack ``[last_token, d_1 .. d_k]`` draft proposals
+into their chunk lanes, one pass — one weight-stream window rotation in
+streamed mode — verifies all k in-graph, and the step emits
+``n_accept + 1`` tokens with a KV length rewind over the rejected lanes.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +61,7 @@ from repro.core.erdpe import ExecMode, flash_matmul
 from repro.core.tiering import FlashWeight, deploy, encode_flash
 from repro.models import common as cm
 from repro.models import dense
+from repro.serving import spec as spec_mod
 from repro.serving.kvcache import PagedKVPool
 from repro.serving.sampler import SampleConfig, last_valid_hidden, sample
 
@@ -158,12 +166,24 @@ def _embed_chunk(cfg, params, lengths, tokens, q_lens):
     return x, positions, ctx_lens
 
 
-def _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, final_norm, lm_head,
-                 state, x, k_new, v_new, q_lens, admitted, positions,
-                 block_tables, key):
+def _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, spec_k, final_norm,
+                 lm_head, state, x, k_new, v_new, q_lens, admitted,
+                 positions, block_tables, key, drafts=None, n_draft=None,
+                 is_decode=None):
     """Everything after the layer stack — final norm, last-lane sampling,
     ONE batched paged KV scatter, in-graph Algorithm 2 — shared by the
-    monolithic and streamed data planes."""
+    monolithic and streamed data planes.
+
+    ``spec_k`` (static) switches on the speculative verify tail: lm_head
+    is additionally evaluated on the first ``spec_k + 1`` lanes of every
+    slot, ``spec.verify_lanes`` runs the in-graph accept/reject scan over
+    decoding slots' draft lanes (``is_decode``), and the KV length
+    advances by ``n_accept + 1`` instead of by the lanes written — the
+    in-graph half of the KV rewind (rejected rows stay in place,
+    unreachable past the length, overwritten by later steps). Returns
+    ``(tokens (slots, spec_k+1), n_emit (slots,), state, stats)`` instead
+    of the vanilla ``(tokens (slots,), state, stats)``.
+    """
     lengths = state["lengths"]
     if cfg.norm_type == "rms":
         x = cm.rms_norm(x, final_norm)
@@ -173,7 +193,22 @@ def _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, final_norm, lm_head,
     # never sample, so the (T-1) other vocab projections are skipped.
     x_last = last_valid_hidden(x, q_lens)
     logits = flash_matmul(x_last, lm_head, out_dtype=jnp.float32)
-    toks = sample(logits, key, sample_cfg)
+    if spec_k is None:
+        toks = sample(logits, key, sample_cfg)
+        n_emit = None
+        adv = q_lens
+    else:
+        # verify lanes: lm_head over the k+1 spec lanes (a decoding slot's
+        # last valid lane is always among them), accept/reject in-graph.
+        lane_logits = flash_matmul(x[:, :spec_k + 1], lm_head,
+                                   out_dtype=jnp.float32)
+        k_verify, k_last = jax.random.split(key)
+        toks_v, n_accept = spec_mod.verify_lanes(
+            lane_logits, drafts, n_draft, k_verify, sample_cfg)
+        tok_last = sample(logits, k_last, sample_cfg)    # prefill completions
+        toks = jnp.where(is_decode[:, None], toks_v, tok_last[:, None])
+        n_emit = jnp.where(is_decode, n_accept + 1, 1).astype(jnp.int32)
+        adv = jnp.where(is_decode, n_emit, q_lens)       # length REWIND
 
     # --- paged KV scatter: ONE batched write for all layers/slots/lanes ------
     block_size = state["k"].shape[2]
@@ -188,11 +223,13 @@ def _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, final_norm, lm_head,
     off = jnp.where(valid, pos % block_size, 0)
     kd = state["k"].at[:, blk, off].set(k_new.astype(state["k"].dtype))
     vd = state["v"].at[:, blk, off].set(v_new.astype(state["v"].dtype))
-    new_lengths = lengths + q_lens
+    new_lengths = lengths + adv
 
     # --- Algorithm 2: KV-cache-aware rebalance, in-graph -------------------
     # admitted (not worked): a budget-starved prefill slot's cached KV
     # still sets the attention-latency picture Algorithm 2 reacts to.
+    # Speculative lengths count ACCEPTED rows only (the rewound length is
+    # the attention context every later step actually reads).
     kv_len = jnp.max(jnp.where(admitted, new_lengths, 0))
     new_bitmap, new_prev, delta = sched.kv_aware_step(
         state["bitmap"], state["prev_cycles"], kv_len,
@@ -202,12 +239,40 @@ def _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, final_norm, lm_head,
                  "bitmap": new_bitmap, "prev_cycles": new_prev}
     stats = {"kv_len": kv_len, "delta_cycles": delta,
              "npu_fraction": sched.npu_fraction(new_bitmap)}
-    return toks, new_state, stats
+    if spec_k is None:
+        return toks, new_state, stats
+    dec = is_decode
+    stats["spec_drafted"] = jnp.sum(jnp.where(dec, n_draft, 0))
+    stats["spec_accepted"] = jnp.sum(jnp.where(dec, n_accept, 0))
+    stats["spec_emitted"] = jnp.sum(jnp.where(dec, n_emit, 0))
+    return toks, n_emit, new_state, stats
+
+
+def _embed_spec(cfg, proposer, spec_k, params, lengths, tokens, q_lens,
+                hist, hist_lens, draft_cap):
+    """Speculative head of the serving step: IN-GRAPH drafting + embedding.
+
+    The drafter proposes up to ``spec_k`` tokens per slot from its token
+    history; lanes 1..n_draft of decoding slots (``draft_cap > 0`` only
+    there) are filled with the proposals and the slot's lane count grows
+    to ``1 + n_draft`` — the verify pass then treats them like any other
+    chunk lanes (the paged chunk path already handles T > 1 causal).
+    Returns the vanilla embed tuple plus (q_lens, drafts, n_draft)."""
+    drafts, n_avail = proposer.propose(hist, hist_lens)
+    n_draft = jnp.minimum(n_avail, draft_cap).astype(jnp.int32)
+    lane = jnp.arange(tokens.shape[1])[None, :]
+    dpad = jnp.zeros_like(tokens).at[:, 1:spec_k + 1].set(drafts)
+    use = (lane >= 1) & (lane <= n_draft[:, None])
+    tokens = jnp.where(use, dpad, tokens)
+    q_lens = q_lens + n_draft            # draft_cap == 0 off the decode path
+    x, positions, ctx_lens = _embed_chunk(cfg, params, lengths, tokens, q_lens)
+    return x, positions, ctx_lens, q_lens, drafts, n_draft
 
 
 def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
-               params, attn_flash, state, tokens, q_lens, admitted,
-               block_tables, key):
+               proposer, spec_k, params, attn_flash, state, tokens, q_lens,
+               admitted, block_tables, key, hist=None, hist_lens=None,
+               draft_cap=None, is_decode=None):
     """One mixed prefill/decode step for ALL pool slots — the data plane.
 
     state  : {"k","v": (L, n_blocks, block_size, KV, Dh),
@@ -220,15 +285,23 @@ def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
              keep counting toward Algorithm 2's kv_len).
     block_tables : (slots, max_blocks) i32; entry 0 = unmapped/dump.
 
-    Returns (sampled (slots,) i32, new state, stats scalars). Everything —
-    layer scan, paged attention, paged KV scatter, length bump, Algorithm 2,
-    last-lane sampling — is one graph; idle slots compute garbage that is
-    steered into the reserved dump block, so slot churn, ragged chunks, and
-    admission churn never change shapes or retrace.
+    Returns (sampled (slots,) i32, new state, stats scalars) — or, with
+    ``spec_k`` set, (tokens (slots, spec_k+1), n_emit, state, stats).
+    Everything — drafting (spec), layer scan, paged attention, paged KV
+    scatter, length bump/rewind, Algorithm 2, sampling/verification — is
+    one graph; idle slots compute garbage that is steered into the
+    reserved dump block, so slot churn, ragged chunks, and admission churn
+    never change shapes or retrace.
     """
     bitmap = state["bitmap"] if kv_aware else None
-    x, positions, ctx_lens = _embed_chunk(cfg, params, state["lengths"],
-                                          tokens, q_lens)
+    if spec_k is None:
+        drafts = n_draft = None
+        x, positions, ctx_lens = _embed_chunk(cfg, params, state["lengths"],
+                                              tokens, q_lens)
+    else:
+        x, positions, ctx_lens, q_lens, drafts, n_draft = _embed_spec(
+            cfg, proposer, spec_k, params, state["lengths"], tokens, q_lens,
+            hist, hist_lens, draft_cap)
     body = functools.partial(_chunk_layer, cfg, exec_mode, bitmap, ctx_lens,
                              positions, block_tables)
     xs = (params["layers"], attn_flash, state["k"], state["v"])
@@ -243,10 +316,11 @@ def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
     else:
         x, (k_new, v_new) = jax.lax.scan(body, x, xs)
 
-    return _finish_step(cfg, sched_cfg, sample_cfg, kv_aware,
+    return _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, spec_k,
                         params["final_norm"], params["lm_head"], state, x,
                         k_new, v_new, q_lens, admitted, positions,
-                        block_tables, key)
+                        block_tables, key, drafts=drafts, n_draft=n_draft,
+                        is_decode=is_decode)
 
 
 def _stream_group_impl(cfg, exec_mode, kv_aware, group_size, layers_dram,
@@ -288,7 +362,14 @@ class Engine:
     ``exec_mode`` picks the paged-attention backend (PALLAS kernel vs XLA),
     mirroring erdpe.flash_matmul's split. ``block_size``/``n_blocks`` size
     the paged KV pool; ``admission_cfg`` sets the chunk width and the
-    Alg.2-coupled per-step token budget.
+    Alg.2/stall-coupled per-step token budget.
+
+    ``spec_cfg`` turns on SPECULATIVE serving (DESIGN.md §8): decoding
+    slots pack ``[last_token, d_1 .. d_k]`` into their chunk lanes, one
+    forward pass — one weight-stream window rotation in streamed mode —
+    verifies all k proposals, and each verify step emits ``n_accept + 1``
+    tokens. ``drafter='model'`` additionally takes a small resident draft
+    model (``draft_cfg``/``draft_params``, dense family, kept bf16).
     """
 
     def __init__(self, cfg, params, max_slots: int = 4, max_seq: int = 256,
@@ -298,7 +379,9 @@ class Engine:
                  compiled: bool = True, exec_mode: ExecMode = ExecMode.XLA,
                  block_size: int = 16, n_blocks: int | None = None,
                  admission_cfg: sched.AdmissionConfig | None = None,
-                 weight_store=None, stream_cfg=None):
+                 weight_store=None, stream_cfg=None,
+                 spec_cfg: spec_mod.SpecConfig | None = None,
+                 draft_cfg=None, draft_params=None):
         assert cfg.family == "dense"
         self.cfg = cfg
         self.sample_cfg = sample_cfg
@@ -310,6 +393,20 @@ class Engine:
         if self.streamed and not compiled:
             raise ValueError("streamed mode runs through the compiled data "
                              "plane (compiled=False has no layer groups)")
+        self.spec_cfg = spec_cfg
+        if spec_cfg is not None:
+            if not compiled:
+                raise ValueError("speculative decoding runs through the "
+                                 "compiled data plane (compiled=False has "
+                                 "no verify lanes)")
+            if spec_cfg.k + 1 > self.admission_cfg.chunk_tokens:
+                raise ValueError(
+                    f"spec k={spec_cfg.k} needs k+1 <= chunk_tokens="
+                    f"{self.admission_cfg.chunk_tokens} verify lanes")
+            self.proposer = spec_mod.DraftProposer(spec_cfg, draft_cfg,
+                                                   draft_params)
+        else:
+            self.proposer = None
         # DRAM tier: bf16 attention weights (copied once at init, §3.5);
         # flash tier: INT8+ECC FFN / lm_head AND a flash copy of Q/K/V/O so
         # the bitmap can offload projection columns to the in-flash engine.
@@ -335,27 +432,43 @@ class Engine:
         self.pool = PagedKVPool(cfg.n_layers, max_slots, max_seq,
                                 cfg.n_kv_heads, cfg.head_dim,
                                 block_size=block_size, n_blocks=n_blocks)
+        # admission cap on a request's KV rows: the exact max_seq, the
+        # physical pool minus the dump block, and (learned positions) the
+        # embedding table — shared by submit() and the verify-lane cap.
+        kv_cap = min(self.pool.max_seq,
+                     (self.pool.n_blocks - 1) * self.pool.block_size)
+        if "pos_embed" in self.params:
+            kv_cap = min(kv_cap, self.params["pos_embed"].shape[0])
+        self._kv_cap = kv_cap
         self.requests: dict[int, Request] = {}
         self.waiting: collections.deque[Request] = collections.deque()
         self._next_rid = 0
         self._key = jax.random.PRNGKey(seed)
         self._prev_cycles = jnp.int32(0)
         self._npu_frac = 1.0             # host view of the Alg. 2 bitmap
+        self._stall_frac = 0.0           # EMA of streamer stall per step
+        self._steps_done = 0
+        self._auto_depth_done = False
         self.stats: list[dict] = []
+        # per-slot token histories feeding the in-graph drafter (spec mode)
+        if spec_cfg is not None:
+            self._hist = np.zeros((max_slots, max_seq + 1), np.int32)
+            self._hist_lens = np.zeros((max_slots,), np.int32)
+            self._spec_totals = {"verify_steps": 0, "drafted": 0,
+                                 "accepted": 0, "emitted": 0}
         step = functools.partial(
             _step_impl, cfg, self.sched_cfg, sample_cfg, kv_aware,
-            exec_mode, not compiled)
+            exec_mode, not compiled, self.proposer,
+            spec_cfg.k if spec_cfg else None)
         self._trace_count = 0
         if self.streamed:
             self._build_stream_fns(exec_mode)
         elif compiled:
-            def counted(params, attn_flash, state, tokens, q_lens,
-                        admitted, block_tables, key):
+            def counted(*args):
                 # Python body only runs while jax traces; compiled replays
                 # skip it — so this counts traces, not steps.
                 self._trace_count += 1
-                return step(params, attn_flash, state, tokens, q_lens,
-                            admitted, block_tables, key)
+                return step(*args)
 
             # donate the KV pool + scheduler state: the step is an in-place
             # update of device-resident serving state. (CPU ignores donation
@@ -420,6 +533,7 @@ class Engine:
         group_bytes = max(
             sum(self.store.entry_nbytes(n) for n in self._group_entries(g))
             for g in range(self.n_groups))
+        self._group_bytes = group_bytes      # depth auto-tuning re-budgets
         lm_bytes = self.store.entry_nbytes("lm_head")
         # the rotating window holds up to prefetch_depth groups in flight;
         # whatever budget remains is residency-cache capacity.
@@ -487,16 +601,28 @@ class Engine:
         """The streamed data plane: three jitted pieces (embed -> layer
         groups x N -> finish) instead of one monolithic step. The group fn
         takes its layer offset as a TRACED scalar, so all groups share one
-        trace; steady state is exactly 3 traces total."""
+        trace; steady state is exactly 3 traces total — speculative mode
+        included (drafting folds into the embed trace, verification into
+        the finish trace)."""
         cfg = self.cfg
+        spec_k = self.spec_cfg.k if self.spec_cfg else None
+        proposer = self.proposer
         group = functools.partial(_stream_group_impl, cfg, exec_mode,
                                   self.kv_aware, self.stream_cfg.group_size)
         finish = functools.partial(_finish_step, cfg, self.sched_cfg,
-                                   self.sample_cfg, self.kv_aware)
+                                   self.sample_cfg, self.kv_aware, spec_k)
 
-        def embed_fn(params, lengths, tokens, q_lens):
-            self._trace_count += 1        # runs only while jax traces
-            return _embed_chunk(cfg, params, lengths, tokens, q_lens)
+        if spec_k is None:
+            def embed_fn(params, lengths, tokens, q_lens):
+                self._trace_count += 1    # runs only while jax traces
+                return _embed_chunk(cfg, params, lengths, tokens, q_lens)
+        else:
+            def embed_fn(params, lengths, tokens, q_lens, hist, hist_lens,
+                         draft_cap):
+                self._trace_count += 1
+                return _embed_spec(cfg, proposer, spec_k, params, lengths,
+                                   tokens, q_lens, hist, hist_lens,
+                                   draft_cap)
 
         def group_fn(*args):
             self._trace_count += 1
@@ -513,13 +639,22 @@ class Engine:
         self._step_fn = self._streamed_step
 
     def _streamed_step(self, params, attn_flash, state, tokens, q_lens,
-                       admitted, block_tables, key):
+                       admitted, block_tables, key, hist=None,
+                       hist_lens=None, draft_cap=None, is_decode=None):
         """Streamed data plane: the flash tier never sits device-resident
         as a whole — the streamer fills group l+1's window while group l's
-        asynchronously-dispatched compute runs."""
+        asynchronously-dispatched compute runs. In speculative mode the
+        layer pass is shared by ALL of a slot's verify lanes: one window
+        rotation per step amortizes over every accepted token."""
         del params, attn_flash                       # store-resident tier
-        x, positions, ctx_lens = self._embed_fn(
-            self._dram_params, state["lengths"], tokens, q_lens)
+        if self.spec_cfg is None:
+            drafts = n_draft = None
+            x, positions, ctx_lens = self._embed_fn(
+                self._dram_params, state["lengths"], tokens, q_lens)
+        else:
+            x, positions, ctx_lens, q_lens, drafts, n_draft = self._embed_fn(
+                self._dram_params, state["lengths"], tokens, q_lens, hist,
+                hist_lens, draft_cap)
         ks, vs = [], []
         for g, window in self.streamer.stream():
             lo = jnp.int32(g * self.stream_cfg.group_size)
@@ -530,19 +665,83 @@ class Engine:
             vs.append(v_g)
         k_new = jnp.concatenate(ks, axis=0)          # (L, slots, T, KV, Dh)
         v_new = jnp.concatenate(vs, axis=0)
-        return self._finish_fn(self._dram_params["final_norm"],
-                               self._lm_head, state, x, k_new, v_new,
-                               q_lens, admitted, positions, block_tables,
-                               key)
+        args = (self._dram_params["final_norm"], self._lm_head, state, x,
+                k_new, v_new, q_lens, admitted, positions, block_tables,
+                key)
+        if self.spec_cfg is not None:
+            args += (drafts, n_draft, is_decode)
+        return self._finish_fn(*args)
+
+    def _maybe_autotune_depth(self):
+        """Overlap-depth auto-tuning (``StreamConfig.auto_depth``): once,
+        after the first measured steps, re-pick ``prefetch_depth`` from the
+        observed stall/stream ratio — a consumer that still stalls wants
+        more windows in flight; one that never does returns the budget to
+        the residency cache. The device budget invariant is preserved by
+        re-splitting it: window bytes grow/shrink, cache capacity moves the
+        other way (never below the pinned floor)."""
+        sc = self.stream_cfg
+        if (not sc.auto_depth or self._auto_depth_done
+                or self._steps_done < sc.auto_depth_after):
+            return
+        self._auto_depth_done = True
+        st = self.streamer
+        if st.stream_s <= 0:
+            return                       # nothing streamed: no signal
+        ratio = st.stall_s / st.stream_s
+        depth = st.prefetch_depth
+        want = depth
+        if ratio > 0.10:
+            want = depth + max(1, round(depth * min(ratio, 1.0)))
+        elif ratio < 0.02 and depth > 1:
+            want = depth - 1
+        if sc.device_budget_bytes is not None:
+            afford = int(sc.device_budget_bytes - self.cache.pinned_bytes) \
+                // max(self._group_bytes, 1)
+            want = min(want, max(afford, 1))
+        want = max(1, int(want))
+        if want == depth:
+            return
+        st.prefetch_depth = want
+        if sc.device_budget_bytes is not None and not sc.pin_all:
+            # eager trim: a deeper window must RECLAIM its bytes from the
+            # cache now, not at some future insert — resident + in-flight
+            # window bytes must never exceed the device budget.
+            self.cache.resize(max(
+                self.cache.pinned_bytes,
+                sc.device_budget_bytes - want * self._group_bytes))
 
     def stream_stats(self) -> dict:
         """Streamer + residency-cache + page-store counters (streamed mode):
         stall/stream seconds, streamed bytes, cache hit/miss, per-plane page
-        reads and the analytical NAND seconds they imply. Page counters
+        reads and the analytical NAND seconds they imply, the (possibly
+        auto-tuned) prefetch depth, and — in speculative mode — the
+        acceptance-rate / tokens-per-verify-step telemetry. Page counters
         cover SERVING only (init-time programming/pin reads are reset)."""
         if not self.streamed:
             raise ValueError("stream_stats: engine is not in streamed mode")
-        return {**self.streamer.stats(), **self.store.stats()}
+        out = {**self.streamer.stats(), **self.store.stats(),
+               "prefetch_depth": self.streamer.prefetch_depth}
+        if self.spec_cfg is not None:
+            out.update(self.spec_stats())
+        return out
+
+    def spec_stats(self) -> dict:
+        """Speculative-decode telemetry: how much one weight pass amortizes.
+
+        ``spec_tokens_per_step`` is emitted tokens per VERIFY step (steps
+        with >= 1 decoding slot) — in streamed mode, tokens bought per
+        window rotation; ``spec_acceptance_rate`` is accepted / drafted."""
+        if self.spec_cfg is None:
+            raise ValueError("spec_stats: engine is not in speculative mode")
+        t = self._spec_totals
+        return {"spec_verify_steps": t["verify_steps"],
+                "spec_drafted": t["drafted"],
+                "spec_accepted": t["accepted"],
+                "spec_emitted": t["emitted"],
+                "spec_acceptance_rate": t["accepted"] / max(t["drafted"], 1),
+                "spec_tokens_per_step": t["emitted"]
+                / max(t["verify_steps"], 1)}
 
     # --- request management (control plane) -----------------------------------
 
@@ -560,15 +759,13 @@ class Engine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, list(prompt), max_new)
-        pool = self.pool
         # bound by the EXACT max_seq (rounding up to block granularity
         # would admit valid lanes past the learned-position table), by the
         # physical pool minus the dump block, and — for learned-position
         # models — by the table itself (a valid lane's out-of-bounds
-        # jnp.take would fill NaN under jit)
-        cap = min(pool.max_seq, (pool.n_blocks - 1) * pool.block_size)
-        if "pos_embed" in self.params:
-            cap = min(cap, self.params["pos_embed"].shape[0])
+        # jnp.take would fill NaN under jit). Computed once in __init__;
+        # the speculative verify-lane cap shares it.
+        cap = self._kv_cap
         if req.kv_rows > cap:
             self._next_rid = rid
             raise ValueError(
@@ -592,11 +789,25 @@ class Engine:
 
     # --- the serving step (one compiled call; mixed prefill/decode) -----------
 
+    def _draft_cap(self, req: Request) -> int:
+        """Verify lanes this decoding request can use: bounded by spec k,
+        by the tokens it still owes (a draft past max_new is pure waste —
+        and capping by ``remaining - 1`` keeps every speculative KV write
+        inside the admission reservation), by the pool/table row cap, and
+        by the static chunk width."""
+        remaining = req.max_new - len(req.out)
+        room = self._kv_cap - int(self.pool.lengths[req.slot]) - 1
+        return max(0, min(self.spec_cfg.k, remaining - 1, room,
+                          self.admission_cfg.chunk_tokens - 1))
+
     def step(self) -> int:
         """One continuous-batching step over all running slots: decoding
-        slots advance one token, prefilling slots consume a prompt chunk
-        under the Alg.2-coupled token budget. Returns tokens processed."""
+        slots advance (one token — or, speculatively, ``n_accept + 1``
+        tokens through ONE forward pass), prefilling slots consume a
+        prompt chunk under the Alg.2/stall-coupled token budget. Returns
+        tokens processed (prompt lanes + emitted decode tokens)."""
         self._admit()
+        spec = self.spec_cfg is not None
         decode_slots, prefill_slots = [], []
         # ARRIVAL order (rid), not slot order: recycled slot ids would
         # otherwise let a later prompt monopolize the prefill budget ahead
@@ -607,9 +818,12 @@ class Engine:
                 continue
             if req.prefilling:
                 prefill_slots.append((slot, len(req.prompt) - req.pos))
+            elif spec:
+                decode_slots.append((slot, 1 + self._draft_cap(req)))
             else:
                 decode_slots.append(slot)
-        budget = sched.step_token_budget(self.admission_cfg, self._npu_frac)
+        budget = sched.step_token_budget(self.admission_cfg, self._npu_frac,
+                                         self._stall_frac)
         plan = sched.plan_chunks(decode_slots, prefill_slots, budget,
                                  self.admission_cfg.chunk_tokens)
         if not plan:
@@ -618,9 +832,13 @@ class Engine:
         tokens = np.zeros((n, t_chunk), np.int32)
         q_lens = np.zeros((n,), np.int32)
         admitted = np.zeros((n,), bool)
+        if spec:
+            draft_cap = np.zeros((n,), np.int32)
+            is_decode = np.zeros((n,), bool)
         for slot, _ in prefill_slots:
             admitted[slot] = True
-        admitted[decode_slots] = True
+        admitted[[s if isinstance(s, int) else s[0]
+                  for s in decode_slots]] = True
         for slot, cnt in plan.items():
             req = self.requests[self.pool.active[slot]]
             if req.prefilling:
@@ -629,47 +847,101 @@ class Engine:
                 q_lens[slot] = len(chunk)
             else:
                 tokens[slot, 0] = req.out[-1]
-                q_lens[slot] = 1
-            # map physical blocks for this step's writes (host control plane;
-            # draws on the admission reservation, so it cannot fail)
-            self.pool.ensure(slot, int(self.pool.lengths[slot]) + int(q_lens[slot]))
+                q_lens[slot] = 1          # + n_draft lanes added in-graph
+                if spec:
+                    is_decode[slot] = True
+                    draft_cap[slot] = cnt - 1   # budget-clamped verify lanes
+                    seq = req.prompt + req.out
+                    hl = min(len(seq), self._hist.shape[1])
+                    self._hist[slot, :hl] = seq[-hl:]
+                    self._hist_lens[slot] = hl
+            # map physical blocks for this step's writes — ALL lanes, draft
+            # lanes included (host control plane; draws on the admission
+            # reservation, so it cannot fail)
+            self.pool.ensure(slot, int(self.pool.lengths[slot]) + cnt)
         self._key, sk = jax.random.split(self._key)
         state = dict(self.pool.device_state(),
                      bitmap=self.bitmap, prev_cycles=self._prev_cycles)
-        toks, state, stats = self._step_fn(
-            self.params, self.attn_flash, state,
-            jnp.asarray(tokens), jnp.asarray(q_lens),
-            jnp.asarray(admitted), self.pool.block_tables_dev(), sk)
+        t_step0 = time.perf_counter()
+        stall0 = self.streamer.stall_s if self.streamed else 0.0
+        args = (self.params, self.attn_flash, state,
+                jnp.asarray(tokens), jnp.asarray(q_lens),
+                jnp.asarray(admitted), self.pool.block_tables_dev(), sk)
+        if spec:
+            args += (jnp.asarray(self._hist), jnp.asarray(self._hist_lens),
+                     jnp.asarray(draft_cap), jnp.asarray(is_decode))
+            toks, n_emit, state, stats = self._step_fn(*args)
+            n_emit_host = np.asarray(n_emit)
+        else:
+            toks, state, stats = self._step_fn(*args)
         self.pool.set_device_state(state)
         self.bitmap = state["bitmap"]
         self._prev_cycles = state["prev_cycles"]
         # the step's only device->host syncs: sampled tokens + stat scalars
-        toks_host = np.asarray(toks)
+        toks_host = np.asarray(toks)      # (slots,) — or (slots, k+1) spec
         n_processed = n_prefill = 0
         for slot in plan:
             req = self.requests[self.pool.active[slot]]
             cnt = int(q_lens[slot])
-            n_processed += cnt
-            self.pool.bump(slot, cnt)
             if req.prefilling:
-                req.pos += cnt
+                n_processed += cnt
                 n_prefill += cnt
+                self.pool.bump(slot, cnt)
+                req.pos += cnt
                 if req.prefilling:
                     continue         # more prompt chunks to go: no sample yet
-            # decoding slots and just-completed prefills sampled a token
-            req.out.append(int(toks_host[slot]))
+                # just-completed prefill sampled one token at its last lane
+                req.out.append(int(toks_host[slot, 0] if spec
+                                   else toks_host[slot]))
+            elif spec:
+                # verify step: n_accept + 1 tokens emitted; the pool length
+                # REWINDS to the accepted rows (host mirror here — device
+                # lengths advanced by the same amount in-graph; rejected
+                # lanes' K/V stays in place, unreachable, overwritten later)
+                ne = int(n_emit_host[slot])
+                new_len = int(self.pool.lengths[slot]) + ne
+                take = min(ne, req.max_new - len(req.out))
+                req.out.extend(int(t) for t in toks_host[slot, :take])
+                self.pool.rewind(slot, new_len)
+                n_processed += ne
+            else:
+                self.pool.bump(slot, cnt)
+                req.out.append(int(toks_host[slot]))
+                n_processed += cnt
             if len(req.out) >= req.max_new:
                 req.done = True
                 self.pool.release(slot)   # O(1): no device work
         st = jax.device_get(stats)
         self._npu_frac = float(st["npu_fraction"])
-        self.stats.append({
+        entry = {
             "kv_len": int(st["kv_len"]),
             "delta_cycles": int(st["delta_cycles"]),
             "npu_fraction": self._npu_frac,
             "prefill_tokens": n_prefill,
             "decode_tokens": n_processed - n_prefill,
-        })
+        }
+        if spec:
+            entry["spec_drafted"] = int(st["spec_drafted"])
+            entry["spec_accepted"] = int(st["spec_accepted"])
+            if bool(is_decode.any()):
+                t = self._spec_totals
+                t["verify_steps"] += 1
+                t["drafted"] += int(st["spec_drafted"])
+                t["accepted"] += int(st["spec_accepted"])
+                t["emitted"] += int(st["spec_emitted"])
+        if self.streamed:
+            # stall fraction of step wall time (EMA): the residency signal
+            # the admission budget contracts with (scheduler.step_token_
+            # budget) — a weight-stream-bound engine sheds prefill share.
+            dt = time.perf_counter() - t_step0
+            frac = (self.streamer.stall_s - stall0) / max(dt, 1e-9)
+            self._stall_frac = 0.5 * self._stall_frac \
+                + 0.5 * min(max(frac, 0.0), 1.0)
+            entry["stall_frac"] = self._stall_frac
+        self.stats.append(entry)
+        self._steps_done += 1
+        if self.streamed:
+            self._maybe_autotune_depth()
         self._admit()                    # freed slots host waiting requests
         return n_processed
 

@@ -148,6 +148,24 @@ class PagedKVPool:
         already bumped in-graph by the compiled step)."""
         self.lengths[slot] += n
 
+    def rewind(self, slot: int, new_len: int):
+        """Speculative-decode KV rollback: set the slot's accepted length.
+
+        A verify step writes K/V for ALL its lanes (last token + k drafts)
+        but only ``n_accept + 1`` of those rows become part of the
+        sequence; the rollback is a LENGTH rewind only — host mirror here,
+        device lengths in-graph by the verify step — because the rejected
+        rows are unreachable (every read is bounded by the length) and are
+        overwritten in place by later steps before they ever become valid.
+        Blocks mapped for the rejected lanes STAY mapped and ref-counted:
+        the slot's length will grow back through them, so unmapping would
+        just churn the free list (invariants property-tested in
+        tests/test_spec.py)."""
+        assert slot in self.active, "rewind of an inactive slot"
+        assert 0 <= new_len <= self.capacity(slot), \
+            f"rewind to {new_len} outside mapped capacity {self.capacity(slot)}"
+        self.lengths[slot] = new_len
+
     # --- device-facing views --------------------------------------------------
 
     def device_state(self) -> dict:

@@ -1,4 +1,12 @@
-"""Token samplers (greedy / temperature / top-k / top-p), jit-safe."""
+"""Token samplers (greedy / temperature / top-k / top-p), jit-safe.
+
+Logits may carry any leading batch shape ``(..., V)``. When a LANE axis is
+present — ``(B, T, V)``, the speculative verify path — each lane draws from
+its OWN PRNG key (``lane_keys``): rejection sampling needs the accept
+uniforms and the per-lane resamples to be independent draws, and a single
+per-step key would correlate them. Greedy (temperature == 0) never touches
+the key, so threading per-lane keys cannot change greedy behavior.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -26,19 +34,40 @@ def last_valid_hidden(x: jnp.ndarray, q_lens: jnp.ndarray) -> jnp.ndarray:
     return jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
 
 
-def sample(logits: jnp.ndarray, key, cfg: SampleConfig) -> jnp.ndarray:
-    """logits: (B, V) -> (B,) int32."""
-    if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def lane_keys(key, n: int):
+    """(n, ...) independent per-lane PRNG keys for verify-lane sampling."""
+    return jax.random.split(key, n)
+
+
+def filter_logits(logits: jnp.ndarray, cfg: SampleConfig) -> jnp.ndarray:
+    """Temperature-scale and top-k/top-p mask logits (..., V) — the SINGLE
+    definition of the sampling distribution, shared by ``sample`` and the
+    speculative rejection-sampling verifier (serving/spec.py), so the
+    accept test and the fallback sample can never use different
+    distributions. Call only with temperature > 0."""
     logits = logits.astype(jnp.float32) / cfg.temperature
     if cfg.top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -cfg.top_k][:, None]
+        kth = jnp.sort(logits, axis=-1)[..., -cfg.top_k][..., None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     if cfg.top_p < 1.0:
-        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+        sorted_l = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
         probs = jax.nn.softmax(sorted_l, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
         cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1)
-        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[..., None], axis=-1)
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
-    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    return logits
+
+
+def sample(logits: jnp.ndarray, key, cfg: SampleConfig) -> jnp.ndarray:
+    """logits: (..., V) -> (...) int32. With a lane axis — (B, T, V) —
+    every lane draws from its own key (``lane_keys``)."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = filter_logits(logits, cfg)
+    if logits.ndim <= 2:
+        return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+    keys = lane_keys(key, logits.shape[1])
+    draw = jax.vmap(lambda lg, kk: jax.random.categorical(kk, lg, axis=-1),
+                    in_axes=(1, 0), out_axes=1)
+    return draw(logits, keys).astype(jnp.int32)

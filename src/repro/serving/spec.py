@@ -1,0 +1,266 @@
+"""Speculative decoding for the NVLLM serving engine (DESIGN.md §8).
+
+Streamed serving is weight-stream-bound: every decoded token pays one full
+pass over the flash tier (one `LayerStreamer` window rotation). This module
+supplies the two halves that let ONE such pass emit several tokens:
+
+  * ``DraftProposer`` — proposes up to k draft tokens per decoding slot,
+    IN-GRAPH (both drafters are pure jit-safe functions the engine folds
+    into its compiled embed stage, so drafting adds no traces and no extra
+    host round-trips):
+      - ``ngram``: prompt-lookup drafting — find the most recent earlier
+        occurrence of the slot's trailing n-gram in its own token history
+        (prompt + generated) and propose the tokens that followed it;
+      - ``model``: a small RESIDENT draft model (dense family, bf16, no
+        flash tier) greedily decodes k tokens over a sliding context
+        window of the history.
+  * ``verify_lanes`` — the in-graph accept/reject scan over the target
+    model's verify-lane logits: greedy exact-match acceptance, plus
+    standard rejection sampling for temperature > 0 (accept draft d with
+    prob min(1, p(d)/q(d)); both drafters propose greedily, so q is a
+    point mass and the residual distribution is p with d zeroed). Every
+    accept uniform and every fallback sample draws from its OWN per-lane
+    PRNG key (``sampler.lane_keys``).
+
+The engine packs ``[last_token, d_1 .. d_k]`` into a decoding slot's chunk
+lanes — the paged-attention chunk path already handles T > 1 causal — and
+verifies all k proposals in ONE forward pass, i.e. one weight stream.
+Accepted drafts plus one bonus token emit ``n_accept + 1`` tokens per
+step; the KV length simply advances by that count (a length REWIND
+relative to the lanes written — rejected rows stay in place and are
+overwritten by later steps before they ever become readable).
+
+Greedy invariant (property the parity tests lean on): whatever the
+drafter proposes, the emitted token stream is identical to plain greedy
+decoding — drafts only change how many tokens one pass emits, never
+which tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import dense
+from repro.serving.sampler import SampleConfig, filter_logits, lane_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative serving mode (``Engine(spec_cfg=...)``)."""
+    k: int = 4                  # max draft tokens verified per slot per step
+    drafter: str = "ngram"      # "ngram" (prompt lookup) | "model"
+    ngram: int = 3              # longest trailing n-gram to look up
+    draft_window: int = 16      # context window of the draft model
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"spec k={self.k}: need >= 1 draft lane")
+        if self.drafter not in ("ngram", "model"):
+            raise ValueError(f"unknown drafter {self.drafter!r}")
+        if self.drafter == "ngram" and self.ngram < 1:
+            raise ValueError("ngram drafter needs ngram >= 1")
+
+
+# --- drafters (pure, jit-safe; called inside the engine's embed stage) -------
+
+def ngram_propose(hist: jnp.ndarray, lens: jnp.ndarray, k: int,
+                  n_max: int = 3) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Prompt-lookup drafting over per-slot token histories.
+
+    hist: (B, H) i32 token history (prompt + generated), left-aligned,
+          don't-care past ``lens``; lens: (B,) i32.
+
+    For each slot, find the MOST RECENT position p < lens - n where
+    ``hist[p:p+n]`` equals the trailing n-gram ``hist[lens-n:lens]``,
+    preferring longer n (n = n_max .. 1), and propose the up-to-k tokens
+    that followed that earlier occurrence. Returns (drafts (B, k) i32,
+    n_avail (B,) i32); slots with no match get n_avail = 0 (the engine
+    falls back to plain single-lane decode for them).
+    """
+    b, h = hist.shape
+    idx = jnp.arange(h)
+    cont_start = jnp.full((b,), -1, jnp.int32)   # where the continuation begins
+    for n in range(n_max, 0, -1):
+        # trailing n-gram per slot
+        suf_pos = lens[:, None] - n + jnp.arange(n)[None, :]
+        suffix = jnp.take_along_axis(hist, jnp.clip(suf_pos, 0, h - 1), axis=1)
+        # all candidate windows hist[p : p+n]
+        win_pos = idx[:, None] + jnp.arange(n)[None, :]            # (H, n)
+        wins = hist[:, jnp.clip(win_pos, 0, h - 1)]                # (B, H, n)
+        match = jnp.all(wins == suffix[:, None, :], axis=-1)
+        # p + n < lens: at least one continuation token exists AND the
+        # match is not the trailing suffix itself; lens >= n + 1 likewise.
+        match &= (idx[None, :] + n < lens[:, None]) & (lens[:, None] > n)
+        best = jnp.max(jnp.where(match, idx[None, :], -1), axis=1)
+        found = (best >= 0) & (cont_start < 0)     # longer n already iterated
+        cont_start = jnp.where(found, (best + n).astype(jnp.int32), cont_start)
+    pos = cont_start[:, None] + jnp.arange(k)[None, :]
+    drafts = jnp.take_along_axis(hist, jnp.clip(pos, 0, h - 1), axis=1)
+    ok = (cont_start[:, None] >= 0) & (pos < lens[:, None])
+    return (jnp.where(ok, drafts, 0).astype(jnp.int32),
+            jnp.sum(ok, axis=1).astype(jnp.int32))
+
+
+def _draft_forward(dcfg, dparams, toks: jnp.ndarray,
+                   valid: jnp.ndarray) -> jnp.ndarray:
+    """Last-position logits of the resident draft model over a (B, W)
+    sliding window. Positions are WINDOW-RELATIVE (0..W-1) — the drafter
+    is a proposal heuristic, so absolute-position fidelity is not required
+    and the window can never run past a learned-position table. Invalid
+    (pre-history) lanes are masked out of attention."""
+    b, w = toks.shape
+    positions = jnp.arange(w)
+    x = dense._embed(dcfg, dparams, toks, positions)
+    acfg = dense.attn_cfg(dcfg)
+
+    def body(x, lp):
+        h = dense._norm(dcfg, x, lp, "ln1")
+        q, kk, vv = cm.qkv_project(lp["attn"], h, acfg, positions)
+        # plain masked softmax over the tiny (W, W) window
+        scale = dcfg.head_dim ** -0.5
+        qf = q.astype(jnp.float32) * scale
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kk.astype(jnp.float32))
+        causal = positions[None, :] <= positions[:, None]
+        mask = causal[None, None] & valid[:, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+        p = jnp.where(mask, p, 0.0)
+        p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+        attn = jnp.einsum("bhqk,bkhd->bqhd", p, vv.astype(jnp.float32))
+        attn = attn.reshape(b, w, -1).astype(x.dtype)
+        x = x + jnp.dot(attn.astype(jnp.float32),
+                        lp["attn"]["wo"].astype(jnp.float32)).astype(x.dtype)
+        x = x + dense._ffn_apply(dcfg, lp["ffn"], dense._norm(dcfg, x, lp, "ln2"))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, dparams["layers"])
+    if dcfg.norm_type == "rms":
+        x = cm.rms_norm(x, dparams["final_norm"])
+    else:
+        x = cm.layer_norm(x, dparams["final_norm"]["g"],
+                          dparams["final_norm"]["b"])
+    return jnp.dot(x[:, -1].astype(jnp.float32),
+                   dparams["lm_head"].astype(jnp.float32))       # (B, V)
+
+
+def model_propose(dcfg, dparams, hist: jnp.ndarray, lens: jnp.ndarray,
+                  k: int, window: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy k-token rollout of the resident draft model over the last
+    ``window`` history tokens. Returns (drafts (B, k), n_avail (B,) == k
+    wherever any history exists)."""
+    b, h = hist.shape
+    pos = lens[:, None] - window + jnp.arange(window)[None, :]
+    toks = jnp.take_along_axis(hist, jnp.clip(pos, 0, h - 1), axis=1)
+    valid = pos >= 0
+    toks = jnp.where(valid, toks, 0)
+
+    def step(carry, _):
+        toks, valid = carry
+        nxt = jnp.argmax(_draft_forward(dcfg, dparams, toks, valid),
+                         axis=-1).astype(jnp.int32)
+        toks = jnp.concatenate([toks[:, 1:], nxt[:, None]], axis=1)
+        valid = jnp.concatenate(
+            [valid[:, 1:], jnp.ones((b, 1), bool)], axis=1)
+        return (toks, valid), nxt
+
+    _, drafts = jax.lax.scan(step, (toks, valid), None, length=k)
+    n_avail = jnp.where(lens > 0, k, 0).astype(jnp.int32)
+    return drafts.T.astype(jnp.int32), n_avail
+
+
+class DraftProposer:
+    """Engine-facing drafter: ``propose(hist, lens)`` is pure and
+    trace-safe, so the engine calls it INSIDE its jitted embed stage."""
+
+    def __init__(self, cfg: SpecConfig, draft_cfg=None, draft_params=None):
+        self.cfg = cfg
+        if cfg.drafter == "model":
+            if draft_cfg is None or draft_params is None:
+                raise ValueError("drafter='model' needs draft_cfg and "
+                                 "draft_params (a small resident model)")
+            if draft_cfg.family != "dense":
+                raise ValueError("draft model must be dense-family")
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+
+    def propose(self, hist: jnp.ndarray,
+                lens: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """(B, H) history + (B,) lens -> (drafts (B, k), n_avail (B,))."""
+        if self.cfg.drafter == "ngram":
+            return ngram_propose(hist, lens, self.cfg.k, self.cfg.ngram)
+        return model_propose(self.draft_cfg, self.draft_params, hist, lens,
+                             self.cfg.k, self.cfg.draft_window)
+
+
+# --- in-graph verification ---------------------------------------------------
+
+def verify_lanes(logits: jnp.ndarray, drafts: jnp.ndarray,
+                 n_draft: jnp.ndarray, key,
+                 cfg: SampleConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Accept/reject scan over one verify pass's lane logits.
+
+    logits : (B, K+1, V) f32 — target logits at lane j (context = history
+             through lane j; lane 0 carries the last emitted token, lane
+             j >= 1 carries draft j).
+    drafts : (B, K) i32 — proposed tokens (don't-care past n_draft).
+    n_draft: (B,) i32 — valid drafts per slot (0 = plain decode).
+
+    Returns (tokens (B, K+1) i32, n_accept (B,) i32): the step emits
+    ``tokens[:, : n_accept + 1]`` — accepted drafts followed by one bonus
+    token sampled from the target distribution (greedy: its argmax; on a
+    rejection at lane j, the residual distribution at lane j).
+    """
+    b, k1, _ = logits.shape
+    k = k1 - 1
+    j = jnp.arange(k)
+    if cfg.temperature <= 0.0:
+        # greedy exact-match: accepted drafts EQUAL the per-lane argmax, so
+        # the emitted prefix is just the targets row — identical to what
+        # sequential greedy decode would have produced.
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        ok = (drafts == tgt[:, :k]) & (j[None, :] < n_draft[:, None])
+        n_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        return tgt, n_acc.astype(jnp.int32)
+
+    # rejection sampling against the FILTERED target distribution (same
+    # temperature/top-k/top-p algebra as sampler.sample). Drafters are
+    # greedy (q = point mass at the draft), so: accept draft d at lane j
+    # with prob p_j(d); on rejection the residual is p_j with d zeroed.
+    filt = filter_logits(logits, cfg)                   # (B, K+1, V)
+    probs = jax.nn.softmax(filt, axis=-1)
+    k_accept, k_plain, k_resid = lane_keys(key, 3)
+    p_draft = jnp.take_along_axis(probs[:, :k], drafts[..., None],
+                                  axis=-1)[..., 0]      # (B, K)
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (b,)),
+                 out_axes=1)(lane_keys(k_accept, k))    # (B, K) per-lane
+    ok = (u < p_draft) & (j[None, :] < n_draft[:, None])
+    acc = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+    n_acc = jnp.sum(acc, axis=1).astype(jnp.int32)
+
+    # per-lane fallback samples, each from its OWN key: `plain` from the
+    # target distribution (used when every draft was accepted), `resid`
+    # from the rejection residual at that lane.
+    plain = jax.vmap(lambda lg, kk: jax.random.categorical(kk, lg),
+                     in_axes=(1, 0), out_axes=1)(filt, lane_keys(k_plain, k1))
+    drafts_pad = jnp.pad(drafts, ((0, 0), (0, 1)))      # lane K: no draft
+    resid_f = jnp.where(
+        jax.nn.one_hot(drafts_pad, filt.shape[-1], dtype=bool), -jnp.inf, filt)
+    # a residual can be empty (draft owned ALL filtered mass, e.g. top_p
+    # collapsed the distribution to the draft): fall back to plain then.
+    resid_ok = jnp.any(jnp.isfinite(resid_f), axis=-1)  # (B, K+1)
+    resid = jax.vmap(lambda lg, kk: jax.random.categorical(kk, lg),
+                     in_axes=(1, 0), out_axes=1)(resid_f, lane_keys(k_resid, k1))
+    fallback = jnp.where(resid_ok, resid, plain)
+
+    jj = jnp.arange(k1)
+    rejected_here = jj[None, :] < n_draft[:, None]      # a draft exists there
+    bonus_lane = jnp.where(rejected_here, fallback, plain)
+    bonus = jnp.take_along_axis(bonus_lane, n_acc[:, None], axis=1)[:, 0]
+    tokens = jnp.where(jj[None, :] < n_acc[:, None], drafts_pad,
+                       jnp.where(jj[None, :] == n_acc[:, None],
+                                 bonus[:, None], 0))
+    return tokens.astype(jnp.int32), n_acc

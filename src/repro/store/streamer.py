@@ -36,6 +36,13 @@ class StreamConfig:
     prefetch_depth: int = 2                 # device windows in flight
     pin_all: bool = False                   # residency = everything (parity)
     pin_edges: bool = True                  # pin first/last groups if room
+    # overlap-depth auto-tuning: after ``auto_depth_after`` measured steps,
+    # re-pick prefetch_depth from the streamer's stall/stream telemetry
+    # (growing it while the consumer stalls, within what the device budget
+    # affords; shrinking it back to residency capacity when it does not)
+    # instead of trusting the static value above.
+    auto_depth: bool = False
+    auto_depth_after: int = 4               # measured steps before re-picking
 
 
 @dataclasses.dataclass
@@ -70,6 +77,35 @@ class ResidencyCache:
     def bytes_used(self) -> int:
         with self._lock:
             return sum(e.nbytes for e in self._entries.values())
+
+    @property
+    def pinned_bytes(self) -> int:
+        """Bytes held by pinned entries — the floor any re-budgeting (e.g.
+        prefetch-depth auto-tuning) must leave for the cache."""
+        with self._lock:
+            return sum(e.nbytes for e in self._entries.values() if e.pinned)
+
+    def resize(self, capacity_bytes: int | None):
+        """Re-budget the cache, immediately LRU-evicting unpinned ref-free
+        entries down to the new capacity. Eviction otherwise only happens
+        inside ``insert``, so a capacity CUT (prefetch-depth auto-tuning
+        moving budget from cache to window) must trim eagerly — resident
+        bytes above the new cap would otherwise overrun the device budget
+        until some later insert happened to force room."""
+        with self._lock:
+            self.capacity = capacity_bytes
+            if capacity_bytes is None:
+                return
+            used = sum(e.nbytes for e in self._entries.values())
+            for k in list(self._entries):
+                if used <= capacity_bytes:
+                    break
+                e = self._entries[k]
+                if e.pinned or e.refs > 0:
+                    continue
+                used -= e.nbytes
+                del self._entries[k]
+                self.evictions += 1
 
     def __contains__(self, key) -> bool:
         with self._lock:

@@ -72,3 +72,39 @@ def test_estimator_monotonic_in_kv():
     c1 = sched.estimate_attention_cycles(128, 512, 8, 64)
     c2 = sched.estimate_attention_cycles(4096, 512, 8, 64)
     assert int(c2) > int(c1)
+
+
+def test_step_budget_contracts_with_stall_fraction():
+    """Residency-aware admission: a weight-stream-bound step (high stall
+    fraction) shrinks the token budget the same floor-anchored way the
+    Alg. 2 npu_fraction does — and composes with it."""
+    cfg = sched.AdmissionConfig(token_budget=32, budget_floor=0.25)
+    full = sched.step_token_budget(cfg, 1.0)
+    assert full == sched.step_token_budget(cfg, 1.0, stall_frac=0.0) == 32
+    stalled = sched.step_token_budget(cfg, 1.0, stall_frac=0.9)
+    assert stalled < full
+    # floor anchors both contractions: never below floor^2 * budget, >= 1
+    floorest = sched.step_token_budget(cfg, 0.0, stall_frac=1.0)
+    assert floorest == max(1, round(32 * 0.25 * 0.25))
+    # non-adaptive config ignores both signals
+    napt = sched.AdmissionConfig(token_budget=32, adaptive=False)
+    assert sched.step_token_budget(napt, 0.0, stall_frac=1.0) == 32
+
+
+def test_plan_chunks_accounts_verify_lanes():
+    """Speculative verify lanes are STEP TOKENS: decode entries may ask
+    for (slot, 1 + k) lanes, funded after the base decode lanes and
+    before prefill — and clamped when the budget runs short."""
+    # plenty of budget: full verify lanes + prefill leftovers
+    plan = sched.plan_chunks([(0, 5), (1, 5)], [(2, 40)], budget=16,
+                             chunk_tokens=8)
+    assert plan[0] == 5 and plan[1] == 5
+    assert plan[2] == 6                     # 16 - 10 lanes left for prefill
+    # tight budget: base decode lanes survive, verify lanes clamp in
+    # order (slot 0 gets its 4, slot 1 only 1), prefill gets nothing
+    plan = sched.plan_chunks([(0, 5), (1, 5)], [(2, 40)], budget=7,
+                             chunk_tokens=8)
+    assert plan[0] == 5 and plan[1] == 2 and 2 not in plan
+    # int entries stay the vanilla 1-lane decode (back-compat)
+    plan = sched.plan_chunks([0, 1], [(2, 40)], budget=10, chunk_tokens=8)
+    assert plan[0] == plan[1] == 1 and plan[2] == 8

@@ -1,0 +1,331 @@
+"""Speculative decoding through the serving engine (ISSUE 4).
+
+The load-bearing property is the GREEDY INVARIANT: whatever the drafter
+proposes, the spec engine's emitted token stream is identical to plain
+greedy decoding — drafts only change how many tokens one forward pass
+(one weight-stream window rotation, in streamed mode) emits, never which
+tokens. Parity tests run with ``kv_aware=False``: Algorithm 2's bitmap
+evolves per STEP, so engines that take different step trajectories
+rebalance (and so change numerics) differently by design.
+"""
+from __future__ import annotations
+
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hyp_compat import given, settings, st
+
+from repro.configs.paper_models import OPT_TINY
+from repro.models import dense
+from repro.serving import spec as spec_mod
+from repro.serving.engine import Engine
+from repro.serving.kvcache import PagedKVPool
+from repro.serving.sampler import SampleConfig, sample
+from repro.serving.spec import SpecConfig, ngram_propose, verify_lanes
+
+MAX_SEQ = 96
+# Prompts chosen (scanned) for SOLID greedy argmax margins (> 0.02) over
+# the test horizon: speculative verification computes lane j's logits with
+# the chunk's preceding lanes in the intra-chunk softmax state instead of
+# the paged pool state — exactly equal in real arithmetic, ~1 ulp apart
+# in f32, which bf16 residual rounding can amplify to ~1e-3 — so a
+# random-init toy model oscillating between two NEAR-TIED attractor
+# tokens could flip an argmax either way (the same caveat
+# test_engine_jit.py documents for differing chunk widths). With margins
+# >> that noise floor, greedy parity is exact and deterministic. They
+# also fit one prefill chunk each (and one step's default token budget
+# together), so every engine sees the identical prefill chunking.
+PROMPTS = [[13] * 8, [255] * 8, [450] * 8]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return dense.init(OPT_TINY, jax.random.PRNGKey(0))
+
+
+def _run(params, **kw):
+    kw.setdefault("kv_aware", False)
+    eng = Engine(OPT_TINY, params, max_slots=3, max_seq=MAX_SEQ, rber=0.0,
+                 **kw)
+    rids = [eng.submit(list(p), max_new=16) for p in PROMPTS]
+    out = eng.run()
+    return eng, {r: out[r] for r in rids}
+
+
+@pytest.fixture(scope="module")
+def greedy_reference(params):
+    """Vanilla compiled engine's greedy outputs — the parity oracle."""
+    return _run(params)[1]
+
+
+# --- drafter unit tests ------------------------------------------------------
+
+def test_ngram_propose_finds_repetition():
+    # history 5 6 1 2 3 9 1 2 3 : trailing 3-gram [9 1 2]? no — trailing is
+    # [2 3] ... use lens=9, suffix (n=3) = [1 2 3] matched at pos 2 -> the
+    # continuation is [9, 1, 2, ...]
+    hist = jnp.asarray([[5, 6, 1, 2, 3, 9, 1, 2, 3, 0, 0, 0]], jnp.int32)
+    drafts, n = ngram_propose(hist, jnp.asarray([9]), k=3, n_max=3)
+    assert int(n[0]) == 3
+    assert np.asarray(drafts)[0].tolist() == [9, 1, 2]
+
+
+def test_ngram_propose_prefers_most_recent_match():
+    # [1 2 X ... 1 2 Y ... 1 2] -> proposes Y (most recent), not X
+    hist = jnp.asarray([[1, 2, 40, 3, 1, 2, 50, 4, 1, 2, 0, 0]], jnp.int32)
+    drafts, n = ngram_propose(hist, jnp.asarray([10]), k=2, n_max=3)
+    assert int(n[0]) == 2
+    assert np.asarray(drafts)[0].tolist() == [50, 4]
+
+
+def test_ngram_propose_no_match_gives_zero():
+    hist = jnp.asarray([[1, 2, 3, 4, 5, 6, 0, 0]], jnp.int32)
+    drafts, n = ngram_propose(hist, jnp.asarray([6]), k=3, n_max=3)
+    assert int(n[0]) == 0
+    # short history (lens <= n) must not propose either
+    _, n2 = ngram_propose(jnp.asarray([[7, 0, 0, 0, 0, 0, 0, 0]], jnp.int32),
+                          jnp.asarray([1]), k=3, n_max=3)
+    assert int(n2[0]) == 0
+
+
+def test_ngram_propose_clips_continuation_at_history_end():
+    # trailing [1 2 3] matches at 0; continuation [9 1 2 3] is only 4
+    # tokens before the history ends -> k=6 clips to 4
+    hist = jnp.asarray([[1, 2, 3, 9, 1, 2, 3, 0]], jnp.int32)
+    drafts, n = ngram_propose(hist, jnp.asarray([7]), k=6, n_max=3)
+    assert int(n[0]) == 4
+    assert np.asarray(drafts)[0, :4].tolist() == [9, 1, 2, 3]
+
+
+# --- verify_lanes unit tests -------------------------------------------------
+
+def _onehot_logits(rows):
+    """(B, K+1, V) logits putting ~all mass on the given token per lane."""
+    v = 16
+    out = np.full((1, len(rows), v), -30.0, np.float32)
+    for i, t in enumerate(rows):
+        out[0, i, t] = 30.0
+    return jnp.asarray(out)
+
+
+def test_verify_greedy_accept_chain():
+    # targets per lane: 3 5 7 9 ; drafts 3 5 2 -> accept 2, bonus = tgt[2]=7
+    logits = _onehot_logits([3, 5, 7, 9])
+    toks, n_acc = verify_lanes(logits, jnp.asarray([[3, 5, 2]]),
+                               jnp.asarray([3]), jax.random.PRNGKey(0),
+                               SampleConfig())
+    assert int(n_acc[0]) == 2
+    assert np.asarray(toks)[0, :3].tolist() == [3, 5, 7]
+
+
+def test_verify_greedy_all_accepted_gets_bonus():
+    logits = _onehot_logits([3, 5, 7, 9])
+    toks, n_acc = verify_lanes(logits, jnp.asarray([[3, 5, 7]]),
+                               jnp.asarray([3]), jax.random.PRNGKey(0),
+                               SampleConfig())
+    assert int(n_acc[0]) == 3
+    assert np.asarray(toks)[0].tolist() == [3, 5, 7, 9]   # k+1 per pass
+
+
+def test_verify_greedy_no_drafts_is_plain_decode():
+    logits = _onehot_logits([3, 5, 7, 9])
+    toks, n_acc = verify_lanes(logits, jnp.asarray([[5, 5, 5]]),
+                               jnp.asarray([0]), jax.random.PRNGKey(0),
+                               SampleConfig())
+    assert int(n_acc[0]) == 0 and int(np.asarray(toks)[0, 0]) == 3
+
+
+def test_verify_rejection_sampling_deterministic_extremes():
+    """With ~one-hot target distributions, rejection sampling is
+    deterministic: a draft owning the mass is accepted (p(d) ~ 1), one
+    with no mass is rejected (p(d) ~ 0) and the residual re-samples the
+    mass-owning token."""
+    cfg = SampleConfig(temperature=1.0)
+    logits = _onehot_logits([3, 5, 7, 9])
+    for key in range(5):
+        toks, n_acc = verify_lanes(logits, jnp.asarray([[3, 5, 2]]),
+                                   jnp.asarray([3]),
+                                   jax.random.PRNGKey(key), cfg)
+        assert int(n_acc[0]) == 2
+        # rejected lane 2: residual = p with draft 2 zeroed -> still 7
+        assert np.asarray(toks)[0, :3].tolist() == [3, 5, 7]
+
+
+def test_sampler_lane_keys_independent():
+    """(B, T, V) sampling draws each lane from its own key: identical
+    logits across lanes must not produce identical draws (per-step-key
+    correlation was the seed behavior)."""
+    logits = jnp.zeros((1, 8, 64))                   # uniform, all lanes
+    out = sample(logits, jax.random.PRNGKey(1),
+                 SampleConfig(temperature=1.0))
+    assert out.shape == (1, 8)
+    assert len(set(np.asarray(out)[0].tolist())) > 1
+    # greedy ignores keys entirely (satellite contract)
+    g = sample(_onehot_logits([3, 5, 7, 9]), jax.random.PRNGKey(2),
+               SampleConfig())
+    assert np.asarray(g)[0].tolist() == [3, 5, 7, 9]
+
+
+# --- engine parity (the acceptance property) ---------------------------------
+
+def test_spec_resident_matches_vanilla_greedy(params, greedy_reference):
+    eng, out = _run(params, spec_cfg=SpecConfig(k=4))
+    assert out == greedy_reference
+    assert eng.step_traces == 1, "verify lanes retraced the monolithic step"
+    st = eng.spec_stats()
+    assert st["spec_accepted"] > 0          # repetitive prompts: drafts land
+    assert st["spec_tokens_per_step"] > 1.0
+
+
+def test_spec_streamed_matches_vanilla_greedy(params, greedy_reference):
+    """THE tentpole property: the streamed spec engine emits the identical
+    greedy stream while paying ONE window rotation per verify step."""
+    from repro.store import PageStore, StreamConfig
+    eng, out = _run(params, weight_store=PageStore(),
+                    stream_cfg=StreamConfig(group_size=1),
+                    spec_cfg=SpecConfig(k=4))
+    assert out == greedy_reference
+    assert eng.step_traces == 3, "spec broke the 3-trace streamed invariant"
+    st = eng.stream_stats()
+    assert st["spec_accepted"] > 0 and st["bytes_streamed"] > 0
+    # fewer steps than tokens: one weight stream amortized over > 1 token
+    emitted = sum(len(o) for o in out.values())
+    assert st["spec_verify_steps"] < emitted
+
+
+def test_spec_model_drafter_parity(params, greedy_reference):
+    """Verification discipline, adversarial case: an UNRELATED draft model
+    proposes junk — everything gets rejected, the stream must still be
+    exactly the greedy reference (and still 1 token/step minimum)."""
+    draft_cfg = dc.replace(OPT_TINY, name="opt-draft", n_layers=2,
+                           d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                           d_ff=128)
+    dparams = dense.init(draft_cfg, jax.random.PRNGKey(7))
+    eng, out = _run(params, spec_cfg=SpecConfig(k=3, drafter="model",
+                                                draft_window=12),
+                    draft_cfg=draft_cfg, draft_params=dparams)
+    assert out == greedy_reference
+    assert eng.spec_stats()["spec_tokens_per_step"] >= 1.0
+
+
+def test_spec_temperature_emits_exact_counts(params):
+    eng, out = _run(params, spec_cfg=SpecConfig(k=3),
+                    sample_cfg=SampleConfig(temperature=0.8, top_k=40))
+    assert all(len(o) == 16 for o in out.values())
+    assert all(0 <= t < OPT_TINY.vocab_size for o in out.values() for t in o)
+
+
+def test_spec_device_lengths_track_host_mirror(params):
+    """The KV rewind is host+device COUPLED: after every step the device
+    lengths must equal the host mirror (both advanced by n_accept + 1,
+    not by the lanes written)."""
+    eng = Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ,
+                 kv_aware=False, spec_cfg=SpecConfig(k=4))
+    eng.submit([1, 2, 3, 4] * 3, max_new=12)
+    eng.submit([5, 5, 5], max_new=9)
+    while any(not r.done for r in eng.requests.values()):
+        eng.step()
+        np.testing.assert_array_equal(np.asarray(eng.pool.lengths_dev),
+                                      eng.pool.lengths)
+
+
+def test_spec_respects_max_new_and_reservation(params):
+    """Near the tail, verify lanes are capped by remaining tokens, so a
+    request never overshoots max_new and speculative KV writes never grow
+    past the admission reservation (ensure() asserts)."""
+    eng = Engine(OPT_TINY, params, max_slots=1, max_seq=32, kv_aware=False,
+                 spec_cfg=SpecConfig(k=4))
+    rid = eng.submit([4, 4, 4, 4], max_new=3)     # tiny budget vs k=4
+    out = eng.run()
+    assert len(out[rid]) == 3
+
+
+def test_spec_decode_continues_during_prefill(params):
+    """Verify lanes are step tokens: while a late long prompt prefills in
+    chunks, a speculating decoder must still emit >= 1 token every step
+    (base decode lanes are funded unconditionally) and the prefill must
+    complete (verify lanes never starve prefill forever)."""
+    import repro.core.scheduler as sched
+    eng = Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ,
+                 kv_aware=False, spec_cfg=SpecConfig(k=4),
+                 admission_cfg=sched.AdmissionConfig(chunk_tokens=8,
+                                                     token_budget=16))
+    r1 = eng.submit([255] * 8, max_new=60)
+    for _ in range(3):
+        eng.step()                                 # r1 is decoding now
+    before = len(eng.requests[r1].out)
+    r2 = eng.submit(list(range(1, 41)), max_new=4)   # 40 tokens: 5+ chunks
+    prefill_steps = 0
+    while eng.requests[r2].prefilling:
+        eng.step()
+        prefill_steps += 1
+        assert prefill_steps < 50, "verify lanes starved the prefill"
+    assert len(eng.requests[r1].out) - before >= prefill_steps
+
+
+def test_spec_rejects_bad_configs(params):
+    import repro.core.scheduler as sched
+    with pytest.raises(ValueError, match="compiled"):
+        Engine(OPT_TINY, params, compiled=False, spec_cfg=SpecConfig(k=2))
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        Engine(OPT_TINY, params, spec_cfg=SpecConfig(k=8),
+               admission_cfg=sched.AdmissionConfig(chunk_tokens=8))
+    with pytest.raises(ValueError, match="draft"):
+        Engine(OPT_TINY, params, spec_cfg=SpecConfig(k=2, drafter="model"))
+    with pytest.raises(ValueError, match="drafter"):
+        SpecConfig(k=2, drafter="medusa")
+    with pytest.raises(ValueError, match="k="):
+        SpecConfig(k=0)
+
+
+# --- paged-pool length-rewind invariants (hypothesis) ------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 15)),
+                    min_size=1, max_size=60),
+       n_blocks=st.integers(4, 12))
+def test_pool_rewind_invariants(ops, n_blocks):
+    """Random alloc/ensure/rewind/release interleavings: ref counts stay
+    consistent with the tables, the free list never leaks or double-frees
+    a block across speculative rollbacks, and a drained pool restores its
+    full capacity."""
+    pool = PagedKVPool(1, 2, 16, 2, 4, block_size=4, n_blocks=n_blocks)
+    free0 = pool.n_free_blocks
+    live: dict[int, int] = {}                     # slot -> reserved rows
+    rid = 0
+    for op, arg in ops:
+        if op == 0:                               # alloc
+            need = arg + 1
+            if pool.blocks_for(need) > pool.max_blocks:
+                continue
+            slot = pool.alloc(rid, need)
+            if slot is not None:
+                live[slot] = need
+                rid += 1
+        elif op == 1 and live:                    # ensure (spec max lanes)
+            slot = sorted(live)[arg % len(live)]
+            new_len = min(int(pool.lengths[slot]) + arg % 5, live[slot])
+            pool.ensure(slot, new_len)
+        elif op == 2 and live:                    # rewind to accepted length
+            slot = sorted(live)[arg % len(live)]
+            pool.rewind(slot, min(arg, pool.capacity(slot)))
+        elif op == 3 and live:                    # release
+            slot = sorted(live)[arg % len(live)]
+            pool.release(slot)
+            del live[slot]
+        # invariants after EVERY op
+        mapped = pool.block_tables[pool.block_tables != 0]
+        assert len(set(mapped.tolist())) == len(mapped), "block double-mapped"
+        for blk in range(1, pool.n_blocks):
+            want = int(np.count_nonzero(pool.block_tables == blk))
+            assert pool.ref_count[blk] == want
+        assert len(set(pool.free_blocks)) == len(pool.free_blocks)
+        assert not (set(pool.free_blocks) & set(mapped.tolist()))
+        for slot in live:
+            assert 0 <= pool.lengths[slot] <= pool.capacity(slot)
+    for slot in list(live):
+        pool.release(slot)
+    assert pool.n_free_blocks == free0, "blocks leaked across rollbacks"

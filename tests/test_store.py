@@ -180,6 +180,29 @@ def test_cache_unbounded_capacity():
     assert c.stats()["entries"] == 50 and c.stats()["evictions"] == 0
 
 
+def test_cache_resize_trims_eagerly():
+    """Shrinking the budget (depth auto-tuning) must evict unpinned
+    ref-free entries IMMEDIATELY — not at some future insert — or the
+    resident bytes plus the deeper window overrun the device budget."""
+    c = ResidencyCache(capacity_bytes=100)
+    c.insert("pinned", 1, 30, pin=True)
+    c.insert("held", 2, 30)
+    assert c.acquire("held") == 2                      # refs=1, protected
+    c.insert("cold1", 3, 20)
+    c.insert("cold2", 4, 20)
+    assert c.bytes_used == 100
+    c.resize(70)
+    assert c.capacity == 70
+    assert c.bytes_used <= 70                          # cold LRU trimmed now
+    assert "pinned" in c and "held" in c
+    # pinned/held can legitimately exceed a too-small cap; resize never
+    # touches them (the engine floors the new capacity at pinned_bytes)
+    c.resize(10)
+    assert "pinned" in c and "held" in c and c.bytes_used == 60
+    c.resize(None)                                     # unbounded: no trim
+    assert c.stats()["entries"] == 2
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from(["ins", "pin", "acq", "rel"]),
                           st.integers(0, 7), st.integers(1, 60)),

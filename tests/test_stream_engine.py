@@ -114,3 +114,71 @@ def test_streamed_requires_compiled(params):
 def test_streamed_group_size_must_divide_layers(params):
     with pytest.raises(ValueError, match="group_size"):
         _streamed(params, group_size=3)          # OPT_TINY has 4 layers
+
+
+def test_stall_heavy_engine_shrinks_prefill_share(params):
+    """Residency-aware admission: the engine's measured stall fraction
+    contracts the step token budget (scheduler.step_token_budget), so a
+    stall-heavy streamed engine plans SMALLER prefill chunks than a
+    stall-free one while decoders keep their lanes."""
+    import repro.core.scheduler as sched
+
+    def prefill_first_step(stall_frac):
+        eng, _ = _streamed(params, group_size=1)
+        eng.submit([5, 6], max_new=30)
+        for _ in range(3):
+            eng.step()                       # slot 0 is decoding now
+        eng._stall_frac = stall_frac         # the signal under test
+        eng.submit(list(range(1, 40)), max_new=4)    # 39-token prompt
+        eng.step()
+        return eng.stats[-1]["prefill_tokens"]
+
+    free = prefill_first_step(0.0)
+    stalled = prefill_first_step(0.95)
+    assert stalled < free, "stall fraction must contract the prefill share"
+    assert stalled >= 0 and free > 0
+    # and the engine actually RECORDS a stall fraction every streamed step
+    eng, _ = _streamed(params, group_size=1)
+    eng.submit([1, 2, 3], max_new=3)
+    eng.run()
+    assert all(0.0 <= s["stall_frac"] <= 1.0 for s in eng.stats)
+    # the budget function itself is covered in tests/test_scheduler.py
+    assert sched.step_token_budget(sched.AdmissionConfig(), 1.0, 0.9) < \
+        sched.step_token_budget(sched.AdmissionConfig(), 1.0, 0.0)
+
+
+def test_auto_depth_retunes_prefetch_from_telemetry(params):
+    """Overlap-depth auto-tuning: after the first measured steps the
+    engine re-picks prefetch_depth from stall/stream telemetry, within
+    what the device budget affords, and re-splits window vs cache bytes."""
+    probe = PageStore()
+    Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ,
+           weight_store=probe, stream_cfg=StreamConfig(pin_edges=False))
+    budget = int(probe.total_bytes * 0.7)
+    eng, _ = _streamed(params, group_size=1, prefetch_depth=1,
+                       device_budget_bytes=budget, auto_depth=True,
+                       auto_depth_after=3)
+    eng.submit(list(range(1, 20)), max_new=12)
+    eng.run()
+    assert eng._auto_depth_done, "auto-tune never ran"
+    depth = eng.streamer.prefetch_depth
+    assert depth >= 1
+    if eng.stream_cfg.device_budget_bytes is not None:
+        afford = (budget - eng.cache.pinned_bytes) // eng._group_bytes
+        assert depth <= max(afford, 1)
+        # budget re-split: window bytes + cache capacity never exceed it
+        if not eng.stream_cfg.pin_all and depth != 1:
+            assert eng.cache.capacity + depth * eng._group_bytes <= budget \
+                or eng.cache.capacity == eng.cache.pinned_bytes
+        # and RESIDENT bytes were trimmed to the new capacity eagerly —
+        # a deeper window reclaims its bytes at retune time, not at some
+        # future insert (the device budget holds at every moment)
+        if eng.cache.capacity is not None:
+            assert eng.cache.bytes_used <= max(eng.cache.capacity,
+                                               eng.cache.pinned_bytes)
+    # parity is untouched by depth choices (greedy, same prompts)
+    ref = Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ, rber=0.0)
+    rid = ref.submit(list(range(1, 20)), max_new=12)
+    want = ref.run()[rid]
+    got = next(iter(eng.requests.values())).out
+    assert got == want
