@@ -45,12 +45,13 @@ def _kernel_bench() -> str:
 
 def main() -> None:
     from benchmarks import (fig6_throughput, fig7_latency, fig8_energy,
-                            serve_decode, serve_mixed, serve_spec,
-                            serve_stream, table2_area, table3_scaling)
+                            serve_decode, serve_mixed, serve_moe,
+                            serve_spec, serve_stream, table2_area,
+                            table3_scaling)
     reports = []
     for mod in (fig6_throughput, fig7_latency, fig8_energy, table2_area,
                 table3_scaling, serve_decode, serve_mixed, serve_stream,
-                serve_spec):
+                serve_spec, serve_moe):
         rep = mod.run()
         reports.append(rep)
         print(rep.render())

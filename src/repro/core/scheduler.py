@@ -17,6 +17,7 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -180,6 +181,27 @@ def plan_chunks(
             plan[slot] = n
             left -= n
     return plan
+
+
+def routed_experts(idx, q_lens):
+    """The host half of the MoE expert-id bitmap handoff (DESIGN.md §9).
+
+    The streamed MoE engine runs the router ON DEVICE and ships the top-k
+    expert ids to the host streamer — the MoE analog of Algorithm 2's plane
+    bitmap dispatch. This extracts the distinct experts actually routed by
+    VALID lanes (padding lanes route garbage hidden states; fetching their
+    experts would be pure wasted NAND traffic).
+
+    idx    : (slots, T, k) host int array — this layer's top-k expert ids.
+    q_lens : (slots,) host int array — valid lanes per slot this step.
+    Returns a sorted numpy int array of distinct expert ids (possibly
+    empty when no slot has work).
+    """
+    idx = np.asarray(idx)
+    lanes = np.arange(idx.shape[1])[None, :, None]
+    valid = np.broadcast_to(
+        lanes < np.asarray(q_lens)[:, None, None], idx.shape)
+    return np.unique(idx[valid])
 
 
 def split_projection(

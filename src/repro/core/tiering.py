@@ -152,6 +152,48 @@ def deploy(
     return tiered, tier_map
 
 
+# Per-layer flash Q/K/V/O copies (Alg. 2's in-flash projection targets).
+# ONE definition of the store entry names and the per-layer seed derivation,
+# shared by the streamed engine and deploy --store: if the two ever diverged,
+# deploy-written images would silently carry attn weights that no longer
+# match the resident engine's flash copies (parity breaks with no error).
+ATTN_FLASH_KEYS = ("wq", "wk", "wv", "wo")
+
+
+def program_attn_flash(store: Any, attn_layers: Any, n_layers: int,
+                       rber: float = 0.0, seed: int = 0) -> None:
+    """Program the per-layer attn flash copies into ``store`` under
+    ``attn_flash/{key}@{layer}`` — numerically identical to the resident
+    engine's ``_flash_attn_copy`` tier (same quant/parity/RBER seeds)."""
+    for li in range(n_layers):
+        for k in ATTN_FLASH_KEYS:
+            store.put(f"attn_flash/{k}@{li}",
+                      encode_flash(attn_layers[k][li], rber=rber,
+                                   seed=seed + li))
+
+
+def dram_tier(params: Any, patterns=DEFAULT_FLASH_PATTERNS) -> Any:
+    """The DRAM-tier remainder of a raw param pytree WITHOUT encoding the
+    flash tier: flash-pattern leaves are dropped, everything else is cast
+    bf16 — structurally identical to ``drop_store_refs(deploy(params,
+    store=...))``, so it is the restore TEMPLATE for the DRAM checkpoint
+    ``launch/deploy.py --store`` writes (``serve --store-image``)."""
+    def rec(tree, prefix):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        for k, v in tree.items():
+            p = f"{prefix}/{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                out[k] = rec(v, p)
+            elif is_flash_path(p, patterns) and v.ndim >= 2:
+                continue
+            else:
+                out[k] = v.astype(jnp.bfloat16)
+        return out
+    return rec(params, "")
+
+
 def flash_bytes(tiered: Any) -> tuple[int, int]:
     """(flash_tier_bytes, dram_tier_bytes) of a deployed pytree. Handles
     both deployment shapes: device-resident FlashWeight leaves and

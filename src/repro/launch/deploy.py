@@ -49,6 +49,15 @@ def run_deploy(arch: str, smoke: bool, ckpt_dir: str | None, out_dir: str,
         from repro.store import PageStore
         store = PageStore()
     tiered, tier_map = deploy(params, rber=rber, seed=seed, store=store)
+    if store is not None and cfg.family == "dense":
+        # the streamed engine also needs per-layer flash Q/K/V/O copies
+        # (Alg. 2's in-flash projection targets); program them into the
+        # image so it is SELF-CONTAINED — ``serve --store-image`` opens it
+        # read-only and has nothing left to program. (MoE attention stays
+        # DRAM-tier.)
+        from repro.core.tiering import program_attn_flash
+        program_attn_flash(store, params["layers"]["attn"], cfg.n_layers,
+                           rber=rber, seed=seed)
     fb, db = flash_bytes(tiered)
     out = CheckpointManager(out_dir, keep=1)
     if store is not None:

@@ -37,19 +37,42 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
           kv_aware: bool = True, stream: bool = False,
           device_budget_mib: float | None = None,
           group_size: int = 1, auto_depth: bool = False,
-          spec_k: int = 0, drafter: str = "ngram") -> dict:
+          spec_k: int = 0, drafter: str = "ngram",
+          adaptive_k: bool = False,
+          store_image: str | None = None, ckpt: str | None = None) -> dict:
     cfg = OPT_TINY if arch == "opt-tiny" else get_config(arch, smoke=smoke)
-    if cfg.family != "dense":
-        raise SystemExit("engine serves dense-family archs "
-                         "(the paper's OPT/LLaMA models)")
+    if cfg.family not in ("dense", "moe"):
+        raise SystemExit("engine serves dense- and moe-family archs")
     mod = family_module(cfg.family)
-    params = mod.init(cfg, jax.random.PRNGKey(seed))
     store = stream_cfg = None
+    if store_image is not None:
+        # the zero-RSS deployment shape end to end: mmap the persisted die
+        # image (flash tier stays on disk until its pages are read),
+        # restore only the DRAM tier from the deploy checkpoint, and let
+        # the engine rebuild StoreRefs from the page table.
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.core.tiering import dram_tier
+        from repro.store import PageStore
+        if ckpt is None:
+            raise SystemExit("--store-image needs --ckpt (the deploy "
+                             "output directory holding the DRAM tier)")
+        if rber:
+            raise SystemExit("--rber applies at flash-programming time; a "
+                             "die image already carries its own injected "
+                             "errors (re-run deploy --store with --rber)")
+        store = PageStore.open(store_image)
+        template = dram_tier(mod.init(cfg, jax.random.PRNGKey(seed)))
+        params, _ = CheckpointManager(ckpt).restore(template)
+        stream = True
+    else:
+        params = mod.init(cfg, jax.random.PRNGKey(seed))
     if stream:
         # flash tier host-resident in the page store, streamed per layer
-        # group under a device weight budget (DESIGN.md §7)
+        # group under a device weight budget (DESIGN.md §7) — or, MoE,
+        # expert-paged by the router (DESIGN.md §9)
         from repro.store import PageStore, StreamConfig
-        store = PageStore()
+        if store is None:
+            store = PageStore()
         budget = (None if device_budget_mib is None
                   else int(device_budget_mib * 2**20))
         stream_cfg = StreamConfig(device_budget_bytes=budget,
@@ -58,8 +81,12 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
     spec_cfg = draft_cfg = draft_params = None
     if spec_k > 0:
         from repro.serving.spec import SpecConfig
-        spec_cfg = SpecConfig(k=spec_k, drafter=drafter)
+        spec_cfg = SpecConfig(k=spec_k, drafter=drafter,
+                              adaptive_k=adaptive_k)
         if drafter == "model":
+            if cfg.family != "dense":
+                raise SystemExit("drafter='model' needs a dense-family "
+                                 "target (the draft model is dense)")
             # a ~4x-smaller resident draft model of the same family
             draft_cfg = dataclasses.replace(
                 cfg, name=f"{cfg.name}-draft",
@@ -104,8 +131,11 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
            "ttft_steps": first_tok, "traces": eng.step_traces}
     if stream:
         out["stream"] = eng.stream_stats()
+        if eng.streamed_moe:
+            out["experts"] = eng.expert_stats()
     if spec_k > 0:
         out["spec"] = eng.spec_stats()
+    eng.close()
     return out
 
 
@@ -115,7 +145,9 @@ def main():
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--rber", type=float, default=1e-4)
+    # None = mode default: 1e-4 normally, 0 with --store-image (injection
+    # happened at deploy time; an EXPLICIT nonzero rber there is an error)
+    ap.add_argument("--rber", type=float, default=None)
     ap.add_argument("--no-kv-aware", dest="kv_aware", action="store_false")
     ap.add_argument("--stream", action="store_true",
                     help="serve the flash tier from a host-resident page "
@@ -134,18 +166,43 @@ def main():
     ap.add_argument("--drafter", choices=("ngram", "model"), default="ngram",
                     help="draft proposer for --spec-k: in-graph prompt "
                          "lookup, or a small resident draft model")
+    ap.add_argument("--adaptive-k", action="store_true",
+                    help="scale each slot's verify-lane count by its "
+                         "recent acceptance-rate EMA (--spec-k)")
+    ap.add_argument("--store-image", default=None, metavar="IMAGE",
+                    help="serve straight off a persisted NAND die image "
+                         "(deploy --store): mmap'd read-only, StoreRefs "
+                         "rebuilt from its page table; implies --stream")
+    ap.add_argument("--ckpt", default=None,
+                    help="deploy output dir holding the DRAM tier "
+                         "(required with --store-image)")
     args = ap.parse_args()
+    rber = args.rber
+    if rber is None:
+        rber = 0.0 if args.store_image else 1e-4
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
-                max_new=args.max_new, rber=args.rber, kv_aware=args.kv_aware,
+                max_new=args.max_new, rber=rber, kv_aware=args.kv_aware,
                 stream=args.stream,
                 device_budget_mib=args.device_budget_mib,
                 group_size=args.group_size, auto_depth=args.auto_depth,
-                spec_k=args.spec_k, drafter=args.drafter)
+                spec_k=args.spec_k, drafter=args.drafter,
+                adaptive_k=args.adaptive_k,
+                store_image=args.store_image, ckpt=args.ckpt)
     print(f"served {len(out['outputs'])} requests, {out['tokens']} generated "
           f"tokens in {out['seconds']:.1f}s ({out['tps']:.1f} generated "
           f"tok/s, {out['processed_tps']:.1f} processed tok/s on CPU), "
           f"step traces={out['traces']}")
-    if args.stream:
+    if "experts" in out:
+        ex = out["experts"]
+        print(f"expert paging: {ex['expert_hit_rate']*100:.0f}% cache hit "
+              f"rate, {ex['expert_bytes_fetched']/2**20:.2f} MiB fetched "
+              f"({ex['expert_bytes_per_token']/2**10:.1f} KiB/token vs "
+              f"{ex['all_experts_bytes_per_token']/2**10:.1f} KiB/token "
+              f"all-experts), {ex['misroute_stalls']} misroute stalls, "
+              f"{ex['expert_prefetches']} prefetches, "
+              f"{out['stream']['pages_read']} page reads -> "
+              f"{out['stream']['nand_seconds']*1e3:.2f} ms NAND")
+    elif "stream" in out:
         st = out["stream"]
         print(f"streamed {st['bytes_streamed']/2**20:.1f} MiB "
               f"(stall {st['stall_s']*1e3:.0f} ms / stream "

@@ -168,6 +168,70 @@ def moe_apply(cfg, p, x, capacity_factor: float = 1.25):
     return out.reshape(b, s, d).astype(x.dtype)
 
 
+# --- serving-engine MoE FFN (DESIGN.md §9) -----------------------------------
+#
+# The serving engine's mixed batch is tiny ((n_slots, chunk_tokens) lanes),
+# so the capacity-dispatch machinery above (built for sharded training
+# shapes) gives way to a LOSSLESS dispatch: every (token, k) assignment owns
+# its own column of the expert buffer, so no capacity trash row exists and —
+# critically for streamed serving — each expert's computation is independent
+# of the bank's composition: a partial SLAB holding only the ROUTED experts
+# (plus a row map) produces bit-identical outputs to the full resident bank.
+# That independence is what makes streamed-vs-resident greedy parity exact.
+
+
+def serve_route(router, x, top_k: int):
+    """Top-k routing for a (S, T, D) serving chunk batch.
+
+    Returns (gates (S, T, k) f32 — softmax over the selected logits, the
+    same normalization as ``_dispatch_group`` — and idx (S, T, k) i32).
+    The idx array is the step's EXPERT-ID BITMAP: the streamed engine ships
+    it to the host (the MoE analog of Algorithm 2's plane bitmap) and only
+    those experts' pages cross to the device."""
+    logits = jnp.einsum("std,de->ste", x.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    gates, idx = jax.lax.top_k(logits, top_k)
+    return jax.nn.softmax(gates, axis=-1), idx.astype(jnp.int32)
+
+
+def serve_expert_ffn(bank, x, gates, idx, slab_map=None):
+    """Batched-expert SwiGLU over a full or partial expert bank.
+
+    bank     : {"w_gate","w_up","w_down"} each (E_bank, K, N) FlashWeight
+               (deployed) or plain array; E_bank = n_experts for the
+               resident engine, the device slab size for the streamed one.
+    x        : (S, T, D) normed FFN input; gates/idx: (S, T, k).
+    slab_map : (n_experts,) i32 expert-id -> bank row, -1 = not resident
+               (those assignments contribute 0 — the engine only leaves an
+               expert unmapped for padding lanes, whose output is never
+               read). None = identity (bank row e holds expert e).
+    """
+    s, t, d = x.shape
+    k = idx.shape[-1]
+    a = s * t * k
+    row = idx if slab_map is None else slab_map[idx]          # (S, T, k)
+    flat_row = row.reshape(a)
+    ok = flat_row >= 0
+    # assignment a = token * k + j owns column a: scatter collisions are
+    # impossible, so dispatch loses nothing and needs no sort.
+    xa = jnp.repeat(x.reshape(s * t, d), k, axis=0)           # (A, D)
+    cols = jnp.arange(a)
+    e_bank = bank["w_gate"].shape[0]
+    buf = jnp.zeros((e_bank, a, d), x.dtype)
+    buf = buf.at[jnp.where(ok, flat_row, 0), cols].set(
+        jnp.where(ok[:, None], xa, 0).astype(x.dtype))
+    bb = buf[None]                                            # (1, E, A, D)
+    h_g = _expert_matmul(bb, bank["w_gate"])
+    h_u = _expert_matmul(bb, bank["w_up"])
+    h = (jax.nn.silu(h_g.astype(jnp.float32))
+         * h_u.astype(jnp.float32)).astype(x.dtype)
+    out_buf = _expert_matmul(h, bank["w_down"])[0]            # (E, A, D)
+    out_a = out_buf[jnp.where(ok, flat_row, 0), cols].astype(jnp.float32)
+    out_a = jnp.where(ok[:, None], out_a, 0.0)
+    out = (out_a * gates.reshape(a)[:, None]).reshape(s, t, k, d).sum(axis=2)
+    return out.astype(x.dtype)
+
+
 def _layer_fwd(cfg, x, lp, positions, collect_kv=True):
     x = cm.pin_batch(x)
     lp = cm.pin_layer_grads(lp)

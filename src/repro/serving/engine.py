@@ -58,9 +58,11 @@ import numpy as np
 
 from repro.core import scheduler as sched
 from repro.core.erdpe import ExecMode, flash_matmul
-from repro.core.tiering import FlashWeight, deploy, encode_flash
+from repro.core.tiering import (ATTN_FLASH_KEYS, FlashWeight, deploy,
+                                encode_flash, program_attn_flash)
 from repro.models import common as cm
 from repro.models import dense
+from repro.models import moe as moe_mod
 from repro.serving import spec as spec_mod
 from repro.serving.kvcache import PagedKVPool
 from repro.serving.sampler import SampleConfig, last_valid_hidden, sample
@@ -138,6 +140,62 @@ def _chunk_layer(cfg, exec_mode, bitmap, lengths, positions, block_tables,
     x = x + out
     x = x + dense._ffn_apply(cfg, lp["ffn"], dense._norm(cfg, x, lp, "ln2"))
     return x, (k, v)
+
+
+def _moe_attn_router_body(cfg, exec_mode, lengths, positions, block_tables,
+                          x, lp, kc, vc):
+    """Attention + router for one MoE layer — the SINGLE definition both
+    data planes compose (resident scan body and streamed router half), so
+    the streamed-vs-resident parity the benchmark gates on holds by
+    construction. MoE keeps Q/K/V/O on the NPU — the in-flash engine
+    serves the EXPERT BANKS, the paper's best-fit case (DESIGN.md §9).
+    Returns the post-attention residual, the normed FFN input, the
+    router's (gates, idx), and the layer's fresh K/V."""
+    b, t, _ = x.shape
+    q, k, v = _qkv(cfg, lp, None, x, positions, None)
+    attn = cm.chunk_attention_paged(
+        q, kc, vc, block_tables, lengths, k, v,
+        window=cfg.local_window, mode=exec_mode)
+    x = x + _proj(attn.reshape(b, t, -1), lp["attn"]["wo"], None, None)
+    h = dense._norm(cfg, x, lp, "ln2")
+    gates, idx = moe_mod.serve_route(lp["moe"]["router"], h, cfg.top_k)
+    return x, h, gates, idx, k, v
+
+
+def _chunk_layer_moe(cfg, exec_mode, lengths, positions, block_tables,
+                     x, layer):
+    """One mixed-batch MoE layer (resident data plane): the shared
+    attention+router body + the expert FFN over the full deployed bank
+    (``slab_map=None`` — the streamed expert half's degenerate case).
+    ``layer`` = (params slice, read-only paged K/V pool slices)."""
+    lp, kc, vc = layer
+    x, h, gates, idx, k, v = _moe_attn_router_body(
+        cfg, exec_mode, lengths, positions, block_tables, x, lp, kc, vc)
+    x = _moe_expert_impl(x, h, gates, idx, lp["moe"]["experts"], None)
+    return x, (k, v)
+
+
+def _moe_attn_router_impl(cfg, exec_mode, layers_dram, k_pool, v_pool, x,
+                          positions, ctx_lens, block_tables, lo):
+    """STREAMED wrapper of the shared attention+router body. ``lo`` — the
+    layer index — is a traced scalar, so every layer of every step replays
+    ONE trace. The returned ``idx`` is the top-k EXPERT-ID BITMAP the
+    engine ships to the host streamer (the MoE analog of Algorithm 2's
+    plane bitmap)."""
+    def sl(a):
+        return jax.lax.dynamic_slice_in_dim(a, lo, 1, axis=0)[0]
+
+    lp = jax.tree.map(sl, layers_dram)
+    return _moe_attn_router_body(cfg, exec_mode, ctx_lens, positions,
+                                 block_tables, x, lp, sl(k_pool), sl(v_pool))
+
+
+def _moe_expert_impl(x, h, gates, idx, slab, slab_map):
+    """Expert half of one STREAMED MoE layer: the batched-expert FFN over
+    the device SLAB holding only the routed (resident/fetched) experts.
+    Same math as the resident bank — per-expert computation is independent
+    of bank composition, so slab-vs-full-bank parity is exact."""
+    return x + moe_mod.serve_expert_ffn(slab, h, gates, idx, slab_map)
 
 
 def _embed_chunk(cfg, params, lengths, tokens, q_lens):
@@ -245,6 +303,9 @@ def _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, spec_k, final_norm,
     stats["spec_drafted"] = jnp.sum(jnp.where(dec, n_draft, 0))
     stats["spec_accepted"] = jnp.sum(jnp.where(dec, n_accept, 0))
     stats["spec_emitted"] = jnp.sum(jnp.where(dec, n_emit, 0))
+    # per-slot drafted/accepted: the adaptive-k acceptance EMA's signal
+    stats["spec_draft_slots"] = jnp.where(dec, n_draft, 0)
+    stats["spec_accept_slots"] = jnp.where(dec, n_accept, 0)
     return toks, n_emit, new_state, stats
 
 
@@ -302,9 +363,16 @@ def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
         x, positions, ctx_lens, q_lens, drafts, n_draft = _embed_spec(
             cfg, proposer, spec_k, params, state["lengths"], tokens, q_lens,
             hist, hist_lens, draft_cap)
-    body = functools.partial(_chunk_layer, cfg, exec_mode, bitmap, ctx_lens,
-                             positions, block_tables)
-    xs = (params["layers"], attn_flash, state["k"], state["v"])
+    if cfg.family == "moe":
+        # MoE projections stay on the NPU (no flash attn copy to dispatch
+        # to), so the resident layer body drops the bitmap/flash operands.
+        body = functools.partial(_chunk_layer_moe, cfg, exec_mode, ctx_lens,
+                                 positions, block_tables)
+        xs = (params["layers"], state["k"], state["v"])
+    else:
+        body = functools.partial(_chunk_layer, cfg, exec_mode, bitmap,
+                                 ctx_lens, positions, block_tables)
+        xs = (params["layers"], attn_flash, state["k"], state["v"])
     if unroll:
         # eager reference: interpreted Python loop over layers (seed-style)
         ks, vs = [], []
@@ -382,7 +450,9 @@ class Engine:
                  weight_store=None, stream_cfg=None,
                  spec_cfg: spec_mod.SpecConfig | None = None,
                  draft_cfg=None, draft_params=None):
-        assert cfg.family == "dense"
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError("engine serves dense- and moe-family archs "
+                             f"(got {cfg.family!r})")
         self.cfg = cfg
         self.sample_cfg = sample_cfg
         self.kv_aware = kv_aware
@@ -390,6 +460,7 @@ class Engine:
         self.admission_cfg = admission_cfg or sched.AdmissionConfig()
         self.store = weight_store
         self.streamed = weight_store is not None
+        self.streamed_moe = self.streamed and cfg.family == "moe"
         if self.streamed and not compiled:
             raise ValueError("streamed mode runs through the compiled data "
                              "plane (compiled=False has no layer groups)")
@@ -408,21 +479,48 @@ class Engine:
         else:
             self.proposer = None
         # DRAM tier: bf16 attention weights (copied once at init, §3.5);
-        # flash tier: INT8+ECC FFN / lm_head AND a flash copy of Q/K/V/O so
-        # the bitmap can offload projection columns to the in-flash engine.
-        # With a ``weight_store`` the flash tier is serialized into the
-        # host-resident PageStore instead (its leaves become StoreRefs) and
-        # streamed under compute per layer group (DESIGN.md §7).
-        self.params, self.tier_map = deploy(params, rber=rber, seed=seed,
-                                            store=weight_store)
+        # flash tier: INT8+ECC FFN / lm_head AND (dense) a flash copy of
+        # Q/K/V/O so the bitmap can offload projection columns to the
+        # in-flash engine. MoE keeps attention DRAM-only: the flash engine
+        # serves the EXPERT BANKS (DESIGN.md §9). With a ``weight_store``
+        # the flash tier is serialized into the host-resident PageStore
+        # instead (its leaves become StoreRefs) and streamed under compute
+        # (DESIGN.md §7) — or, MoE, expert-paged by the router (§9).
+        # A weight_store that ALREADY holds a page table is preprogrammed —
+        # opened from a persisted die image (``serve --store-image``).
+        # NAND programming is write-once, so the flash tier is rebuilt from
+        # the page table instead of re-deployed, and ``params`` is expected
+        # to be the DRAM tier only (the checkpoint deploy --store wrote).
+        self.store_preprogrammed = self.streamed and len(weight_store.table) > 0
+        if self.store_preprogrammed:
+            from repro.store.pagestore import graft_store_refs
+            if rber > 0.0:
+                raise ValueError(
+                    "rber applies at flash-programming time; a preprogrammed "
+                    "store already carries its own error injection (re-run "
+                    "deploy --store with --rber instead)")
+            # cast the DRAM tier bf16 exactly as deploy() would: callers may
+            # hand raw init params (or reuse a programmed store), and an f32
+            # DRAM tier would silently diverge from every deployed engine.
+            dram = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
+            refs = weight_store.param_refs(exclude_prefixes=("attn_flash/",))
+            self.params = graft_store_refs(dram, refs)
+            self.tier_map = {p: "flash" for p in refs}
+        else:
+            self.params, self.tier_map = deploy(params, rber=rber, seed=seed,
+                                                store=weight_store)
         if self.streamed:
             from repro.store.streamer import StreamConfig
             self.stream_cfg = stream_cfg or StreamConfig()
             self.attn_flash = None
-            self._init_streamed(params, rber, seed)
+            if self.streamed_moe:
+                self._init_streamed_moe(max_slots)
+            else:
+                self._init_streamed(params, rber, seed)
         else:
             self.stream_cfg = None
-            self.attn_flash = self._flash_attn_copy(params, rber, seed)
+            self.attn_flash = (None if cfg.family == "moe"
+                               else self._flash_attn_copy(params, rber, seed))
         h = sched_cfg.h if sched_cfg else 32
         while cfg.n_heads * cfg.head_dim % h:
             h //= 2
@@ -456,12 +554,18 @@ class Engine:
             self._hist_lens = np.zeros((max_slots,), np.int32)
             self._spec_totals = {"verify_steps": 0, "drafted": 0,
                                  "accepted": 0, "emitted": 0}
+            # per-slot acceptance-rate EMA driving the adaptive verify-lane
+            # count (SpecConfig.adaptive_k); reset to optimistic full depth
+            # when a slot is re-admitted.
+            self._accept_ema = np.ones((max_slots,), np.float64)
         step = functools.partial(
             _step_impl, cfg, self.sched_cfg, sample_cfg, kv_aware,
             exec_mode, not compiled, self.proposer,
             spec_cfg.k if spec_cfg else None)
         self._trace_count = 0
-        if self.streamed:
+        if self.streamed_moe:
+            self._build_stream_fns_moe(exec_mode)
+        elif self.streamed:
             self._build_stream_fns(exec_mode)
         elif compiled:
             def counted(*args):
@@ -492,7 +596,7 @@ class Engine:
 
     # --- streamed mode (FlashStore weight tier, DESIGN.md §7) -----------------
 
-    _ATTN_FLASH_KEYS = ("wq", "wk", "wv", "wo")
+    _ATTN_FLASH_KEYS = ATTN_FLASH_KEYS   # shared with deploy --store
 
     def _init_streamed(self, raw_params, rber, seed):
         """Flash tier lives in the PageStore: program the per-layer attn
@@ -507,13 +611,18 @@ class Engine:
             raise ValueError(f"group_size={sc.group_size} must divide "
                              f"n_layers={cfg.n_layers}")
         # per-layer flash Q/K/V/O copies, same seed derivation as the
-        # resident engine's _flash_attn_copy (numerically identical tiers)
-        layers = raw_params["layers"]["attn"]
-        for li in range(cfg.n_layers):
-            for k in self._ATTN_FLASH_KEYS:
-                self.store.put(
-                    f"attn_flash/{k}@{li}",
-                    encode_flash(layers[k][li], rber=rber, seed=seed + li))
+        # resident engine's _flash_attn_copy (numerically identical tiers).
+        # A preprogrammed store (die image) normally carries them already —
+        # deploy --store emits them — so only the MISSING copies are
+        # programmed; a read-only image without them cannot be fixed here.
+        if f"attn_flash/{self._ATTN_FLASH_KEYS[0]}@0" not in self.store.table:
+            if isinstance(self.store._data, np.memmap):
+                raise ValueError(
+                    "die image lacks the per-layer attn flash copies and is "
+                    "read-only; re-run launch/deploy.py --store (it emits "
+                    "them) or serve from a writable store")
+            program_attn_flash(self.store, raw_params["layers"]["attn"],
+                               cfg.n_layers, rber=rber, seed=seed)
         self._ffn_refs = {k: v for k, v in self.params["layers"]["ffn"].items()
                           if isinstance(v, StoreRef)}
         stray = [p for p, t in self.tier_map.items()
@@ -597,6 +706,158 @@ class Engine:
         nbytes = sum(self.store.entry_nbytes(n) for n in self._group_entries(g))
         return jax.device_put(win), nbytes
 
+    # --- streamed MoE mode (ExpertStore expert paging, DESIGN.md §9) ----------
+
+    def _init_streamed_moe(self, max_slots: int):
+        """MoE flash tier: the per-(layer, expert) bank slices live in the
+        PageStore (``deploy`` splits stacked ``(L, E, K, N)`` banks at
+        ``name@li.ei`` — the store's per-leading-index split IS expert
+        granularity); router/attention/norms stay DRAM. Stands up the
+        ``ExpertCache`` (byte-budgeted (layer, expert) residency) and the
+        router-history prefetcher under the device budget; the rotating
+        per-layer expert SLAB is budget-accounted like the dense prefetch
+        windows."""
+        from repro.store.expert_cache import ExpertCache, ExpertPrefetcher
+        from repro.store.pagestore import StoreRef, drop_store_refs
+
+        cfg, sc = self.cfg, self.stream_cfg
+        if sc.group_size != 1:
+            raise ValueError(
+                f"group_size={sc.group_size}: MoE streaming is per-layer "
+                "(group_size=1) — each layer's routing depends on the "
+                "previous layer's experts, so a multi-layer group cannot "
+                "know its expert set up front")
+        experts = self.params["layers"]["moe"]["experts"]
+        self._expert_refs = {k: v for k, v in experts.items()
+                             if isinstance(v, StoreRef)}
+        if set(self._expert_refs) != {"w_gate", "w_up", "w_down"}:
+            raise ValueError("MoE streamed mode expects the expert bank "
+                             "(w_gate/w_up/w_down) in the store, got "
+                             f"{sorted(self._expert_refs)}")
+        for ref in self._expert_refs.values():
+            if ref.lead != (cfg.n_layers, cfg.n_experts):
+                raise ValueError(
+                    f"expert bank {ref.name!r} is split {ref.lead}, expected "
+                    f"(n_layers, n_experts)=({cfg.n_layers}, {cfg.n_experts})")
+        stray = [p for p, t in self.tier_map.items()
+                 if t == "flash" and p != "lm_head"
+                 and not p.startswith("layers/moe/experts/")]
+        if stray:
+            raise ValueError("MoE streamed mode expects the expert flash "
+                             "layout (layers/moe/experts/* + lm_head); stray "
+                             f"flash leaves would never be fetched: {stray}")
+        self._layers_dram = drop_store_refs(self.params["layers"])
+        self._dram_params = {k: self.params[k]
+                             for k in ("embed", "pos_embed", "final_norm")
+                             if k in self.params}
+        self._expert_nbytes = [
+            [sum(self.store.entry_nbytes(ref.entry(li, e))
+                 for ref in self._expert_refs.values())
+             for e in range(cfg.n_experts)]
+            for li in range(cfg.n_layers)]
+        max_expert = max(max(r) for r in self._expert_nbytes)
+        worst_routed = min(cfg.n_experts,
+                           max_slots * self.admission_cfg.chunk_tokens
+                           * cfg.top_k)
+        self._e_slab = max(1, int(sc.expert_slab or worst_routed))
+        lm_bytes = self.store.entry_nbytes("lm_head")
+        slab_bytes = self._e_slab * max_expert
+        if sc.device_budget_bytes is None or sc.pin_all:
+            cache_cap = None
+        else:
+            cache_cap = sc.device_budget_bytes - lm_bytes - slab_bytes
+            if cache_cap < max_expert:
+                raise ValueError(
+                    f"device_budget_bytes={sc.device_budget_bytes} cannot "
+                    f"hold the pinned lm_head ({lm_bytes}B) + the "
+                    f"{self._e_slab}-row expert slab ({slab_bytes}B) + at "
+                    f"least one cacheable expert ({max_expert}B); raise the "
+                    "budget or shrink StreamConfig.expert_slab")
+        self.expert_cache = ExpertCache(cache_cap, cfg.n_layers,
+                                        cfg.n_experts)
+        self.cache = self.expert_cache
+        self.streamer = None             # dense group streamer unused here
+        self._lm_head = self.store.get("lm_head")
+        if sc.pin_all:                   # fully-resident parity baseline
+            for li in range(cfg.n_layers):
+                for e in range(cfg.n_experts):
+                    val, nb = self._fetch_expert(li, e)
+                    self.expert_cache.insert((li, e), val, nb, pin=True)
+        self.prefetcher = ExpertPrefetcher(self.expert_cache,
+                                           self._fetch_expert)
+        # init-time reads (lm_head, pin_all) are deployment, not serving
+        self.store.reset_counters()
+        self.expert_cache.reset_counters()
+
+    def _fetch_expert(self, li: int, e: int):
+        """Read ONE (layer, expert) weight set (w_gate/w_up/w_down pages)
+        out of the store and place it on device. Runs on the compute path
+        (misroute stall) or on the prefetch worker thread."""
+        ws = {}
+        for name, ref in self._expert_refs.items():
+            h = self.store.get_host(ref.entry(li, e))
+            ws[name] = FlashWeight(q=h["q"], parity=h["parity"],
+                                   scale=h["scale"])
+        return jax.device_put(ws), self._expert_nbytes[li][e]
+
+    def _acquire_experts(self, li: int, routed):
+        """Gather one layer's ROUTED experts into the device slab.
+
+        Cache hits are acquired ref-held (never evicted mid-use); misses
+        are MISROUTE STALLS — fetched synchronously on the compute path,
+        then offered to the cache (best effort: if the budget is full of
+        pinned/held entries the slab keeps the only reference and the
+        weights are dropped after the layer). Returns (slab bank
+        (e_slab,)-stacked FlashWeights, slab_map (n_experts,) i32 with
+        -1 = not resident)."""
+        routed = [int(e) for e in routed] or [0]
+        if len(routed) > self._e_slab:
+            raise ValueError(
+                f"layer {li} routed {len(routed)} distinct experts > "
+                f"expert_slab={self._e_slab}; raise StreamConfig.expert_slab")
+        held, vals = [], []
+        for e in routed:
+            key = (li, e)
+            val = self.expert_cache.acquire(key)
+            if val is None:
+                t0 = time.perf_counter()
+                if self.prefetcher.in_flight(key):
+                    # the worker is already reading this expert's pages:
+                    # wait for it (bounded) instead of double-reading —
+                    # double fetches would also double-count the headline
+                    # bytes/pages telemetry.
+                    deadline = t0 + 1.0
+                    while (self.prefetcher.in_flight(key)
+                           and time.perf_counter() < deadline):
+                        time.sleep(0.0005)
+                    val = self.expert_cache.acquire(key)
+                if val is None:
+                    val, nb = self._fetch_expert(li, e)
+                    self.expert_cache.note_fetch(nb)
+                    self.expert_cache.insert(key, val, nb)
+                else:
+                    held.append(key)
+                self.expert_cache.note_stall(time.perf_counter() - t0)
+            else:
+                held.append(key)
+            vals.append(val)
+        slab_map = np.full((self.cfg.n_experts,), -1, np.int32)
+        for r, e in enumerate(routed):
+            slab_map[e] = r
+        vals = vals + [vals[0]] * (self._e_slab - len(vals))  # static rows
+        # the slab is re-stacked every layer deliberately: memoizing
+        # per-layer slabs across steps would keep up to n_layers slabs
+        # device-resident — weight memory the device budget never
+        # accounted for (only ONE slab window is reserved).
+        slab = {name: FlashWeight(
+                    q=jnp.stack([v[name].q for v in vals]),
+                    parity=jnp.stack([v[name].parity for v in vals]),
+                    scale=jnp.stack([v[name].scale for v in vals]))
+                for name in self._expert_refs}
+        for key in held:                 # the stack copied them out
+            self.expert_cache.release(key)
+        return slab, jnp.asarray(slab_map)
+
     def _build_stream_fns(self, exec_mode):
         """The streamed data plane: three jitted pieces (embed -> layer
         groups x N -> finish) instead of one monolithic step. The group fn
@@ -672,6 +933,158 @@ class Engine:
             args += (drafts, n_draft, is_decode)
         return self._finish_fn(*args)
 
+    def _build_stream_fns_moe(self, exec_mode):
+        """The expert-paged MoE data plane: FOUR jitted pieces (embed →
+        attention+router × L → expert-FFN × L → finish). The router must
+        run before its layer's expert weights can be NAMED, so the dense
+        group trace splits in two around the host expert-bitmap handoff;
+        both halves take the layer index as a traced scalar, so steady
+        state is exactly 4 traces (the dense discipline's 3, +1 for the
+        router handoff — asserted in tests/test_moe_serving.py)."""
+        cfg = self.cfg
+        spec_k = self.spec_cfg.k if self.spec_cfg else None
+        proposer = self.proposer
+        attn_router = functools.partial(_moe_attn_router_impl, cfg, exec_mode)
+        finish = functools.partial(_finish_step, cfg, self.sched_cfg,
+                                   self.sample_cfg, self.kv_aware, spec_k)
+
+        if spec_k is None:
+            def embed_fn(params, lengths, tokens, q_lens):
+                self._trace_count += 1    # runs only while jax traces
+                return _embed_chunk(cfg, params, lengths, tokens, q_lens)
+        else:
+            def embed_fn(params, lengths, tokens, q_lens, hist, hist_lens,
+                         draft_cap):
+                self._trace_count += 1
+                return _embed_spec(cfg, proposer, spec_k, params, lengths,
+                                   tokens, q_lens, hist, hist_lens,
+                                   draft_cap)
+
+        def attn_router_fn(*args):
+            self._trace_count += 1
+            return attn_router(*args)
+
+        def expert_fn(*args):
+            self._trace_count += 1
+            return _moe_expert_impl(*args)
+
+        def finish_fn(*args):
+            self._trace_count += 1
+            return finish(*args)
+
+        donate = (2,) if jax.default_backend() != "cpu" else ()
+        self._embed_fn = jax.jit(embed_fn)
+        self._attn_router_fn = jax.jit(attn_router_fn)
+        self._expert_fn = jax.jit(expert_fn)
+        self._finish_fn = jax.jit(finish_fn, donate_argnums=donate)
+        self._step_fn = self._streamed_step_moe
+
+    def _streamed_step_moe(self, params, attn_flash, state, tokens, q_lens,
+                           admitted, block_tables, key, hist=None,
+                           hist_lens=None, draft_cap=None, is_decode=None):
+        """Expert-paged MoE data plane (DESIGN.md §9): per layer, the
+        attention+router half runs on device, the top-k expert-id bitmap
+        syncs to the host (the step's only mid-step sync — a few hundred
+        bytes, the MoE analog of Algorithm 2's plane-bitmap handoff), the
+        routed experts are gathered from the ExpertCache (miss = misroute
+        stall), and the expert half consumes the assembled device slab.
+        While layer *l* computes, the prefetch worker fetches the
+        router-history predictor's picks for layer *l+1* (wrapping to
+        layer 0 for the next step)."""
+        del params, attn_flash                       # store-resident tier
+        cfg, cache = self.cfg, self.expert_cache
+        if self.spec_cfg is None:
+            drafts = n_draft = None
+            x, positions, ctx_lens = self._embed_fn(
+                self._dram_params, state["lengths"], tokens, q_lens)
+            lane_bound = self._host_q_lens
+        else:
+            x, positions, ctx_lens, q_lens, drafts, n_draft = self._embed_fn(
+                self._dram_params, state["lengths"], tokens, q_lens, hist,
+                hist_lens, draft_cap)
+            # verify lanes grow q_lens IN-GRAPH (by n_draft <= draft_cap);
+            # the host-side routed-expert filter uses the superset bound so
+            # a draft lane's routing is never dropped from the slab.
+            lane_bound = self._host_q_lens + self._host_draft_cap
+        ks, vs = [], []
+        for li in range(cfg.n_layers):
+            lo = jnp.int32(li)
+            x, h, gates, idx, k_l, v_l = self._attn_router_fn(
+                self._layers_dram, state["k"], state["v"], x, positions,
+                ctx_lens, block_tables, lo)
+            routed = sched.routed_experts(np.asarray(idx), lane_bound)
+            cache.observe(li, routed)
+            self._request_prefetch((li + 1) % cfg.n_layers, len(routed))
+            slab, slab_map = self._acquire_experts(li, routed)
+            x = self._expert_fn(x, h, gates, idx, slab, slab_map)
+            ks.append(k_l)
+            vs.append(v_l)
+        k_new = jnp.stack(ks, axis=0)                # (L, slots, T, KV, Dh)
+        v_new = jnp.stack(vs, axis=0)
+        args = (self._dram_params["final_norm"], self._lm_head, state, x,
+                k_new, v_new, q_lens, admitted, positions, block_tables,
+                key)
+        if self.spec_cfg is not None:
+            args += (drafts, n_draft, is_decode)
+        return self._finish_fn(*args)
+
+    def _request_prefetch(self, layer: int, breadth: int):
+        """Enqueue predicted experts for ``layer`` — gated by the cache's
+        score-aware admission (``would_admit``), so speculative fetches
+        never read pages the cache would immediately reject: a prediction
+        lands in free space or by displacing strictly COLDER experts,
+        never by thrashing the resident hot set."""
+        cache = self.expert_cache
+        want = breadth + self.stream_cfg.prefetch_experts_margin
+        picks = [(layer, e) for e in cache.predict(layer, want)
+                 if cache.would_admit((layer, e),
+                                      self._expert_nbytes[layer][e])]
+        if picks:
+            self.prefetcher.request(picks)
+
+    def expert_stats(self) -> dict:
+        """ExpertCache telemetry for the expert-paged MoE engine: hit rate
+        over routed-expert acquires, fetched bytes (prefetch included) and
+        bytes/token vs the DENSE-EQUIVALENT all-experts-streamed cost
+        (what rotating every expert of every layer through the window —
+        the PR-3 discipline — would have fetched), and misroute stalls
+        (routed experts not resident when their layer needed them)."""
+        if not self.streamed_moe:
+            raise ValueError("expert_stats: engine is not serving a "
+                             "store-backed MoE model")
+        c = self.expert_cache.stats()
+        toks = sum(s["prefill_tokens"] + s["decode_tokens"]
+                   for s in self.stats)
+        bank_total = sum(sum(r) for r in self._expert_nbytes)
+        return {
+            "expert_hits": c["hits"], "expert_misses": c["misses"],
+            "expert_hit_rate": c["hits"] / max(c["hits"] + c["misses"], 1),
+            "expert_bytes_fetched": c["bytes_fetched"],
+            "expert_fetches": c["fetches"],
+            "expert_prefetches": c["prefetches"],
+            "expert_prefetched_bytes": c["prefetched_bytes"],
+            "misroute_stalls": c["misroute_stalls"],
+            "misroute_stall_s": c["misroute_stall_s"],
+            "expert_cache_entries": c["entries"],
+            "expert_cache_bytes": c["bytes_used"],
+            "expert_slab": self._e_slab,
+            "steps": self._steps_done, "tokens": toks,
+            "expert_bytes_per_token": c["bytes_fetched"] / max(toks, 1),
+            "all_experts_bytes_per_token":
+                self._steps_done * bank_total / max(toks, 1),
+        }
+
+    def _stream_stall_s(self) -> float:
+        """Seconds the compute path has spent blocked on the weight stream:
+        the window-queue stall (dense groups) or the cumulative misroute
+        stall (MoE expert paging) — the residency signal the admission
+        budget contracts with."""
+        if not self.streamed:
+            return 0.0
+        if self.streamed_moe:
+            return self.expert_cache.misroute_stall_s
+        return self.streamer.stall_s
+
     def _maybe_autotune_depth(self):
         """Overlap-depth auto-tuning (``StreamConfig.auto_depth``): once,
         after the first measured steps, re-pick ``prefetch_depth`` from the
@@ -681,7 +1094,8 @@ class Engine:
         re-splitting it: window bytes grow/shrink, cache capacity moves the
         other way (never below the pinned floor)."""
         sc = self.stream_cfg
-        if (not sc.auto_depth or self._auto_depth_done
+        if (self.streamer is None or not sc.auto_depth
+                or self._auto_depth_done
                 or self._steps_done < sc.auto_depth_after):
             return
         self._auto_depth_done = True
@@ -720,8 +1134,11 @@ class Engine:
         cover SERVING only (init-time programming/pin reads are reset)."""
         if not self.streamed:
             raise ValueError("stream_stats: engine is not in streamed mode")
-        out = {**self.streamer.stats(), **self.store.stats(),
-               "prefetch_depth": self.streamer.prefetch_depth}
+        if self.streamed_moe:
+            out = {**self.expert_stats(), **self.store.stats()}
+        else:
+            out = {**self.streamer.stats(), **self.store.stats(),
+                   "prefetch_depth": self.streamer.prefetch_depth}
         if self.spec_cfg is not None:
             out.update(self.spec_stats())
         return out
@@ -735,13 +1152,19 @@ class Engine:
         if self.spec_cfg is None:
             raise ValueError("spec_stats: engine is not in speculative mode")
         t = self._spec_totals
-        return {"spec_verify_steps": t["verify_steps"],
-                "spec_drafted": t["drafted"],
-                "spec_accepted": t["accepted"],
-                "spec_emitted": t["emitted"],
-                "spec_acceptance_rate": t["accepted"] / max(t["drafted"], 1),
-                "spec_tokens_per_step": t["emitted"]
-                / max(t["verify_steps"], 1)}
+        out = {"spec_verify_steps": t["verify_steps"],
+               "spec_drafted": t["drafted"],
+               "spec_accepted": t["accepted"],
+               "spec_emitted": t["emitted"],
+               "spec_acceptance_rate": t["accepted"] / max(t["drafted"], 1),
+               "spec_tokens_per_step": t["emitted"]
+               / max(t["verify_steps"], 1)}
+        if self.spec_cfg.adaptive_k:
+            k = self.spec_cfg.k
+            out["spec_accept_ema"] = [float(v) for v in self._accept_ema]
+            out["spec_adaptive_k"] = [max(1, int(round(float(v) * k)))
+                                      for v in self._accept_ema]
+        return out
 
     # --- request management (control plane) -----------------------------------
 
@@ -785,19 +1208,30 @@ class Engine:
             if slot is None:
                 break
             req.slot = slot
+            if self.spec_cfg is not None:
+                # a recycled slot must not inherit the previous request's
+                # acceptance history; start optimistic (full draft depth)
+                self._accept_ema[slot] = 1.0
             self.waiting.popleft()
 
     # --- the serving step (one compiled call; mixed prefill/decode) -----------
 
     def _draft_cap(self, req: Request) -> int:
-        """Verify lanes this decoding request can use: bounded by spec k,
-        by the tokens it still owes (a draft past max_new is pure waste —
-        and capping by ``remaining - 1`` keeps every speculative KV write
-        inside the admission reservation), by the pool/table row cap, and
-        by the static chunk width."""
+        """Verify lanes this decoding request can use: bounded by spec k
+        (per-slot ADAPTIVE when ``SpecConfig.adaptive_k`` — scaled by the
+        slot's recent acceptance-rate EMA, so a slot whose drafts never
+        land stops wasting lm_head lanes and KV scatter width while
+        keeping ONE probe lane to recover through), by the tokens it still
+        owes (a draft past max_new is pure waste — and capping by
+        ``remaining - 1`` keeps every speculative KV write inside the
+        admission reservation), by the pool/table row cap, and by the
+        static chunk width."""
+        k_want = self.spec_cfg.k
+        if self.spec_cfg.adaptive_k:
+            k_want = max(1, int(round(self._accept_ema[req.slot] * k_want)))
         remaining = req.max_new - len(req.out)
         room = self._kv_cap - int(self.pool.lengths[req.slot]) - 1
-        return max(0, min(self.spec_cfg.k, remaining - 1, room,
+        return max(0, min(k_want, remaining - 1, room,
                           self.admission_cfg.chunk_tokens - 1))
 
     def step(self) -> int:
@@ -860,10 +1294,16 @@ class Engine:
             # reservation, so it cannot fail)
             self.pool.ensure(slot, int(self.pool.lengths[slot]) + cnt)
         self._key, sk = jax.random.split(self._key)
+        if self.streamed_moe:
+            # host-side lane bounds for the routed-expert filter (spec
+            # verify lanes are added in-graph; the filter uses the
+            # superset bound q_lens + draft_cap)
+            self._host_q_lens = q_lens.copy()
+            self._host_draft_cap = draft_cap.copy() if spec else None
         state = dict(self.pool.device_state(),
                      bitmap=self.bitmap, prev_cycles=self._prev_cycles)
         t_step0 = time.perf_counter()
-        stall0 = self.streamer.stall_s if self.streamed else 0.0
+        stall0 = self._stream_stall_s()
         args = (self.params, self.attn_flash, state,
                 jnp.asarray(tokens), jnp.asarray(q_lens),
                 jnp.asarray(admitted), self.pool.block_tables_dev(), sk)
@@ -929,12 +1369,20 @@ class Engine:
                 t["drafted"] += int(st["spec_drafted"])
                 t["accepted"] += int(st["spec_accepted"])
                 t["emitted"] += int(st["spec_emitted"])
+                if self.spec_cfg.adaptive_k:
+                    nd = np.asarray(st["spec_draft_slots"])
+                    na = np.asarray(st["spec_accept_slots"])
+                    a = self.spec_cfg.ema_alpha
+                    for slot in np.nonzero(is_decode & (nd > 0))[0]:
+                        rate = float(na[slot]) / float(nd[slot])
+                        self._accept_ema[slot] = \
+                            (1.0 - a) * self._accept_ema[slot] + a * rate
         if self.streamed:
             # stall fraction of step wall time (EMA): the residency signal
             # the admission budget contracts with (scheduler.step_token_
             # budget) — a weight-stream-bound engine sheds prefill share.
             dt = time.perf_counter() - t_step0
-            frac = (self.streamer.stall_s - stall0) / max(dt, 1e-9)
+            frac = (self._stream_stall_s() - stall0) / max(dt, 1e-9)
             self._stall_frac = 0.5 * self._stall_frac \
                 + 0.5 * min(max(frac, 0.0), 1.0)
             entry["stall_frac"] = self._stall_frac
@@ -944,6 +1392,16 @@ class Engine:
             self._maybe_autotune_depth()
         self._admit()                    # freed slots host waiting requests
         return n_processed
+
+    def close(self):
+        """Release background resources: the MoE expert prefetcher's
+        worker thread (whose fetch closure pins this engine — without an
+        explicit close, neither the thread nor the device-resident expert
+        cache is ever reclaimed). Idempotent; a no-op for non-MoE-streamed
+        engines."""
+        p = getattr(self, "prefetcher", None)
+        if p is not None:
+            p.stop()
 
     @property
     def step_traces(self) -> int:

@@ -54,6 +54,12 @@ class SpecConfig:
     drafter: str = "ngram"      # "ngram" (prompt lookup) | "model"
     ngram: int = 3              # longest trailing n-gram to look up
     draft_window: int = 16      # context window of the draft model
+    # adaptive per-slot k: scale each slot's verify-lane ask by its recent
+    # acceptance-rate EMA (a slot whose drafts never land wastes lm_head
+    # lanes and KV scatter width; one at ~100% wants full depth). Every
+    # slot keeps >= 1 probe lane so the signal can recover.
+    adaptive_k: bool = False
+    ema_alpha: float = 0.5      # EMA weight of the newest verify step
 
     def __post_init__(self):
         if self.k < 1:
@@ -62,6 +68,8 @@ class SpecConfig:
             raise ValueError(f"unknown drafter {self.drafter!r}")
         if self.drafter == "ngram" and self.ngram < 1:
             raise ValueError("ngram drafter needs ngram >= 1")
+        if not (0.0 < self.ema_alpha <= 1.0):
+            raise ValueError(f"ema_alpha={self.ema_alpha}: need (0, 1]")
 
 
 # --- drafters (pure, jit-safe; called inside the engine's embed stage) -------

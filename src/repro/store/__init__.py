@@ -1,13 +1,19 @@
 """FlashStore: host-resident page-granular weight store + layer streaming.
 
-The flash tier end-to-end as a subsystem (DESIGN.md §7): ``PageStore``
+The flash tier end-to-end as a subsystem (DESIGN.md §7/§9): ``PageStore``
 serializes deployed FlashWeights into plane-interleaved 16 KiB NAND pages
-(host-resident / mmap-backed die image), and ``LayerStreamer`` +
-``ResidencyCache`` stream them under the serving engine's per-layer-group
-compute so models whose flash tier exceeds device memory still serve.
+(host-resident / mmap-backed die image); ``LayerStreamer`` +
+``ResidencyCache`` stream dense layer groups under the serving engine's
+compute; ``ExpertCache`` + ``ExpertPrefetcher`` page ROUTED MoE experts —
+only the router's top-k choices cross to the device, prefetched ahead by a
+router-history EMA predictor — so models whose flash tier exceeds device
+memory still serve.
 """
-from repro.store.pagestore import PageStore, StoreRef, drop_store_refs
+from repro.store.expert_cache import ExpertCache, ExpertPrefetcher
+from repro.store.pagestore import (PageStore, StoreRef, drop_store_refs,
+                                   graft_store_refs)
 from repro.store.streamer import LayerStreamer, ResidencyCache, StreamConfig
 
 __all__ = ["PageStore", "StoreRef", "LayerStreamer", "ResidencyCache",
-           "StreamConfig", "drop_store_refs"]
+           "StreamConfig", "ExpertCache", "ExpertPrefetcher",
+           "drop_store_refs", "graft_store_refs"]

@@ -1,0 +1,234 @@
+"""ExpertStore: routed-expert paging through the flash tier (DESIGN.md §9).
+
+MoE is NVLLM's best-fit case: ~97 % of a qwen3-moe/phi3.5-moe model is
+expert banks of which only ``top_k / n_experts`` are touched per token, so
+page-granular routed-expert fetch is exactly the access pattern the
+paper's NAND-resident-FFN architecture rewards. The serving engine keeps
+the expert banks in the ``PageStore`` and, each layer of each step, ships
+the router's top-k expert-id set to the host (the MoE analog of
+Algorithm 2's plane bitmap); only THOSE experts' pages cross to the
+device.
+
+``ExpertCache`` is the residency layer for that traffic: byte-budgeted and
+ref-counted exactly like ``ResidencyCache`` (pinned or ref-held entries are
+never evicted; resident bytes never exceed capacity), but keyed by
+``(layer, expert)`` and extended with a ROUTER-HISTORY PREDICTOR — a per
+``(layer, expert)`` EMA of routed-expert hits. While layer *l*'s expert
+compute runs, ``ExpertPrefetcher``'s worker thread fetches layer *l+1*'s
+most-likely experts (EMA top-m) into the cache, so a correctly-predicted
+expert is already device-resident when its router asks for it. A routed
+expert that is NOT resident is fetched synchronously on the compute path —
+a MISROUTE STALL, counted and timed in ``stats()`` (the engine's
+``expert_stats()`` aggregates hit rate, bytes/token vs the dense
+all-experts-streamed equivalent, and these stalls).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.store.streamer import ResidencyCache
+
+
+class ExpertCache(ResidencyCache):
+    """Byte-budgeted, ref-counted residency for ``(layer, expert)`` weight
+    sets, plus the router-history predictor driving prefetch.
+
+    Invariants (property-tested in tests/test_expert_cache.py): all of
+    ``ResidencyCache``'s — bytes_used <= capacity, pinned/ref-held entries
+    survive every eviction, hit+miss == acquires — under concurrent
+    insert/acquire/evict traffic from the prefetch worker.
+    """
+
+    def __init__(self, capacity_bytes: int | None, n_layers: int,
+                 n_experts: int, ema_alpha: float = 0.3):
+        super().__init__(capacity_bytes)
+        self.n_layers = int(n_layers)
+        self.n_experts = int(n_experts)
+        self.ema_alpha = float(ema_alpha)
+        # per-(layer, expert) EMA of router hits — the prefetch signal
+        self.scores = np.zeros((self.n_layers, self.n_experts), np.float64)
+        self.reset_counters()
+
+    def reset_counters(self):
+        """Zero the traffic counters (init-time pin fetches are deployment,
+        not serving — mirrors PageStore.reset_counters)."""
+        with self._lock:
+            self.bytes_fetched = 0
+            self.fetches = 0
+            self.prefetches = 0
+            self.prefetched_bytes = 0
+            self.misroute_stalls = 0
+            self.misroute_stall_s = 0.0
+
+    # --- router-history predictor -------------------------------------------
+
+    def observe(self, layer: int, experts: Iterable[int]):
+        """Fold one step's routed-expert set for ``layer`` into the EMA."""
+        hit = np.zeros((self.n_experts,), np.float64)
+        ids = np.asarray(list(experts), np.int64)
+        if ids.size:
+            hit[ids] = 1.0
+        a = self.ema_alpha
+        self.scores[layer] = (1.0 - a) * self.scores[layer] + a * hit
+
+    def predict(self, layer: int, m: int) -> list[int]:
+        """The up-to-``m`` most-likely experts for ``layer`` (EMA top-m,
+        zero-score experts never predicted — no history, no prefetch)."""
+        s = self.scores[layer]
+        order = np.argsort(-s, kind="stable")[:max(int(m), 0)]
+        return [int(e) for e in order if s[e] > 0.0]
+
+    # --- score-aware admission ------------------------------------------------
+
+    def _score(self, key) -> float:
+        li, e = key
+        if 0 <= li < self.n_layers and 0 <= e < self.n_experts:
+            return float(self.scores[li, e])
+        return 0.0
+
+    def _eviction_candidates(self, key, pin: bool) -> list:
+        """Score-aware admission (the only departure from the base LRU
+        policy): an eviction victim must be strictly COLDER (lower
+        predictor score) than the incoming expert, coldest first. A
+        rotating working set larger than the cache turns plain LRU into a
+        thrash loop — every miss evicts next step's hit — whereas under
+        score parity nothing moves: stable routing freezes the resident
+        set at maximal hits, and a routing SHIFT decays stale scores
+        until the new hot set displaces them. Pinned inserts always
+        outrank; pinned/ref-held entries are never victims (base-class
+        guard)."""
+        s_new = float("inf") if pin else self._score(key)
+        return sorted((k for k, e in self._entries.items()
+                       if not e.pinned and e.refs == 0
+                       and self._score(k) < s_new),
+                      key=self._score)
+
+    def would_admit(self, key, nbytes: int) -> bool:
+        """Cheap pre-check for the prefetcher: would a score-aware insert
+        of ``key`` succeed right now? (Advisory — insert re-checks under
+        the same lock — but it keeps speculative fetches from reading
+        pages the cache would immediately reject.) Resident keys report
+        False: nothing to prefetch."""
+        s_new = self._score(key)
+        with self._lock:
+            if key in self._entries:
+                return False
+            if self.capacity is None:
+                return True
+            if nbytes > self.capacity:
+                return False
+            used = sum(e.nbytes for e in self._entries.values())
+            if used + nbytes <= self.capacity:
+                return True
+            reclaimable = sum(
+                e.nbytes for k, e in self._entries.items()
+                if not e.pinned and e.refs == 0 and self._score(k) < s_new)
+            return used - reclaimable + nbytes <= self.capacity
+
+    # --- traffic accounting (thread-safe: main + prefetch worker) -------------
+
+    def note_fetch(self, nbytes: int, prefetch: bool = False):
+        with self._lock:
+            self.fetches += 1
+            self.bytes_fetched += int(nbytes)
+            if prefetch:
+                self.prefetches += 1
+                self.prefetched_bytes += int(nbytes)
+
+    def note_stall(self, seconds: float):
+        with self._lock:
+            self.misroute_stalls += 1
+            self.misroute_stall_s += float(seconds)
+
+    def stats(self) -> dict:
+        base = super().stats()
+        with self._lock:
+            base.update({
+                "bytes_fetched": self.bytes_fetched,
+                "fetches": self.fetches,
+                "prefetches": self.prefetches,
+                "prefetched_bytes": self.prefetched_bytes,
+                "misroute_stalls": self.misroute_stalls,
+                "misroute_stall_s": self.misroute_stall_s,
+            })
+        return base
+
+
+class ExpertPrefetcher:
+    """Background fetcher filling the ExpertCache ahead of the router.
+
+    ``fetch(layer, expert) -> (device_value, nbytes)`` is supplied by the
+    engine (it knows the store layout). ``request`` enqueues predicted
+    ``(layer, expert)`` keys; the worker thread fetches any that are
+    neither resident nor already in flight and inserts them (plain LRU
+    insert — the cache's eviction discipline decides what makes room).
+    A prefetched-but-wrong expert costs wasted bytes, never correctness:
+    the compute path always fetches what the router actually asked for.
+    """
+
+    def __init__(self, cache: ExpertCache,
+                 fetch: Callable[[int, int], tuple[object, int]]):
+        self.cache = cache
+        self._fetch = fetch
+        self._q: "queue.Queue" = queue.Queue()
+        self._inflight: set = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def request(self, keys: Iterable[tuple[int, int]]):
+        for key in keys:
+            with self._lock:
+                if key in self._inflight:
+                    continue
+                self._inflight.add(key)
+            self._q.put(key)
+
+    def in_flight(self, key) -> bool:
+        """True while ``key`` is queued or being fetched — the compute
+        path waits for it instead of double-reading the same pages."""
+        with self._lock:
+            return key in self._inflight
+
+    def _worker(self):
+        while not self._stop.is_set():
+            try:
+                key = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            try:
+                if key is None:
+                    return
+                if key not in self.cache:
+                    value, nbytes = self._fetch(*key)
+                    self.cache.note_fetch(nbytes, prefetch=True)
+                    self.cache.insert(key, value, nbytes)
+            except Exception:
+                # a failed prefetch is only a lost optimization — the
+                # compute path re-fetches synchronously and surfaces the
+                # real error there.
+                pass
+            finally:
+                with self._lock:
+                    self._inflight.discard(key)
+
+    def drain(self, timeout: float = 5.0):
+        """Block until the queue is empty and nothing is in flight
+        (tests / deterministic shutdown)."""
+        import time
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                idle = self._q.empty() and not self._inflight
+            if idle:
+                return
+            time.sleep(0.002)
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=2.0)

@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 from typing import Any
 
 import jax.numpy as jnp
@@ -75,6 +76,23 @@ def drop_store_refs(tree):
     return tree
 
 
+def graft_store_refs(tree, refs: dict) -> dict:
+    """Insert ``refs`` (``'/'``-joined param path -> StoreRef) into a
+    DRAM-tier pytree — the inverse of ``drop_store_refs`` for a store whose
+    page table survived (``serve --store-image``): the restored checkpoint
+    holds the DRAM tier, the opened die image rebuilds the flash tier's
+    StoreRefs, and this stitches them back into one deployed pytree."""
+    out = {k: (graft_store_refs(v, {}) if isinstance(v, dict) else v)
+           for k, v in tree.items()}
+    for path, ref in refs.items():
+        node = out
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = ref
+    return out
+
+
 @dataclasses.dataclass
 class _Component:
     """One serialized array of a parameter (q / parity / scale)."""
@@ -110,6 +128,10 @@ class PageStore:
         self._data = np.zeros((0, self.page_bytes), np.uint8)
         self.n_pages = 0
         self.total_bytes = 0         # logical payload bytes across entries
+        # expert prefetch reads pages from a worker thread concurrently
+        # with the compute path's misroute fetches; the counters are the
+        # only shared mutable state on the read path.
+        self._read_lock = threading.Lock()
         self.reset_counters()
 
     # --- write path (deploy-time "flash programming"; write-once) ------------
@@ -199,9 +221,10 @@ class PageStore:
     def read_pages(self, ids) -> np.ndarray:
         """Raw page reads (len(ids), page_bytes) — counts per-plane traffic."""
         ids = np.asarray(ids, np.int64)
-        np.add.at(self.plane_reads, ids % self.n_planes, 1)
-        self.pages_read += ids.size
-        self.bytes_read += ids.size * self.page_bytes
+        with self._read_lock:
+            np.add.at(self.plane_reads, ids % self.n_planes, 1)
+            self.pages_read += ids.size
+            self.bytes_read += ids.size * self.page_bytes
         return self._data[ids]
 
     def _get_flat(self, comp: _Component) -> np.ndarray:
@@ -237,6 +260,38 @@ class PageStore:
         return (int(np.prod(e["q"].shape))
                 + int(np.prod(e["parity"].shape))
                 + int(np.prod(e["scale"].shape)) * 4)
+
+    def param_refs(self, exclude_prefixes: tuple = ()) -> dict[str, StoreRef]:
+        """Rebuild the ``StoreRef`` placeholders from the page table — the
+        inverse of ``put_param`` for a store opened from a persisted die
+        image (``serve --store-image``). Entries named ``base@i[.j...]``
+        group into one stacked ref per base name; unsuffixed entries become
+        unstacked refs. ``exclude_prefixes`` drops engine-internal entries
+        (e.g. the ``attn_flash/`` per-layer copies, which are addressed by
+        name, not grafted into the param pytree)."""
+        groups: dict[str, dict[tuple, str]] = {}
+        for entry in self.table:
+            base, sep, idx = entry.partition("@")
+            if any(base.startswith(p) for p in exclude_prefixes):
+                continue
+            key = tuple(int(i) for i in idx.split(".")) if sep else ()
+            groups.setdefault(base, {})[key] = entry
+        refs: dict[str, StoreRef] = {}
+        for base, entries in groups.items():
+            lead = ()
+            if () not in entries:
+                lead = tuple(d + 1 for d in
+                             np.max(np.array(list(entries)), axis=0))
+                if int(np.prod(lead)) != len(entries):
+                    raise ValueError(
+                        f"store entries for {base!r} do not form a dense "
+                        f"{lead} stack ({len(entries)} present)")
+            slice_shape = self.table[entries[min(entries)]]["q"].shape
+            refs[base] = StoreRef(
+                name=base, shape=lead + tuple(slice_shape),
+                nbytes=sum(self.entry_nbytes(e) for e in entries.values()),
+                lead=lead)
+        return refs
 
     # --- accounting -----------------------------------------------------------
 

@@ -43,6 +43,14 @@ class StreamConfig:
     # instead of trusting the static value above.
     auto_depth: bool = False
     auto_depth_after: int = 4               # measured steps before re-picking
+    # MoE expert paging (DESIGN.md §9): rows in the per-layer device expert
+    # slab — the rotating window of the expert-paged data plane. None =
+    # min(n_experts, worst-case routed set: n_slots * chunk_tokens * top_k).
+    # The slab is budget-accounted like the dense prefetch windows.
+    expert_slab: int | None = None
+    # experts the predictor prefetches for layer l+1 beyond the breadth of
+    # the set the router just asked for (headroom for routing churn)
+    prefetch_experts_margin: int = 1
 
 
 @dataclasses.dataclass
@@ -129,9 +137,19 @@ class ResidencyCache:
             if e is not None and e.refs > 0:
                 e.refs -= 1
 
+    def _eviction_candidates(self, key, pin: bool) -> list:
+        """Victim ORDER for an insert that needs room: LRU-first among
+        unpinned ref-free entries. Called under the lock. Subclasses
+        override only this policy (e.g. the expert cache's score-aware
+        admission); the insert mechanics — capacity checks, reject
+        accounting, the pinned/ref-held guard — stay shared."""
+        return [k for k, e in self._entries.items()
+                if not e.pinned and e.refs == 0]
+
     def insert(self, key, value, nbytes: int, pin: bool = False) -> bool:
-        """Admit an entry, LRU-evicting unpinned ref-free entries to make
-        room. Returns False (entry stays non-resident) if it cannot fit."""
+        """Admit an entry, evicting ``_eviction_candidates`` (in order) to
+        make room. Returns False (entry stays non-resident) if it cannot
+        fit."""
         with self._lock:
             if key in self._entries:
                 e = self._entries[key]
@@ -143,15 +161,13 @@ class ResidencyCache:
                 if nbytes > self.capacity:
                     self.rejects += 1
                     return False
-                for k in list(self._entries):
-                    if used + nbytes <= self.capacity:
-                        break
-                    e = self._entries[k]
-                    if e.pinned or e.refs > 0:
-                        continue
-                    used -= e.nbytes
-                    del self._entries[k]
-                    self.evictions += 1
+                if used + nbytes > self.capacity:
+                    for k in self._eviction_candidates(key, pin):
+                        if used + nbytes <= self.capacity:
+                            break
+                        used -= self._entries[k].nbytes
+                        del self._entries[k]
+                        self.evictions += 1
                 if used + nbytes > self.capacity:
                     self.rejects += 1
                     return False

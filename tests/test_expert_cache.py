@@ -1,0 +1,246 @@
+"""ExpertStore residency (ISSUE 5): ExpertCache invariants — budget never
+exceeded, pinned/ref-held experts never evicted, no leaks/double-frees
+across evict-prefetch races — plus the router-history predictor and the
+prefetch worker. Property tests ride the optional-hypothesis shim."""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.store import ExpertCache, ExpertPrefetcher
+from tests.hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+CAP = 100
+
+
+def _cache(cap=CAP, layers=4, experts=8, **kw):
+    return ExpertCache(cap, n_layers=layers, n_experts=experts, **kw)
+
+
+# --- residency invariants -----------------------------------------------------
+
+def test_keyed_by_layer_expert():
+    c = _cache()
+    assert c.insert((0, 3), "A", 40)
+    assert c.insert((1, 3), "B", 40)          # same expert, other layer
+    assert c.acquire((0, 3)) == "A"
+    assert c.acquire((1, 3)) == "B"
+    c.release((0, 3))
+    c.release((1, 3))
+    s = c.stats()
+    assert s["hits"] == 2 and s["misses"] == 0
+
+
+def test_budget_never_exceeded_and_pinned_survive():
+    c = _cache()
+    c.insert((0, 0), 0, 60, pin=True)
+    assert not c.insert((0, 1), 1, 50)        # cannot evict the pin
+    assert c.insert((0, 2), 2, 40)
+    assert c.bytes_used <= CAP
+    assert (0, 0) in c and (0, 1) not in c
+
+
+def test_release_floor_no_double_free():
+    """Releasing more times than acquired must not underflow refs into
+    un-evictable (or negative-ref) territory."""
+    c = _cache()
+    c.insert((0, 0), 0, 30)
+    assert c.acquire((0, 0)) == 0
+    c.release((0, 0))
+    c.release((0, 0))                          # double free: no-op
+    c.release((0, 0))
+    # entry is ref-free now: a HOTTER conflicting insert may evict it
+    c.observe(1, [0])                          # (1, 0) outranks cold (0, 0)
+    c.insert((1, 0), 1, CAP - 30 + 10)
+    assert (0, 0) not in c and (1, 0) in c
+
+
+def test_score_aware_admission_never_thrashes_equals():
+    """The anti-thrash property: under score PARITY (a rotating working
+    set none of which is hotter than the rest) the resident set freezes —
+    a miss never evicts next step's hit — while a genuinely hotter expert
+    displaces the coldest resident."""
+    c = _cache(cap=100)
+    c.insert((0, 0), "a", 50)
+    c.insert((0, 1), "b", 50)
+    assert not c.insert((0, 2), "c", 50)       # equal (zero) score: reject
+    assert (0, 0) in c and (0, 1) in c
+    assert c.stats()["rejects"] == 1
+    for _ in range(3):
+        c.observe(0, [2])                      # expert 2 becomes hot
+    assert c.insert((0, 2), "c", 50)           # displaces a cold resident
+    assert (0, 2) in c and c.bytes_used <= 100
+
+
+def test_would_admit_matches_insert():
+    c = _cache(cap=100)
+    c.insert((0, 0), "a", 60)
+    assert not c.would_admit((0, 0), 60)       # resident: nothing to do
+    assert c.would_admit((0, 1), 40)           # fits in free space
+    assert not c.would_admit((0, 2), 60)       # equal score: no victims
+    c.observe(0, [2])
+    assert c.would_admit((0, 2), 60)           # hotter: cold (0,0) yields
+    held = c.acquire((0, 0))
+    assert held == "a"
+    assert not c.would_admit((0, 2), 60)       # ref-held: protected
+    c.release((0, 0))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["ins", "pin", "acq", "rel"]),
+                          st.integers(0, 3), st.integers(0, 5),
+                          st.integers(1, 60)),
+                max_size=50))
+def test_expert_cache_invariants_property(ops):
+    """Property: under any op sequence over (layer, expert) keys —
+    bytes_used <= capacity, pinned/ref-held entries survive every
+    eviction, hit+miss == acquires (the ResidencyCache invariants on the
+    (layer, expert) key space)."""
+    c = _cache()
+    pinned, held = set(), {}
+    acquires = 0
+    for op, li, e, nbytes in ops:
+        key = (li, e)
+        if op == "ins":
+            c.insert(key, key, nbytes)
+        elif op == "pin":
+            if c.insert(key, key, nbytes, pin=True):
+                pinned.add(key)
+        elif op == "acq":
+            acquires += 1
+            if c.acquire(key) is not None:
+                held[key] = held.get(key, 0) + 1
+        elif op == "rel" and held.get(key):
+            c.release(key)
+            held[key] -= 1
+        s = c.stats()
+        assert s["bytes_used"] <= CAP
+        assert s["hits"] + s["misses"] == acquires
+        for k in pinned | {k for k, v in held.items() if v > 0}:
+            assert k in c, f"pinned/held expert {k} was evicted"
+
+
+def test_evict_prefetch_race_invariants():
+    """Concurrent prefetch-style inserts racing the compute path's
+    acquire/release/insert traffic: the budget holds at every moment,
+    pinned entries survive, and counters stay consistent."""
+    c = _cache(cap=200, layers=2, experts=16)
+    c.insert((0, 0), "pin", 50, pin=True)
+    stop = threading.Event()
+    errors: list = []
+
+    def prefetcher():
+        rng = np.random.default_rng(0)
+        while not stop.is_set():
+            li, e = int(rng.integers(2)), int(rng.integers(16))
+            c.insert((li, e), (li, e), int(rng.integers(1, 40)))
+            if c.bytes_used > 200:
+                errors.append("budget exceeded")
+                return
+
+    t = threading.Thread(target=prefetcher, daemon=True)
+    t.start()
+    rng = np.random.default_rng(1)
+    acquires = 0
+    try:
+        deadline = time.monotonic() + 1.0
+        while time.monotonic() < deadline:
+            li, e = int(rng.integers(2)), int(rng.integers(16))
+            acquires += 1
+            v = c.acquire((li, e))
+            if v is None:
+                c.insert((li, e), (li, e), int(rng.integers(1, 40)))
+            else:
+                assert c.bytes_used <= 200
+                c.release((li, e))
+            assert (0, 0) in c, "pinned expert evicted under race"
+    finally:
+        stop.set()
+        t.join()
+    assert not errors
+    s = c.stats()
+    assert s["bytes_used"] <= 200
+    assert s["hits"] + s["misses"] == acquires
+
+
+# --- router-history predictor -------------------------------------------------
+
+def test_predictor_ranks_observed_experts():
+    c = _cache(layers=2, experts=8)
+    for _ in range(5):
+        c.observe(0, [1, 5])
+    c.observe(0, [2])
+    top = c.predict(0, 2)
+    assert set(top) == {1, 5}                  # persistent beats one-shot
+    assert c.predict(1, 4) == []               # no history, no prefetch
+
+
+def test_predictor_ema_decays_stale_experts():
+    c = _cache(layers=1, experts=4, ema_alpha=0.5)
+    c.observe(0, [0])
+    for _ in range(6):
+        c.observe(0, [3])
+    assert c.predict(0, 1) == [3]
+    assert c.scores[0, 0] < c.scores[0, 3]
+
+
+def test_note_fetch_accounting():
+    c = _cache()
+    c.note_fetch(100)
+    c.note_fetch(50, prefetch=True)
+    s = c.stats()
+    assert s["bytes_fetched"] == 150 and s["fetches"] == 2
+    assert s["prefetches"] == 1 and s["prefetched_bytes"] == 50
+    c.reset_counters()
+    assert c.stats()["bytes_fetched"] == 0
+
+
+# --- prefetch worker ----------------------------------------------------------
+
+def test_prefetcher_fills_cache_and_dedupes():
+    c = _cache(cap=None, layers=2, experts=8)
+    fetched: list = []
+
+    def fetch(li, e):
+        fetched.append((li, e))
+        time.sleep(0.005)
+        return (li, e), 10
+
+    p = ExpertPrefetcher(c, fetch)
+    try:
+        p.request([(0, 1), (0, 1), (0, 2)])    # duplicate collapses
+        p.request([(0, 1)])                    # in flight or resident: skip
+        p.drain()
+        assert (0, 1) in c and (0, 2) in c
+        assert fetched.count((0, 1)) == 1
+        assert c.stats()["prefetches"] == len(fetched)
+        # already-resident keys are never re-fetched
+        n = len(fetched)
+        p.request([(0, 2)])
+        p.drain()
+        assert len(fetched) == n
+    finally:
+        p.stop()
+
+
+def test_prefetcher_failure_is_non_fatal():
+    c = _cache(cap=None)
+
+    def fetch(li, e):
+        raise RuntimeError("flash read failed")
+
+    p = ExpertPrefetcher(c, fetch)
+    try:
+        p.request([(0, 0)])
+        p.drain()
+        assert (0, 0) not in c                 # lost optimization, no crash
+    finally:
+        p.stop()
+
+
+def test_hypothesis_available_note():
+    if not HAVE_HYPOTHESIS:
+        pytest.skip("hypothesis not installed; property tests skipped")

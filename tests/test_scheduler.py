@@ -108,3 +108,15 @@ def test_plan_chunks_accounts_verify_lanes():
     # int entries stay the vanilla 1-lane decode (back-compat)
     plan = sched.plan_chunks([0, 1], [(2, 40)], budget=10, chunk_tokens=8)
     assert plan[0] == plan[1] == 1 and plan[2] == 8
+
+
+def test_plan_chunks_adaptive_wants_free_budget_for_prefill():
+    """Adaptive per-slot k regression: a slot whose acceptance EMA shrank
+    its verify-lane ask (want 1+1 instead of 1+4) releases those lanes to
+    the prefill share of the SAME budget — the scheduler contract the
+    engine's ``_draft_cap`` adaptation relies on."""
+    full = sched.plan_chunks([(0, 5)], [(1, 40)], budget=8, chunk_tokens=8)
+    shrunk = sched.plan_chunks([(0, 2)], [(1, 40)], budget=8, chunk_tokens=8)
+    assert full[0] == 5 and shrunk[0] == 2
+    assert shrunk[1] == full.get(1, 0) + 3, \
+        "lanes shed by the adaptive slot must fund prefill"

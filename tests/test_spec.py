@@ -329,3 +329,70 @@ def test_pool_rewind_invariants(ops, n_blocks):
     for slot in list(live):
         pool.release(slot)
     assert pool.n_free_blocks == free0, "blocks leaked across rollbacks"
+
+
+# --- adaptive per-slot k (ISSUE 5 satellite) ---------------------------------
+
+def test_adaptive_k_scales_draft_cap_with_ema(params):
+    """The per-slot acceptance EMA scales the verify-lane ask: full depth
+    at ~100% acceptance, ONE probe lane at ~0% (never zero — the probe is
+    what lets a recovering slot grow back)."""
+    eng = Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ,
+                 kv_aware=False, spec_cfg=SpecConfig(k=4, adaptive_k=True))
+    rid = eng.submit([13] * 8, max_new=32)
+    eng.step()                                    # prefill
+    req = eng.requests[rid]
+    eng._accept_ema[req.slot] = 1.0
+    assert eng._draft_cap(req) == 4
+    eng._accept_ema[req.slot] = 0.5
+    assert eng._draft_cap(req) == 2
+    eng._accept_ema[req.slot] = 0.0
+    assert eng._draft_cap(req) == 1               # probe lane floor
+    # non-adaptive config ignores the EMA entirely
+    eng2 = Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ,
+                  kv_aware=False, spec_cfg=SpecConfig(k=4))
+    rid2 = eng2.submit([13] * 8, max_new=32)
+    eng2.step()
+    eng2._accept_ema[eng2.requests[rid2].slot] = 0.0
+    assert eng2._draft_cap(eng2.requests[rid2]) == 4
+
+
+def test_adaptive_k_shrinks_on_rejected_drafts(params):
+    """A drafter whose proposals never land drives the slot's EMA — and
+    with it the verify-lane count — down to the probe floor, and the
+    greedy stream is unchanged (drafts never change tokens)."""
+    draft_cfg = dc.replace(OPT_TINY, name="draft", n_layers=1, d_model=64,
+                           n_heads=2, n_kv_heads=2, d_ff=128)
+    draft_params = dense.init(draft_cfg, jax.random.PRNGKey(9))
+    eng = Engine(OPT_TINY, params, max_slots=1, max_seq=MAX_SEQ,
+                 kv_aware=False,
+                 spec_cfg=SpecConfig(k=4, drafter="model", adaptive_k=True),
+                 draft_cfg=draft_cfg, draft_params=draft_params)
+    rid = eng.submit(list(range(1, 12)), max_new=20)
+    out = eng.run()[rid]
+    st = eng.spec_stats()
+    slot_ema = st["spec_accept_ema"]
+    assert min(slot_ema) < 0.3, "adversarial drafts should crater the EMA"
+    assert st["spec_adaptive_k"][0] == 1
+    # greedy invariant holds under adaptation
+    ref = Engine(OPT_TINY, params, max_slots=1, max_seq=MAX_SEQ,
+                 kv_aware=False)
+    r = ref.submit(list(range(1, 12)), max_new=20)
+    assert out == ref.run()[r]
+
+
+def test_adaptive_k_resets_ema_on_slot_reuse(params):
+    eng = Engine(OPT_TINY, params, max_slots=1, max_seq=MAX_SEQ,
+                 kv_aware=False, spec_cfg=SpecConfig(k=4, adaptive_k=True))
+    r1 = eng.submit([13] * 8, max_new=4)
+    eng.run()
+    eng._accept_ema[:] = 0.0                      # pretend history cratered
+    r2 = eng.submit([255] * 8, max_new=4)         # recycles the slot
+    eng.step()
+    slot = eng.requests[r2].slot
+    assert eng._accept_ema[slot] == 1.0, "recycled slot inherited EMA"
+
+
+def test_spec_config_validates_ema_alpha():
+    with pytest.raises(ValueError, match="ema_alpha"):
+        SpecConfig(k=2, adaptive_k=True, ema_alpha=0.0)

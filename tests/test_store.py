@@ -239,3 +239,39 @@ def test_hypothesis_available_in_ci():
     """Informational: property tests above only run with hypothesis."""
     if not HAVE_HYPOTHESIS:
         pytest.skip("hypothesis not installed; property tests skipped")
+
+
+def test_param_refs_rebuilds_storerefs():
+    """param_refs inverts put_param: stacked splits regroup into one ref
+    per base name (shape, lead, nbytes all reconstructed), engine-internal
+    prefixes are excluded, and a sparse split is rejected."""
+    store = PageStore(n_planes=4)
+    stacked = _fw(jax.random.PRNGKey(0), 64, 48, layers=3)
+    ref0 = store.put_param("layers/ffn/w_up", stacked)
+    flat = _fw(jax.random.PRNGKey(1), 64, 32)
+    store.put("lm_head", flat)
+    store.put("attn_flash/wq@0", _fw(jax.random.PRNGKey(2), 32, 32))
+    refs = store.param_refs(exclude_prefixes=("attn_flash/",))
+    assert set(refs) == {"layers/ffn/w_up", "lm_head"}
+    got = refs["layers/ffn/w_up"]
+    assert got.lead == (3,) and got.shape == ref0.shape
+    assert got.nbytes == sum(
+        store.entry_nbytes(ref0.entry(i)) for i in range(3))
+    assert refs["lm_head"].lead == () and refs["lm_head"].shape == (64, 32)
+    # sparse stack (missing @1) is an error, not a silent mis-shape
+    sparse = PageStore()
+    sparse.put("w@0", _fw(jax.random.PRNGKey(3), 64, 32))
+    sparse.put("w@2", _fw(jax.random.PRNGKey(4), 64, 32))
+    with pytest.raises(ValueError, match="dense"):
+        sparse.param_refs()
+
+
+def test_graft_store_refs_inverts_drop():
+    from repro.store import graft_store_refs
+    ref = StoreRef(name="layers/ffn/w_up", shape=(2, 8, 8), nbytes=1,
+                   lead=(2,))
+    dram = {"embed": 1, "layers": {"attn": {"wq": 2}, "ffn": {}}}
+    tree = graft_store_refs(dram, {"layers/ffn/w_up": ref})
+    assert tree["layers"]["ffn"]["w_up"] is ref
+    assert tree["layers"]["attn"]["wq"] == 2
+    assert "w_up" not in dram["layers"]["ffn"], "input tree mutated"

@@ -182,3 +182,39 @@ def test_auto_depth_retunes_prefetch_from_telemetry(params):
     want = ref.run()[rid]
     got = next(iter(eng.requests.values())).out
     assert got == want
+
+
+def test_serve_from_persisted_die_image(params, resident_tokens, tmp_path):
+    """ROADMAP "serve from the persisted die image": a deploy-written image
+    (flash tier + attn flash copies) opened READ-ONLY serves with StoreRefs
+    rebuilt from its page table and nothing re-programmed — token-identical
+    to the resident engine."""
+    from repro.core.tiering import dram_tier
+    # program an image the way deploy --store does: deploy entries + the
+    # per-layer attn flash copies with the engine's seed derivation
+    _, store = _streamed(params, group_size=1)
+    img = str(tmp_path / "nand.img")
+    store.save(img)
+    opened = PageStore.open(img)
+    eng = Engine(OPT_TINY, dram_tier(params), max_slots=2, max_seq=MAX_SEQ,
+                 weight_store=opened, stream_cfg=StreamConfig(group_size=1))
+    assert eng.store_preprogrammed
+    assert opened.n_pages == store.n_pages        # nothing was programmed
+    eng.submit(list(range(1, 30)), max_new=8)
+    eng.submit([9, 8], max_new=8)
+    assert eng.run() == resident_tokens
+    assert eng.step_traces == 3
+
+
+def test_read_only_image_without_attn_copies_rejected(params, tmp_path):
+    """An image lacking the attn flash copies cannot be fixed read-only:
+    the engine must say so instead of dying inside NAND programming."""
+    from repro.core.tiering import deploy, dram_tier
+    store = PageStore()
+    deploy(params, store=store)                   # no attn copies emitted
+    img = str(tmp_path / "bare.img")
+    store.save(img)
+    with pytest.raises(ValueError, match="attn flash copies"):
+        Engine(OPT_TINY, dram_tier(params), max_slots=2, max_seq=MAX_SEQ,
+               weight_store=PageStore.open(img),
+               stream_cfg=StreamConfig(group_size=1))
