@@ -19,7 +19,12 @@ weight budget, and guards the headline claims:
     window — the PR-3 dense discipline — would fetch);
   * the expert-paged data plane replays exactly 4 traces (embed + router
     half + expert half + finish), and the per-plane page counters feed a
-    positive analytical NAND time.
+    positive analytical NAND time;
+  * the page-pool dataflow holds its floor: streamed decode runs at
+    >= 0.5x the resident engine's tok/s at the 45 % budget (the ratio the
+    host-slab assembly path could not reach), with every window crossing
+    as ONE staged pool transfer (scripts/bench_gate.py re-checks the
+    recorded ratio in CI).
 
     PYTHONPATH=src python -m benchmarks.serve_moe
     PYTHONPATH=src REPRO_SMOKE=1 python benchmarks/serve_moe.py   # CI
@@ -46,10 +51,18 @@ from repro.store import PageStore, StreamConfig
 # Deep enough that one layer's expert bank (the rotating slab) is a small
 # slice of the flash tier, sparse enough (top-2 of 16) that routed-expert
 # paging has room to beat all-experts streaming; small enough for CPU CI.
+# d_ff is sized so expert compute DOMINATES per-layer dispatch: below
+# ~256 both engines are overhead-bound and the tok/s ratio measures
+# python dispatch, not the paging data plane. At 384 the streamed
+# engine's half-bank slab (8 of 16 experts) offsets its router sync, so
+# the 0.5x floor below tests real paging costs. Grouped routing (top-2
+# of 4 groups) bounds the per-layer expert spread — the device-limited
+# routing the expert cache is built for.
 SERVE_MOE_BENCH = ArchConfig(
     name="serve-moe-bench", family="moe", n_layers=8, d_model=64,
-    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=96, vocab_size=512,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=384, vocab_size=512,
     qk_norm=True, n_experts=16, top_k=2, max_seq=256,
+    n_expert_groups=4, topk_expert_groups=2,
 )
 
 SMOKE = os.environ.get("REPRO_SMOKE", "0") != "0"
@@ -91,16 +104,24 @@ def bench(report: Report) -> dict:
     budget = int(flash_total * BUDGET_FRACTION)
 
     store = PageStore()
+    # expert_slab bounds the per-layer slab to what routing actually uses
+    # (worst observed set is well under 8 on these prompts); the freed
+    # reservation plus auto_expert_budget's retune go to cache residency —
+    # fewer evictions, fewer misroute stalls.
     eng = Engine(cfg, params, max_slots=3, max_seq=160, weight_store=store,
-                 stream_cfg=StreamConfig(device_budget_bytes=budget))
+                 stream_cfg=StreamConfig(device_budget_bytes=budget,
+                                         expert_slab=8,
+                                         auto_expert_budget=True))
     got, spec_tps, _ = _run_engine(eng)
     st = eng.stream_stats()
     eng.close()
     ratio = (st["expert_bytes_per_token"]
              / max(st["all_experts_bytes_per_token"], 1e-9))
+    tps_ratio = spec_tps / max(resident_tps, 1e-9)
     parity = got == want
     report.note(
-        f"  expert-paged: {spec_tps:8.1f} tok/s @ budget "
+        f"  expert-paged: {spec_tps:8.1f} tok/s "
+        f"({tps_ratio:.2f}x resident) @ budget "
         f"{budget/2**20:.2f} MiB ({100*BUDGET_FRACTION:.0f}% of "
         f"{flash_total/2**20:.2f} MiB flash tier)")
     report.note(
@@ -110,6 +131,15 @@ def bench(report: Report) -> dict:
         f"{100*st['expert_hit_rate']:.0f}%, {st['expert_prefetches']} "
         f"prefetches, {st['misroute_stalls']} misroute stalls, NAND "
         f"{st['nand_seconds']*1e3:.2f} ms analytical")
+    slot_rates = ", ".join(f"{100*r:.0f}%"
+                           for r in st.get("slot_hit_rates", []))
+    report.note(
+        f"  pool: {st['pool_uploads']} staged uploads / "
+        f"{st['pool_pages_staged']} pages "
+        f"({st['pool_bytes_staged']/2**20:.1f} MiB), "
+        f"{st['pool_used_pages']}/{st['pool_pages']} pages resident; "
+        f"max routed set {st['max_routed_seen']}/{st['expert_slab']}, "
+        f"per-slot hit rates [{slot_rates}]")
 
     results = {
         "flash_tier_bytes": flash_total, "budget_bytes": budget,
@@ -125,6 +155,13 @@ def bench(report: Report) -> dict:
         "misroute_stalls": st["misroute_stalls"],
         "pages_read": st["pages_read"],
         "nand_seconds": st["nand_seconds"],
+        "streamed_vs_resident_tps": tps_ratio,
+        "pool_uploads": st["pool_uploads"],
+        "pool_pages_staged": st["pool_pages_staged"],
+        "pool_bytes_staged": st["pool_bytes_staged"],
+        "max_routed_seen": st["max_routed_seen"],
+        "expert_slab": st["expert_slab"],
+        "slot_hit_rates": [float(r) for r in st.get("slot_hit_rates", [])],
     }
 
     report.add("MoE flash tier exceeds the device budget (ratio > 1)",
@@ -139,6 +176,8 @@ def bench(report: Report) -> dict:
                results["traces"], 4, 4)
     report.add("analytical NAND seconds reported ( > 0 )",
                float(results["nand_seconds"] > 0), 1, 1)
+    report.add("streamed tok/s >= 0.5x resident (page-pool floor)",
+               tps_ratio, 0.5, float("inf"))
     return results
 
 

@@ -13,6 +13,9 @@ What this guards:
     worker's total stream time (prefetch is actually ahead);
   * per-plane page-read counters feed the analytical NAND-time model
     (simulator/hw.py) so wall-clock rides next to the §4.1 numbers;
+  * every streamed window crosses to the device as exactly ONE staged
+    page-pool transfer (pool_uploads == groups_streamed) — the tentpole
+    contract that killed per-param host slab assembly;
   * results land in BENCH_serve.json (machine-readable perf trajectory).
 
     PYTHONPATH=src python -m benchmarks.serve_stream
@@ -96,6 +99,10 @@ def bench(report: Report) -> dict:
             "cache_misses": st["cache_misses"],
             "pages_read": st["pages_read"],
             "nand_seconds": st["nand_seconds"],
+            "groups_streamed": st["groups_streamed"],
+            "pool_uploads": st["pool_uploads"],
+            "pool_pages_staged": st["pool_pages_staged"],
+            "pool_bytes_staged": st["pool_bytes_staged"],
         })
         report.note(
             f"  streamed : {tps:8.1f} tok/s @ budget {budget/2**20:.2f} MiB "
@@ -103,6 +110,8 @@ def bench(report: Report) -> dict:
             f"stall {st['stall_s']*1e3:.0f}ms / stream "
             f"{st['stream_s']*1e3:.0f}ms, "
             f"{st['bytes_streamed']/2**20:.1f} MiB streamed, "
+            f"{st['pool_uploads']} staged uploads / "
+            f"{st['groups_streamed']} window rotations, "
             f"NAND {st['nand_seconds']*1e3:.2f}ms analytical")
 
     b = results["budgets"][0]                 # tightest budget: every claim
@@ -115,6 +124,9 @@ def bench(report: Report) -> dict:
                          for x in results["budgets"])), 1, 1)
     report.add("streamed data plane traces (embed + group + finish)",
                b["traces"], 3, 3)
+    report.add("one staged pool transfer per window rotation",
+               float(all(x["pool_uploads"] == x["groups_streamed"] > 0
+                         for x in results["budgets"])), 1, 1)
     report.add("analytical NAND seconds reported ( > 0 )",
                float(b["nand_seconds"] > 0), 1, 1)
     return results

@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Perf regression gate over BENCH_serve.json (ISSUE 6).
+
+The serving benchmarks already fail their own in-run checks, but those
+bounds live next to the code that produces the numbers — easy to loosen
+by accident in the same diff that regresses them. This gate re-reads the
+RECORDED results from BENCH_serve.json after the benchmark jobs finish
+and holds the page-pool floors independently:
+
+  * serve_moe: streamed decode >= 0.5x resident tok/s at the 45% budget
+    (the ratio host-side slab assembly could not reach), greedy parity,
+    and streamed bytes/token <= 0.5x the all-experts-streamed cost;
+  * serve_stream: every window rotation crossed as exactly ONE staged
+    pool transfer, at every budget.
+
+    python scripts/bench_gate.py [BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+MOE_TPS_FLOOR = 0.5          # streamed / resident tok/s, page-pool floor
+MOE_BYTES_CEIL = 0.5         # fetched / all-experts-streamed bytes per token
+
+
+def gate(results: dict) -> list[str]:
+    failures = []
+
+    moe = results.get("serve_moe")
+    if moe is None:
+        failures.append("serve_moe: no recorded results")
+    else:
+        ratio = moe.get("streamed_vs_resident_tps", 0.0)
+        if ratio < MOE_TPS_FLOOR:
+            failures.append(
+                f"serve_moe: streamed/resident tok/s {ratio:.3f} fell below "
+                f"the page-pool floor {MOE_TPS_FLOOR}")
+        if not moe.get("parity", False):
+            failures.append("serve_moe: streamed decode lost greedy parity")
+        bytes_ratio = moe.get("bytes_ratio_vs_all_experts", 1.0)
+        if bytes_ratio > MOE_BYTES_CEIL:
+            failures.append(
+                f"serve_moe: bytes/token ratio {bytes_ratio:.3f} exceeds "
+                f"{MOE_BYTES_CEIL}x all-experts-streamed")
+
+    stream = results.get("serve_stream")
+    if stream is None:
+        failures.append("serve_stream: no recorded results")
+    else:
+        for b in stream.get("budgets", []):
+            up, rot = b.get("pool_uploads"), b.get("groups_streamed")
+            if not (up == rot and (up or 0) > 0):
+                failures.append(
+                    f"serve_stream @ {100 * b.get('budget_fraction', 0):.0f}%"
+                    f" budget: {up} staged uploads for {rot} window "
+                    "rotations (contract: exactly one per rotation)")
+    return failures
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json"
+    try:
+        with open(path) as f:
+            results = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read {path}: {e}")
+        return 1
+    failures = gate(results)
+    for msg in failures:
+        print(f"bench gate: FAIL {msg}")
+    if not failures:
+        moe = results["serve_moe"]
+        print("bench gate: PASS "
+              f"(serve_moe {moe['streamed_vs_resident_tps']:.3f}x resident, "
+              f"bytes ratio {moe['bytes_ratio_vs_all_experts']:.3f}x)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

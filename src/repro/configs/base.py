@@ -32,6 +32,12 @@ class ArchConfig:
     # moe
     n_experts: int = 0
     top_k: int = 0
+    # group-limited routing (DeepSeek-V2 style): experts split into
+    # n_expert_groups contiguous groups; each token routes only within its
+    # topk_expert_groups best groups (0 = unrestricted). Bounds the distinct
+    # routed set per token — the streamed engine's per-step page upload.
+    n_expert_groups: int = 1
+    topk_expert_groups: int = 0
     # rglru
     lru_width: int | None = None
     conv_width: int = 4

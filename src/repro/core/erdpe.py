@@ -17,7 +17,7 @@ import enum
 
 import jax.numpy as jnp
 
-from repro.core.tiering import FlashWeight
+from repro.core.tiering import FlashWeight, PagedWeight
 from repro.kernels import ops
 
 
@@ -51,17 +51,34 @@ def flash_matmul(
     block_k: int = 512,
     block_n: int = 512,
 ) -> jnp.ndarray:
-    """x: (..., K) activations; w: flash-tier (K, N). Returns (..., N)."""
-    if w.q.ndim != 2:
-        raise ValueError("flash_matmul expects a single (K, N) FlashWeight; "
-                         "index stacked layers before calling")
-    k, n = w.q.shape
+    """x: (..., K) activations; w: flash-tier (K, N) — a device-resident
+    FlashWeight or a pool-backed PagedWeight. Returns (..., N)."""
+    if isinstance(w, PagedWeight):
+        if w.lead:
+            raise ValueError("flash_matmul expects a single (K, N) "
+                             "PagedWeight; index stacked tables first")
+        k, n = w.kn
+    else:
+        if w.q.ndim != 2:
+            raise ValueError("flash_matmul expects a single (K, N) "
+                             "FlashWeight; index stacked layers before "
+                             "calling")
+        k, n = w.q.shape
     lead = x.shape[:-1]
     m = 1
     for d in lead:
         m *= d
     x2 = x.reshape(m, k)
-    if mode == ExecMode.PALLAS:
+    if isinstance(w, PagedWeight):
+        if mode == ExecMode.PALLAS:
+            out = ops.paged_ecdp_matmul(
+                x2, w.pool, w.q_tbl, w.p_slots, w.s_slots, tuple(w.kn),
+                ecc_enabled=ecc_enabled)
+        else:
+            out = ops.paged_ecdp_matmul_xla(
+                x2, w.pool, w.q_tbl, w.p_slots, w.s_slots, tuple(w.kn),
+                ecc_enabled=ecc_enabled)
+    elif mode == ExecMode.PALLAS:
         out = ops.ecdp_matmul(
             x2, w.q, w.parity, w.scale,
             block_k=block_k, block_n=block_n, ecc_enabled=ecc_enabled,
@@ -78,8 +95,9 @@ def maybe_flash_matmul(
     ecc_enabled: bool | None = None,
     out_dtype=jnp.bfloat16,
 ) -> jnp.ndarray:
-    """Dispatch on tier: FlashWeight -> ERDPE; plain array -> bf16 matmul."""
-    if isinstance(w, FlashWeight):
+    """Dispatch on tier: FlashWeight/PagedWeight -> ERDPE; plain array ->
+    bf16 matmul."""
+    if isinstance(w, (FlashWeight, PagedWeight)):
         if ecc_enabled is None:
             ecc_enabled = serve_ecc_mode() == "inline"
         return flash_matmul(x, w, mode=mode, ecc_enabled=ecc_enabled, out_dtype=out_dtype)

@@ -204,6 +204,23 @@ def routed_experts(idx, q_lens):
     return np.unique(idx[valid])
 
 
+def routed_experts_by_slot(idx, q_lens):
+    """Per-slot split of ``routed_experts`` — same bitmap handoff, kept
+    separated by decode slot so the expert cache's per-slot router
+    histories see each sequence's routing phase instead of the batch
+    union. Returns {slot: sorted distinct expert ids} covering only slots
+    with valid lanes this step.
+    """
+    idx = np.asarray(idx)
+    q_lens = np.asarray(q_lens)
+    out = {}
+    for s in range(idx.shape[0]):
+        n = int(q_lens[s])
+        if n > 0:
+            out[s] = np.unique(idx[s, :n])
+    return out
+
+
 def split_projection(
     x: jnp.ndarray,
     w_dram: jnp.ndarray,

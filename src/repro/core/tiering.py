@@ -66,6 +66,45 @@ class FlashWeight:
         return self.q.size + self.parity.size + self.scale.size * 4
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedWeight:
+    """A flash-tier weight consumed IN PLACE from the device page pool.
+
+    The streamed serving engine's pool-backed twin of ``FlashWeight``: no
+    dense q/parity/scale arrays — just the shared ``(n_pages, 16 KiB)``
+    int8 pool buffer plus the page tables naming which pool slots hold
+    this weight's tiles (q) and flat byte runs (parity/scale), exactly as
+    ``store/page_pool.WeightPagePool.upload`` built them. The logical
+    (K, N) shape is pytree AUX DATA — static under jit, so kernels can pad
+    and slice around the 128-multiple tile grid without retracing.
+
+    Leading dims on the tables (e.g. the MoE expert-slab row axis) play the
+    same stacking role as FlashWeight's leading dims.
+    """
+    pool: jnp.ndarray      # (n_pages, PAGE_BYTES) int8 — pool snapshot
+    q_tbl: jnp.ndarray     # (..., k_tiles, n_tiles) i32 pool page slots
+    p_slots: jnp.ndarray   # (..., n_parity_pages) i32
+    s_slots: jnp.ndarray   # (..., n_scale_pages) i32
+    kn: tuple = ()         # logical (K, N) — static
+
+    def tree_flatten(self):
+        return ((self.pool, self.q_tbl, self.p_slots, self.s_slots),
+                tuple(self.kn))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, kn=tuple(aux))
+
+    @property
+    def lead(self) -> tuple:
+        return tuple(self.q_tbl.shape[:-2])
+
+    @property
+    def shape(self) -> tuple:
+        return self.lead + tuple(self.kn)
+
+
 def is_flash_path(path: str, patterns=DEFAULT_FLASH_PATTERNS) -> bool:
     return any(re.fullmatch(p, path) for p in patterns)
 

@@ -16,9 +16,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ecc
+from repro.kernels import paged_ffn
 from repro.kernels.decode_attn import decode_attn_pallas
 from repro.kernels.ecdp import ecdp_matmul_pallas
 from repro.kernels.paged_attn import paged_attn_pallas, paged_attn_xla
+from repro.kernels.paged_ffn import paged_ecdp_matmul_xla  # noqa: F401 (public)
 
 
 def _pick_block(dim: int, target: int, mult: int) -> int:
@@ -70,6 +72,48 @@ def ecdp_matmul(
         ecc_enabled=ecc_enabled, interpret=interp,
     )
     return out * scales.astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kn", "block_m", "ecc_enabled", "interpret"))
+def paged_ecdp_matmul(
+    a: jnp.ndarray,
+    pool: jnp.ndarray,
+    q_tbl: jnp.ndarray,
+    p_slots: jnp.ndarray,
+    s_slots: jnp.ndarray,
+    kn: tuple,
+    *,
+    block_m: int = 8,
+    ecc_enabled: bool = True,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Paged ECDP matmul: (M, K) x pool-paged (K, N) int8 -> (M, N) f32.
+
+    The Pallas twin of ``paged_ecdp_matmul_xla``: q tiles are consumed
+    straight out of the device page pool through the scalar-prefetched page
+    table; the flat-run parity planes (an eighth of the bytes) are gathered
+    dense in-graph first. Activations are zero-padded to the tile grid and
+    the output sliced back — padded weight tiles are stored zeroed, so they
+    contribute exactly zero."""
+    m, k = a.shape
+    kt, nt = q_tbl.shape
+    n = kn[1]
+    kp, np_ = kt * paged_ffn.TILE, nt * paged_ffn.TILE
+    a_p = a if k == kp else jnp.pad(a, ((0, 0), (0, kp - k)))
+    if ecc_enabled:
+        parity = paged_ffn.gather_parity(pool, p_slots, k, n)
+        parity_p = jnp.zeros((kp // 8, np_), jnp.uint8
+                             ).at[:k // 8, :n].set(parity)
+    else:
+        parity_p = jnp.zeros((kp // 8, np_), jnp.uint8)
+    bm = _pick_block(m, 8, 1)
+    interp = _on_cpu() if interpret is None else interpret
+    out = paged_ffn.paged_ecdp_matmul_pallas(
+        a_p, pool, q_tbl, parity_p,
+        block_m=bm, ecc_enabled=ecc_enabled, interpret=interp,
+    )[:, :n]
+    return out * paged_ffn.gather_scale(pool, s_slots, n).astype(jnp.float32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))

@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: PAGED error-resilient INT8 matmul over the weight pool.
+
+The streamed serving engine keeps flash-tier weights in a device-resident
+page pool — ``(n_pages, 16 KiB)`` int8, one 128x128 tile per page, raw
+store bytes — and hands kernels a PAGE TABLE instead of a dense matrix
+(store/page_pool.py builds both). This kernel is the ECDP variant that
+consumes those pages IN PLACE, closing the paper's "NAND pages straight
+into compute pipelines" dataflow (§3.2): no host detiling, no per-param
+stacks, no dense device copy of the weight.
+
+Mechanics (same scalar-prefetch idiom as kernels/paged_attn.py):
+
+  * grid = (m_blocks, n_tiles, k_tiles); k innermost (accumulation).
+  * the q page table (k_tiles, n_tiles) i32 is SCALAR-PREFETCHED
+    (``pltpu.PrefetchScalarGridSpec``): the weight BlockSpec index map reads
+    ``tbl[kk, j]`` to fetch the (kk, j) logical tile of the weight from
+    whichever pool page holds it — the paging indirection costs one SMEM
+    read per grid step, not a gather.
+  * the kernel body is the ECDP discipline of kernels/ecdp.py verbatim:
+    dense raw-int8 MAC every block, inline SEC-DED detection, deferred
+    correction under ``pl.when(any dirty)``.
+  * parity planes are serialized as FLAT byte runs (an eighth of the q
+    bytes), not tiles, so they are gathered DENSE in-graph by the wrapper
+    (``gather_parity``) and block-indexed normally; q — 8/9 of the traffic
+    — never leaves its pages.
+
+Tiles are stored PADDED to 128 multiples with zeros; activations are
+zero-padded to match and the output is sliced back, so padded lanes
+contribute exactly zero (zero parity over zero bytes is also a clean
+codeword — no spurious corrections).
+
+``paged_ecdp_matmul_xla`` is the gather fallback: reconstruct the dense
+(K, N) weight from the pool with plain XLA gathers and reuse the resident
+math — bit-identical to a resident FlashWeight matmul, which is what the
+streamed-vs-resident parity gates test.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import ecc
+
+TILE = 128
+PAGE_BYTES = TILE * TILE          # one 128x128 int8 tile == one 16 KiB page
+
+
+# --- in-graph pool gathers (the XLA fallback's building blocks) --------------
+
+def gather_q(pool: jnp.ndarray, q_tbl: jnp.ndarray, k: int, n: int):
+    """Dense (K, N) int8 weight from pool pages named by ``q_tbl``.
+
+    pool (n_pages, PAGE_BYTES) int8; q_tbl (kt, nt) i32 page slots. Inverse
+    of PageStore._put_tiled: tiles back to a padded matrix, sliced to the
+    logical shape."""
+    kt, nt = q_tbl.shape
+    tiles = pool.reshape(-1, TILE, TILE)[q_tbl]          # (kt, nt, T, T)
+    full = tiles.transpose(0, 2, 1, 3).reshape(kt * TILE, nt * TILE)
+    return full[:k, :n]
+
+
+def gather_parity(pool: jnp.ndarray, p_slots: jnp.ndarray, k: int, n: int):
+    """Dense (K//8, N) uint8 parity plane from flat-run pool pages."""
+    raw = pool[p_slots].reshape(-1)                      # int8 bytes
+    nb = (k // 8) * n
+    return lax.bitcast_convert_type(raw[:nb], jnp.uint8).reshape(k // 8, n)
+
+
+def gather_scale(pool: jnp.ndarray, s_slots: jnp.ndarray, n: int):
+    """(1, N) f32 dequant scales from flat-run pool pages (byte bitcast)."""
+    raw = pool[s_slots].reshape(-1)[:4 * n]
+    return lax.bitcast_convert_type(raw.reshape(n, 4), jnp.float32).reshape(1, n)
+
+
+# --- XLA gather fallback ------------------------------------------------------
+
+def paged_ecdp_matmul_xla(
+    a: jnp.ndarray,
+    pool: jnp.ndarray,
+    q_tbl: jnp.ndarray,
+    p_slots: jnp.ndarray,
+    s_slots: jnp.ndarray,
+    kn: tuple,
+    *,
+    ecc_enabled: bool = True,
+) -> jnp.ndarray:
+    """(M, K) x paged (K, N) -> (M, N) f32: gather the dense weight from the
+    pool, then the resident ECDP math (kernels/ops.ecdp_matmul_xla) — exact
+    parity with a resident FlashWeight by construction."""
+    k, n = kn
+    wq = gather_q(pool, q_tbl, k, n)
+    scales = gather_scale(pool, s_slots, n)
+    if ecc_enabled:
+        parity = gather_parity(pool, p_slots, k, n)
+        raw = ecc.weights_to_bytes(wq)
+        corrected, _, _ = ecc.check_and_correct(raw, parity)
+        wq = ecc.bytes_to_weights(corrected)
+    out = jnp.dot(a.astype(jnp.float32), wq.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return out * scales.astype(jnp.float32)
+
+
+# --- Pallas kernel ------------------------------------------------------------
+
+def _paged_ecdp_kernel(
+    tbl_ref, a_ref, w_ref, p_ref, mask_ref, pos_ref, o_ref,
+    *, ecc_enabled: bool,
+):
+    """Grid = (m_blocks, n_tiles, k_tiles); k innermost (accumulation).
+    ``w_ref`` is one whole pool page — the (1, 128, 128) tile the scalar-
+    prefetched table mapped for this (k_tile, n_tile)."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...].astype(jnp.float32)              # (bm, TILE)
+    w_raw = w_ref[0]                                # (TILE, TILE) int8 page
+    # --- main pipeline: dense MAC on raw page bytes, never stalls ----------
+    o_ref[...] += jnp.dot(a, w_raw.astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+
+    if ecc_enabled:
+        # --- inline detector + deferred corrector (kernels/ecdp.py) -------
+        raw_bytes = ecc.weights_to_bytes(w_raw)
+        corrected, dirty, _ = ecc.check_and_correct(
+            raw_bytes, p_ref[...], mask_ref[...], pos_ref[...]
+        )
+
+        @pl.when(jnp.any(dirty))
+        def _correct():
+            delta = (
+                ecc.bytes_to_weights(corrected).astype(jnp.int32)
+                - w_raw.astype(jnp.int32)
+            ).astype(jnp.float32)
+            o_ref[...] += jnp.dot(a, delta, preferred_element_type=jnp.float32)
+
+
+def paged_ecdp_matmul_pallas(
+    a: jnp.ndarray,             # (M, Kp) — activations padded to kt*TILE
+    pool: jnp.ndarray,          # (n_pages, PAGE_BYTES) int8
+    q_tbl: jnp.ndarray,         # (kt, nt) i32 page slots — scalar-prefetched
+    parity: jnp.ndarray,        # (Kp//8, Np) uint8 — dense, zero-padded
+    *,
+    block_m: int = 8,
+    ecc_enabled: bool = True,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Raw pallas_call. Returns the PADDED (M, Np) f32 product; the caller
+    (ops.paged_ecdp_matmul) slices to the logical N and applies scales."""
+    m, kp = a.shape
+    kt, nt = q_tbl.shape
+    assert kp == kt * TILE, (a.shape, q_tbl.shape)
+    np_ = nt * TILE
+    assert parity.shape == (kp // 8, np_), parity.shape
+    assert m % block_m == 0, (m, block_m)
+    assert pool.shape[1] == PAGE_BYTES, pool.shape
+
+    kernel = functools.partial(_paged_ecdp_kernel, ecc_enabled=ecc_enabled)
+    phys_mask, data_pos = ecc.tables()
+    tiles = pool.reshape(-1, TILE, TILE)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,              # the q page table
+        grid=(m // block_m, nt, kt),
+        in_specs=[
+            pl.BlockSpec((block_m, TILE), lambda i, j, kk, tbl: (i, kk)),
+            # the paging indirection: logical tile (kk, j) -> pool page
+            pl.BlockSpec((1, TILE, TILE),
+                         lambda i, j, kk, tbl: (tbl[kk, j], 0, 0)),
+            pl.BlockSpec((TILE // 8, TILE), lambda i, j, kk, tbl: (kk, j)),
+            pl.BlockSpec((7, 8), lambda i, j, kk, tbl: (0, 0)),  # codec
+            pl.BlockSpec((64,), lambda i, j, kk, tbl: (0,)),     # tables
+        ],
+        out_specs=pl.BlockSpec((block_m, TILE), lambda i, j, kk, tbl: (i, j)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, np_), jnp.float32),
+        interpret=interpret,
+    )(q_tbl.astype(jnp.int32), a, tiles, parity,
+      jnp.asarray(phys_mask), jnp.asarray(data_pos))

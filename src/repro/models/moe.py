@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.erdpe import maybe_flash_matmul
-from repro.core.tiering import FlashWeight
+from repro.core.tiering import FlashWeight, PagedWeight
 from repro.models import common as cm
 from repro.models import dense
 
@@ -72,6 +72,25 @@ def init(cfg, key) -> dict:
 def _expert_matmul(x, w):
     """x: (G, E, C, K) @ w: (E, K, N) -> (G, E, C, N); flash-tier aware."""
     g, e, c, k = x.shape
+    if isinstance(w, PagedWeight):
+        # Pool-paged expert bank (streamed serving): per-expert XLA gather
+        # fallback — dense weight rebuilt from the shared pool snapshot,
+        # then the identical resident ECDP math, so slab-vs-resident parity
+        # is exact. (The Pallas paged kernel is exercised per-expert in
+        # tests/test_paged_ffn.py; the engine's CPU path is XLA.)
+        from repro.kernels import ops
+        xe = x.transpose(1, 0, 2, 3).reshape(e, g * c, k).astype(jnp.float32)
+        kn = tuple(w.kn)
+
+        def one(xg, tbl, ps, ss):
+            # ecc_enabled=False mirrors the FlashWeight branch below: the
+            # expert bank serves raw bytes (correction folds in at deploy)
+            return ops.paged_ecdp_matmul_xla(xg, w.pool, tbl, ps, ss, kn,
+                                             ecc_enabled=False)
+
+        out = jax.vmap(one)(xe, w.q_tbl, w.p_slots, w.s_slots)
+        n = out.shape[-1]
+        return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).astype(jnp.bfloat16)
     if isinstance(w, FlashWeight):
         # Per-expert ERDPE over the stacked bank (XLA path: correction math
         # folds into the einsum; Pallas path is exercised per-expert in tests).
@@ -180,16 +199,37 @@ def moe_apply(cfg, p, x, capacity_factor: float = 1.25):
 # That independence is what makes streamed-vs-resident greedy parity exact.
 
 
-def serve_route(router, x, top_k: int):
+def serve_route(router, x, top_k: int, n_groups: int = 1,
+                topk_groups: int = 0):
     """Top-k routing for a (S, T, D) serving chunk batch.
 
     Returns (gates (S, T, k) f32 — softmax over the selected logits, the
     same normalization as ``_dispatch_group`` — and idx (S, T, k) i32).
     The idx array is the step's EXPERT-ID BITMAP: the streamed engine ships
     it to the host (the MoE analog of Algorithm 2's plane bitmap) and only
-    those experts' pages cross to the device."""
+    those experts' pages cross to the device.
+
+    GROUP-LIMITED routing (``ArchConfig.n_expert_groups`` /
+    ``topk_expert_groups``, the DeepSeek-V2 discipline): experts are split
+    into ``n_groups`` contiguous groups; each token may only route within
+    its ``topk_groups`` best groups (scored by the group's max logit). This
+    BOUNDS the distinct-expert set a token touches to ``topk_groups *
+    (E / n_groups)`` — for the streamed engine, a smaller per-step page
+    upload and a tighter expert-slab bound. ``topk_groups`` in
+    {0, n_groups} disables the restriction."""
     logits = jnp.einsum("std,de->ste", x.astype(jnp.float32),
                         router.astype(jnp.float32))
+    if n_groups > 1 and 0 < topk_groups < n_groups:
+        e = logits.shape[-1]
+        if e % n_groups:
+            raise ValueError(f"n_experts={e} not divisible by "
+                             f"n_expert_groups={n_groups}")
+        gsz = e // n_groups
+        gl = logits.reshape(logits.shape[:-1] + (n_groups, gsz)).max(-1)
+        _, gidx = jax.lax.top_k(gl, topk_groups)          # (S, T, kg)
+        keep = jax.nn.one_hot(gidx, n_groups).sum(-2) > 0  # (S, T, G)
+        keep = jnp.repeat(keep, gsz, axis=-1)              # (S, T, E)
+        logits = jnp.where(keep, logits, -jnp.inf)
     gates, idx = jax.lax.top_k(logits, top_k)
     return jax.nn.softmax(gates, axis=-1), idx.astype(jnp.int32)
 

@@ -50,6 +50,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import itertools
 import time
 
 import jax
@@ -58,8 +59,8 @@ import numpy as np
 
 from repro.core import scheduler as sched
 from repro.core.erdpe import ExecMode, flash_matmul
-from repro.core.tiering import (ATTN_FLASH_KEYS, FlashWeight, deploy,
-                                encode_flash, program_attn_flash)
+from repro.core.tiering import (ATTN_FLASH_KEYS, FlashWeight, PagedWeight,
+                                deploy, encode_flash, program_attn_flash)
 from repro.models import common as cm
 from repro.models import dense
 from repro.models import moe as moe_mod
@@ -158,7 +159,10 @@ def _moe_attn_router_body(cfg, exec_mode, lengths, positions, block_tables,
         window=cfg.local_window, mode=exec_mode)
     x = x + _proj(attn.reshape(b, t, -1), lp["attn"]["wo"], None, None)
     h = dense._norm(cfg, x, lp, "ln2")
-    gates, idx = moe_mod.serve_route(lp["moe"]["router"], h, cfg.top_k)
+    gates, idx = moe_mod.serve_route(
+        lp["moe"]["router"], h, cfg.top_k,
+        n_groups=getattr(cfg, "n_expert_groups", 1),
+        topk_groups=getattr(cfg, "topk_expert_groups", 0))
     return x, h, gates, idx, k, v
 
 
@@ -196,6 +200,16 @@ def _moe_expert_impl(x, h, gates, idx, slab, slab_map):
     Same math as the resident bank — per-expert computation is independent
     of bank composition, so slab-vs-full-bank parity is exact."""
     return x + moe_mod.serve_expert_ffn(slab, h, gates, idx, slab_map)
+
+
+def _moe_expert_paged_impl(kn, x, h, gates, idx, slab, slab_map, pool_buf):
+    """Pool-paged expert half: the slab is only PAGE TABLES (e_slab,)-
+    stacked per param; the expert weights stay raw store pages in
+    ``pool_buf`` and the batched-expert FFN gathers them in place —
+    no per-layer slab re-stack, no host assembly. ``kn`` carries the
+    static per-param (K, N)."""
+    bank = {name: _paged(pool_buf, t, kn[name]) for name, t in slab.items()}
+    return x + moe_mod.serve_expert_ffn(bank, h, gates, idx, slab_map)
 
 
 def _embed_chunk(cfg, params, lengths, tokens, q_lens):
@@ -391,14 +405,25 @@ def _step_impl(cfg, sched_cfg, sample_cfg, kv_aware, exec_mode, unroll,
                         is_decode=is_decode)
 
 
-def _stream_group_impl(cfg, exec_mode, kv_aware, group_size, layers_dram,
-                       window, k_pool, v_pool, x, positions, ctx_lens,
-                       block_tables, bitmap, lo):
+def _paged(pool_buf, tbl, kn):
+    """Bind one page-table dict (q_tbl/p_slots/s_slots) to the pool
+    snapshot as a PagedWeight — the flash weight the ERDPE consumes IN
+    PLACE, no host slab ever assembled."""
+    return PagedWeight(pool=pool_buf, q_tbl=tbl["q_tbl"],
+                       p_slots=tbl["p_slots"], s_slots=tbl["s_slots"],
+                       kn=tuple(kn))
+
+
+def _stream_group_impl(cfg, exec_mode, kv_aware, group_size, shapes,
+                       layers_dram, window, pool_buf, k_pool, v_pool, x,
+                       positions, ctx_lens, block_tables, bitmap, lo):
     """One STREAMED layer group — the same per-layer math as the monolithic
-    step's scan, but the flash-tier params arrive through ``window`` (the
-    rotating device buffer the LayerStreamer fills from the PageStore)
-    instead of living resident. ``lo`` — the group's first layer — is a
-    traced scalar, so every group of every step replays ONE trace."""
+    step's scan, but the flash-tier params arrive as PAGE TABLES into
+    ``pool_buf`` (the device page pool the LayerStreamer fills from the
+    PageStore — raw 16 KiB store pages, consumed in place by the paged
+    ERDPE). ``shapes`` carries each param's static (K, N); ``lo`` — the
+    group's first layer — is a traced scalar, so every group of every step
+    replays ONE trace."""
     bm = bitmap if kv_aware else None
 
     def sl(a):
@@ -408,11 +433,15 @@ def _stream_group_impl(cfg, exec_mode, kv_aware, group_size, layers_dram,
     kc, vc = sl(k_pool), sl(v_pool)
 
     def body(x, layer):
-        lp_d, fl_ffn, fl_attn, kcl, vcl = layer
-        # graft the streamed flash FFN weights into the DRAM layer params:
-        # the merged dict is exactly what the resident scan sees.
+        lp_d, tf_ffn, tf_attn, kcl, vcl = layer
+        # graft the pool-paged flash FFN weights into the DRAM layer
+        # params: the merged dict is exactly what the resident scan sees.
         lp = dict(lp_d)
-        lp["ffn"] = {**lp.get("ffn", {}), **fl_ffn}
+        lp["ffn"] = {**lp.get("ffn", {}),
+                     **{k: _paged(pool_buf, t, shapes["ffn"][k])
+                        for k, t in tf_ffn.items()}}
+        fl_attn = {k: _paged(pool_buf, t, shapes["attn"][k])
+                   for k, t in tf_attn.items()}
         return _chunk_layer(cfg, exec_mode, bm, ctx_lens, positions,
                             block_tables, x, (lp, fl_attn, kcl, vcl))
 
@@ -603,6 +632,7 @@ class Engine:
         flash copies next to deploy()'s FFN/lm_head entries, split the DRAM
         remainder out of the tiered pytree, and stand up the residency
         cache + layer streamer under the device weight budget."""
+        from repro.store.page_pool import WeightPagePool
         from repro.store.pagestore import StoreRef, drop_store_refs
         from repro.store.streamer import LayerStreamer, ResidencyCache
 
@@ -656,11 +686,44 @@ class Engine:
                     f"device_budget_bytes={sc.device_budget_bytes} cannot "
                     f"hold {sc.prefetch_depth} prefetch windows "
                     f"({window_bytes}B) + pinned lm_head ({lm_bytes}B)")
-        self.cache = ResidencyCache(cache_cap)
+        # device weight page pool: windows upload as ONE staged transfer
+        # each and compute consumes the raw store pages in place. Sized in
+        # PHYSICAL pages (padded tiles inflate small params past their
+        # payload bytes): worst payload->page ratio over the streamed tier
+        # converts the cache's payload budget, plus in-flight windows and
+        # one retiring transient; capped at the whole tier. Budget
+        # ACCOUNTING stays payload-byte everywhere — this only sizes the
+        # physical backing (with _grow as the overflow valve).
+        group_names = [self._group_entries(g) for g in range(self.n_groups)]
+        group_pages = [sum(self.store.entry_pages(n) for n in names)
+                       for names in group_names]
+        tier_pages = sum(group_pages)
+        pb = self.store.page_bytes
+        worst = max(self.store.entry_pages(n) * pb
+                    / max(self.store.entry_nbytes(n), 1)
+                    for names in group_names for n in names)
+        if cache_cap is None:
+            n_pages = tier_pages
+        else:
+            n_pages = min(tier_pages,
+                          -(-int(worst * cache_cap) // pb)
+                          + (sc.prefetch_depth + 1) * max(group_pages))
+        self.wpool = WeightPagePool(self.store, n_pages, donate=True)
+        self._win_shapes = {
+            "ffn": {k: tuple(self.store.table[ref.entry(0)]["q"].shape)
+                    for k, ref in self._ffn_refs.items()},
+            "attn": {k: tuple(
+                        self.store.table[f"attn_flash/{k}@0"]["q"].shape)
+                     for k in self._ATTN_FLASH_KEYS},
+        }
+        self.cache = ResidencyCache(cache_cap, on_evict=self._evict_window)
         self.streamer = LayerStreamer(self.n_groups, self._fetch_group,
-                                      self.cache, sc.prefetch_depth)
+                                      self.cache, sc.prefetch_depth,
+                                      discard=self._discard_window)
         # hot pins: lm_head is read EVERY step (sampling); first/last layer
         # groups bound the stream's cold start and tail when they fit.
+        # lm_head stays a device FlashWeight (finish_fn reads it whole every
+        # step — residency, not rotation, so it skips the pool).
         self._lm_head = self.store.get("lm_head")
         self.cache.insert("lm_head", self._lm_head, lm_bytes, pin=True)
         if sc.pin_all:
@@ -673,6 +736,22 @@ class Engine:
         # deployment, not serving: start the NAND/page accounting clean so
         # stream_stats reports what SERVING actually read.
         self.store.reset_counters()
+        self.wpool.reset_counters()
+
+    def _evict_window(self, key, value):
+        """ResidencyCache/ExpertCache eviction hook: hand an evicted
+        window's pool pages back to the allocator (safe immediately —
+        eviction never fires on ref-held/pinned entries, and any dispatched
+        compute holds its own pool-buffer snapshot)."""
+        if isinstance(value, dict) and "slots" in value:
+            self.wpool.free(value["slots"])
+
+    def _discard_window(self, value):
+        """Streamer/prefetcher cleanup for a fetched window the cache did
+        not keep: free its transient pool pages (called after the consumer
+        retired the window)."""
+        if isinstance(value, dict) and "slots" in value:
+            self.wpool.free(value["slots"])
 
     def _group_entries(self, g: int) -> list[str]:
         """Store entry names backing layer group ``g``'s device window."""
@@ -684,27 +763,33 @@ class Engine:
         return names
 
     def _fetch_group(self, g: int):
-        """Read one layer group's pages out of the store and assemble its
-        device window: (G,)-stacked FlashWeights for the flash FFN params
-        and the Q/K/V/O flash copies. Runs on the streamer's worker thread."""
+        """Upload one layer group's pages into the device page pool — ONE
+        staged transfer for the whole window (the pool reads every entry's
+        pages into one contiguous host staging buffer, one device_put, one
+        scatter) — and assemble the window of (G,)-stacked PAGE TABLES the
+        group trace binds to the pool. No host detiling, no per-param
+        stacks, no per-param device_puts. Runs on the streamer's worker
+        thread."""
         sc = self.stream_cfg
         lis = range(g * sc.group_size, (g + 1) * sc.group_size)
+        tbls = self.wpool.upload(self._group_entries(g))
 
         def stack(names):
-            hs = [self.store.get_host(n) for n in names]
-            return FlashWeight(
-                q=np.stack([h["q"] for h in hs]),
-                parity=np.stack([h["parity"] for h in hs]),
-                scale=np.stack([h["scale"] for h in hs]))
+            ts = [tbls[n] for n in names]
+            return {k: jnp.asarray(np.stack([t[k] for t in ts]))
+                    for k in ("q_tbl", "p_slots", "s_slots")}
 
         win = {
             "ffn": {k: stack([ref.entry(li) for li in lis])
                     for k, ref in self._ffn_refs.items()},
             "attn": {k: stack([f"attn_flash/{k}@{li}" for li in lis])
                      for k in self._ATTN_FLASH_KEYS},
+            # host bookkeeping: the hand-back token for pool free on
+            # eviction/discard (stripped before the jitted group fn)
+            "slots": np.concatenate([t["slots"] for t in tbls.values()]),
         }
         nbytes = sum(self.store.entry_nbytes(n) for n in self._group_entries(g))
-        return jax.device_put(win), nbytes
+        return win, nbytes
 
     # --- streamed MoE mode (ExpertStore expert paging, DESIGN.md §9) ----------
 
@@ -718,6 +803,7 @@ class Engine:
         per-layer expert SLAB is budget-accounted like the dense prefetch
         windows."""
         from repro.store.expert_cache import ExpertCache, ExpertPrefetcher
+        from repro.store.page_pool import WeightPagePool
         from repro.store.pagestore import StoreRef, drop_store_refs
 
         cfg, sc = self.cfg, self.stream_cfg
@@ -756,6 +842,11 @@ class Engine:
              for e in range(cfg.n_experts)]
             for li in range(cfg.n_layers)]
         max_expert = max(max(r) for r in self._expert_nbytes)
+        self._max_expert_bytes = max_expert
+        # fetch generation counter + per-layer device-slab memo (see
+        # _acquire_experts): both must exist before the pin loops fetch.
+        self._fetch_gen = itertools.count(1)
+        self._slab_memo: dict = {}
         worst_routed = min(cfg.n_experts,
                            max_slots * self.admission_cfg.chunk_tokens
                            * cfg.top_k)
@@ -773,8 +864,35 @@ class Engine:
                     f"{self._e_slab}-row expert slab ({slab_bytes}B) + at "
                     f"least one cacheable expert ({max_expert}B); raise the "
                     "budget or shrink StreamConfig.expert_slab")
+        # device weight page pool, sized like the dense path: payload
+        # budget converted at the worst payload->page ratio, plus in-flight
+        # slack for the slab's misroute fetches and prefetcher traffic,
+        # capped at the whole expert tier.
+        expert_pages = [
+            [sum(self.store.entry_pages(ref.entry(li, e))
+                 for ref in self._expert_refs.values())
+             for e in range(cfg.n_experts)]
+            for li in range(cfg.n_layers)]
+        tier_pages = sum(sum(r) for r in expert_pages)
+        max_ep = max(max(r) for r in expert_pages)
+        pb = self.store.page_bytes
+        worst = max(expert_pages[li][e] * pb
+                    / max(self._expert_nbytes[li][e], 1)
+                    for li in range(cfg.n_layers)
+                    for e in range(cfg.n_experts))
+        if cache_cap is None:
+            n_pages = tier_pages
+        else:
+            n_pages = min(tier_pages,
+                          -(-int(worst * cache_cap) // pb)
+                          + 2 * self._e_slab * max_ep)
+        self.wpool = WeightPagePool(self.store, n_pages, donate=True)
+        self._expert_kn = {
+            name: tuple(self.store.table[ref.entry(0, 0)]["q"].shape)
+            for name, ref in self._expert_refs.items()}
         self.expert_cache = ExpertCache(cache_cap, cfg.n_layers,
-                                        cfg.n_experts)
+                                        cfg.n_experts, n_slots=max_slots,
+                                        on_evict=self._evict_window)
         self.cache = self.expert_cache
         self.streamer = None             # dense group streamer unused here
         self._lm_head = self.store.get("lm_head")
@@ -782,81 +900,161 @@ class Engine:
             for li in range(cfg.n_layers):
                 for e in range(cfg.n_experts):
                     val, nb = self._fetch_expert(li, e)
-                    self.expert_cache.insert((li, e), val, nb, pin=True)
+                    if not self.expert_cache.insert((li, e), val, nb,
+                                                    pin=True):
+                        self._discard_window(val)
+        elif sc.pin_shared_experts > 0:
+            # shared experts (satellite of grouped routing): the first
+            # pin_shared_experts experts of every layer are always-routed
+            # DeepSeek-style shared experts — pin them so they never pay a
+            # page upload or a misroute stall.
+            for li in range(cfg.n_layers):
+                for e in range(min(sc.pin_shared_experts, cfg.n_experts)):
+                    val, nb = self._fetch_expert(li, e)
+                    if not self.expert_cache.insert((li, e), val, nb,
+                                                    pin=True):
+                        self._discard_window(val)
         self.prefetcher = ExpertPrefetcher(self.expert_cache,
-                                           self._fetch_expert)
-        # init-time reads (lm_head, pin_all) are deployment, not serving
+                                           self._fetch_expert,
+                                           discard=self._discard_window,
+                                           batch_fetch=self._fetch_expert_batch)
+        # misroute-stall-aware budget retune (auto_expert_budget) state
+        self._auto_expert_done = False
+        self._max_routed_seen = 0
+        # init-time reads (lm_head, pins) are deployment, not serving
         self.store.reset_counters()
         self.expert_cache.reset_counters()
+        self.wpool.reset_counters()
 
     def _fetch_expert(self, li: int, e: int):
-        """Read ONE (layer, expert) weight set (w_gate/w_up/w_down pages)
-        out of the store and place it on device. Runs on the compute path
-        (misroute stall) or on the prefetch worker thread."""
-        ws = {}
-        for name, ref in self._expert_refs.items():
-            h = self.store.get_host(ref.entry(li, e))
-            ws[name] = FlashWeight(q=h["q"], parity=h["parity"],
-                                   scale=h["scale"])
-        return jax.device_put(ws), self._expert_nbytes[li][e]
+        """Upload ONE (layer, expert) weight set's pages (w_gate/w_up/
+        w_down) into the device page pool — one staged transfer — and
+        return its page tables. Runs on the compute path (misroute stall)
+        or on the prefetch worker thread; batched misroutes go through
+        ``_fetch_experts`` instead (one transfer for the whole missing
+        set)."""
+        return (self._fetch_experts(li, [e])[e],
+                self._expert_nbytes[li][e])
+
+    def _fetch_experts(self, li: int, es):
+        """Upload SEVERAL of one layer's experts in ONE staged transfer;
+        returns {expert: table-dict} with per-expert ``slots``."""
+        sets = self._fetch_expert_sets([(li, e) for e in es])
+        return {e: v for (_, e), v in sets.items()}
+
+    def _fetch_expert_sets(self, keys):
+        """Upload SEVERAL (layer, expert) weight sets — any mix of layers
+        — in ONE staged transfer; returns {(layer, expert): table-dict}."""
+        tbls = self.wpool.upload(
+            [ref.entry(li, e) for li, e in keys
+             for ref in self._expert_refs.values()])
+        out = {}
+        for li, e in keys:
+            val = {name: tbls[ref.entry(li, e)]
+                   for name, ref in self._expert_refs.items()}
+            val["slots"] = np.concatenate(
+                [val[name]["slots"] for name in self._expert_refs])
+            # generation stamp: the slab memo keys on it, so a re-fetch
+            # (new pool slots) can never alias a stale memoized slab.
+            # next() on itertools.count is atomic — this runs on both the
+            # compute path and the prefetch worker.
+            val["gen"] = next(self._fetch_gen)
+            out[(li, e)] = val
+        return out
+
+    def _fetch_expert_batch(self, keys):
+        """Prefetch-worker batch hook: the whole drained queue in one
+        staged transfer. Returns {key: (value, nbytes)}."""
+        sets = self._fetch_expert_sets(keys)
+        return {k: (v, self._expert_nbytes[k[0]][k[1]])
+                for k, v in sets.items()}
 
     def _acquire_experts(self, li: int, routed):
-        """Gather one layer's ROUTED experts into the device slab.
+        """Gather one layer's ROUTED experts into the slab's page tables.
 
-        Cache hits are acquired ref-held (never evicted mid-use); misses
-        are MISROUTE STALLS — fetched synchronously on the compute path,
-        then offered to the cache (best effort: if the budget is full of
-        pinned/held entries the slab keeps the only reference and the
-        weights are dropped after the layer). Returns (slab bank
-        (e_slab,)-stacked FlashWeights, slab_map (n_experts,) i32 with
-        -1 = not resident)."""
+        Cache hits are acquired ref-held; misses are MISROUTE STALLS —
+        the whole missing set is uploaded in ONE staged transfer, then
+        hold-inserted (an insert the budget rejects leaves a TRANSIENT
+        whose pages are freed after dispatch). Returns (slab page-table
+        bank with (e_slab,)-leading tables, slab_map (n_experts,) i32 with
+        -1 = not resident, held keys to release after dispatch, transient
+        slot arrays to free after dispatch, missing expert-id set)."""
         routed = [int(e) for e in routed] or [0]
         if len(routed) > self._e_slab:
             raise ValueError(
                 f"layer {li} routed {len(routed)} distinct experts > "
                 f"expert_slab={self._e_slab}; raise StreamConfig.expert_slab")
-        held, vals = [], []
+        cache = self.expert_cache
+        held, transients, vals = [], [], {}
+        missing = []
         for e in routed:
             key = (li, e)
-            val = self.expert_cache.acquire(key)
-            if val is None:
+            val = cache.acquire(key)
+            if val is None and self.prefetcher.in_flight(key):
+                # the worker is already reading this expert's pages: wait
+                # for it (bounded) instead of double-reading — double
+                # fetches would also double-count the headline telemetry.
                 t0 = time.perf_counter()
-                if self.prefetcher.in_flight(key):
-                    # the worker is already reading this expert's pages:
-                    # wait for it (bounded) instead of double-reading —
-                    # double fetches would also double-count the headline
-                    # bytes/pages telemetry.
-                    deadline = t0 + 1.0
-                    while (self.prefetcher.in_flight(key)
-                           and time.perf_counter() < deadline):
-                        time.sleep(0.0005)
-                    val = self.expert_cache.acquire(key)
-                if val is None:
-                    val, nb = self._fetch_expert(li, e)
-                    self.expert_cache.note_fetch(nb)
-                    self.expert_cache.insert(key, val, nb)
-                else:
-                    held.append(key)
-                self.expert_cache.note_stall(time.perf_counter() - t0)
+                deadline = t0 + 1.0
+                while (self.prefetcher.in_flight(key)
+                       and time.perf_counter() < deadline):
+                    time.sleep(0.0005)
+                val = cache.acquire(key)
+                cache.note_stall(time.perf_counter() - t0)
+            if val is None:
+                missing.append(e)
             else:
                 held.append(key)
-            vals.append(val)
-        slab_map = np.full((self.cfg.n_experts,), -1, np.int32)
-        for r, e in enumerate(routed):
-            slab_map[e] = r
-        vals = vals + [vals[0]] * (self._e_slab - len(vals))  # static rows
-        # the slab is re-stacked every layer deliberately: memoizing
-        # per-layer slabs across steps would keep up to n_layers slabs
-        # device-resident — weight memory the device budget never
-        # accounted for (only ONE slab window is reserved).
-        slab = {name: FlashWeight(
-                    q=jnp.stack([v[name].q for v in vals]),
-                    parity=jnp.stack([v[name].parity for v in vals]),
-                    scale=jnp.stack([v[name].scale for v in vals]))
-                for name in self._expert_refs}
-        for key in held:                 # the stack copied them out
-            self.expert_cache.release(key)
-        return slab, jnp.asarray(slab_map)
+                vals[e] = val
+        if missing:
+            t0 = time.perf_counter()
+            fetched = self._fetch_experts(li, missing)
+            dt = time.perf_counter() - t0
+            for e in missing:
+                val, nb = fetched[e], self._expert_nbytes[li][e]
+                cache.note_fetch(nb)
+                cache.note_stall(dt / len(missing))
+                prior = (cache.acquire((li, e))
+                         if (li, e) in cache else None)
+                if prior is not None:
+                    # the prefetch worker landed this expert between our
+                    # miss and the batched fetch: use its copy, ours is a
+                    # transient (freed after dispatch).
+                    held.append((li, e))
+                    transients.append(val["slots"])
+                    vals[e] = prior
+                elif cache.insert((li, e), val, nb, hold=True):
+                    held.append((li, e))
+                    vals[e] = val
+                else:
+                    transients.append(val["slots"])
+                    vals[e] = val
+        rows = [vals[e] for e in routed]
+        # slab memo: in steady decode a layer routes the SAME expert set
+        # step after step, and the page tables only move when an expert is
+        # re-fetched into new pool slots (a new generation stamp). Keying
+        # on (routed order, generations) lets those steps reuse the
+        # device-resident slab outright — no re-stack, no device_put.
+        memo_key = (tuple(routed), tuple(r["gen"] for r in rows))
+        memo = self._slab_memo.get(li)
+        if memo is not None and memo[0] == memo_key:
+            slab, dev_map = memo[1], memo[2]
+        else:
+            slab_map = np.full((self.cfg.n_experts,), -1, np.int32)
+            for r, e in enumerate(routed):
+                slab_map[e] = r
+            rows += [rows[0]] * (self._e_slab - len(rows))    # static rows
+            # the slab is only PAGE TABLES (a few KB of i32): the weights
+            # themselves stay in the pool and the expert trace gathers
+            # them in place — the per-layer jnp.stack slab re-assembly is
+            # gone.
+            slab = {name: {k: jnp.asarray(np.stack(
+                        [r[name][k] for r in rows]))
+                           for k in ("q_tbl", "p_slots", "s_slots")}
+                    for name in self._expert_refs}
+            dev_map = jnp.asarray(slab_map)
+            self._slab_memo[li] = (memo_key, slab, dev_map)
+        return slab, dev_map, held, transients, set(missing)
 
     def _build_stream_fns(self, exec_mode):
         """The streamed data plane: three jitted pieces (embed -> layer
@@ -869,7 +1067,8 @@ class Engine:
         spec_k = self.spec_cfg.k if self.spec_cfg else None
         proposer = self.proposer
         group = functools.partial(_stream_group_impl, cfg, exec_mode,
-                                  self.kv_aware, self.stream_cfg.group_size)
+                                  self.kv_aware, self.stream_cfg.group_size,
+                                  self._win_shapes)
         finish = functools.partial(_finish_step, cfg, self.sched_cfg,
                                    self.sample_cfg, self.kv_aware, spec_k)
 
@@ -919,9 +1118,15 @@ class Engine:
         ks, vs = [], []
         for g, window in self.streamer.stream():
             lo = jnp.int32(g * self.stream_cfg.group_size)
-            x, k_g, v_g = self._group_fn(
-                self._layers_dram, window, state["k"], state["v"], x,
-                positions, ctx_lens, block_tables, state["bitmap"], lo)
+            # dispatch under the pool lock: the window's liveness ref
+            # guarantees its slots are mapped, and the lock keeps the
+            # worker's donating (in-place) uploads from deleting the
+            # buffer handle mid-dispatch.
+            win = {"ffn": window["ffn"], "attn": window["attn"]}
+            x, k_g, v_g = self.wpool.dispatch(lambda buf: self._group_fn(
+                self._layers_dram, win, buf, state["k"],
+                state["v"], x, positions, ctx_lens, block_tables,
+                state["bitmap"], lo))
             ks.append(k_g)
             vs.append(v_g)
         k_new = jnp.concatenate(ks, axis=0)          # (L, slots, T, KV, Dh)
@@ -964,9 +1169,11 @@ class Engine:
             self._trace_count += 1
             return attn_router(*args)
 
+        expert = functools.partial(_moe_expert_paged_impl, self._expert_kn)
+
         def expert_fn(*args):
             self._trace_count += 1
-            return _moe_expert_impl(*args)
+            return expert(*args)
 
         def finish_fn(*args):
             self._trace_count += 1
@@ -1006,17 +1213,49 @@ class Engine:
             # the host-side routed-expert filter uses the superset bound so
             # a draft lane's routing is never dropped from the slab.
             lane_bound = self._host_q_lens + self._host_draft_cap
+        # whole-step prefetch lead: the per-layer request below gives the
+        # worker only one layer's compute (~ms) to land its fetches — on
+        # fast layers the compute path wins the race and every miss is a
+        # synchronous stall. The per-slot router histories already know
+        # each layer's likely experts, so queue EVERY layer's predictions
+        # up front (one batched transfer in the worker) and let the layer
+        # loop's requests merely top up with the freshest signal.
+        active = [s for s in range(len(lane_bound)) if lane_bound[s] > 0]
+        if self._steps_done > 0:
+            for li in range(cfg.n_layers):
+                self._request_prefetch(li, self._e_slab, slots=active)
         ks, vs = [], []
         for li in range(cfg.n_layers):
             lo = jnp.int32(li)
             x, h, gates, idx, k_l, v_l = self._attn_router_fn(
                 self._layers_dram, state["k"], state["v"], x, positions,
                 ctx_lens, block_tables, lo)
-            routed = sched.routed_experts(np.asarray(idx), lane_bound)
+            idx_host = np.asarray(idx)
+            by_slot = sched.routed_experts_by_slot(idx_host, lane_bound)
+            routed = sched.routed_experts(idx_host, lane_bound)
             cache.observe(li, routed)
-            self._request_prefetch((li + 1) % cfg.n_layers, len(routed))
-            slab, slab_map = self._acquire_experts(li, routed)
-            x = self._expert_fn(x, h, gates, idx, slab, slab_map)
+            for s, ids in by_slot.items():
+                cache.observe_slot(s, li, ids)
+            self._max_routed_seen = max(self._max_routed_seen, len(routed))
+            self._request_prefetch((li + 1) % cfg.n_layers, len(routed),
+                                   slots=by_slot.keys())
+            slab, slab_map, held, transients, missing = \
+                self._acquire_experts(li, routed)
+            for s, ids in by_slot.items():
+                cache.note_slot_route(s, len(ids),
+                                      sum(1 for e in ids
+                                          if int(e) in missing))
+            # dispatch under the pool lock: the prefetch worker's donating
+            # (in-place) uploads delete the buffer handle they consume, so
+            # snapshot-and-dispatch must be atomic against them.
+            x = self.wpool.dispatch(lambda buf: self._expert_fn(
+                x, h, gates, idx, slab, slab_map, buf))
+            # dispatch has captured the pool buffer: NOW the held
+            # entries can release and the rejected transients can free.
+            for hk in held:
+                cache.release(hk)
+            for slots in transients:
+                self.wpool.free(slots)
             ks.append(k_l)
             vs.append(v_l)
         k_new = jnp.stack(ks, axis=0)                # (L, slots, T, KV, Dh)
@@ -1028,15 +1267,18 @@ class Engine:
             args += (drafts, n_draft, is_decode)
         return self._finish_fn(*args)
 
-    def _request_prefetch(self, layer: int, breadth: int):
+    def _request_prefetch(self, layer: int, breadth: int, slots=None):
         """Enqueue predicted experts for ``layer`` — gated by the cache's
         score-aware admission (``would_admit``), so speculative fetches
         never read pages the cache would immediately reject: a prediction
         lands in free space or by displacing strictly COLDER experts,
-        never by thrashing the resident hot set."""
+        never by thrashing the resident hot set. ``slots`` — the decode
+        slots active this step — switches the predictor to the per-slot
+        histories (max-combined), so a slot whose routing phase diverges
+        from the batch mean still gets its experts prefetched."""
         cache = self.expert_cache
         want = breadth + self.stream_cfg.prefetch_experts_margin
-        picks = [(layer, e) for e in cache.predict(layer, want)
+        picks = [(layer, e) for e in cache.predict(layer, want, slots=slots)
                  if cache.would_admit((layer, e),
                                       self._expert_nbytes[layer][e])]
         if picks:
@@ -1072,7 +1314,33 @@ class Engine:
             "expert_bytes_per_token": c["bytes_fetched"] / max(toks, 1),
             "all_experts_bytes_per_token":
                 self._steps_done * bank_total / max(toks, 1),
+            "slot_hit_rates": c.get("slot_hit_rates", []),
+            "max_routed_seen": self._max_routed_seen,
+            "expert_budget_retuned": self._auto_expert_done,
+            **self.wpool.stats(),
         }
+
+    def _maybe_retune_expert_budget(self):
+        """Misroute-stall-aware expert budget re-split (``StreamConfig.
+        auto_expert_budget``) — the expert-paged analog of ``auto_depth``:
+        once, after the first measured steps, if routed experts actually
+        stalled, return the slab reservation's UNUSED rows (worst-case
+        e_slab sizing vs the observed max routed set) to the expert
+        cache's capacity. The device budget invariant is preserved — the
+        slab's trace shape is fixed at init, so the dead reservation is
+        pure headroom the cache can spend on residency."""
+        sc = self.stream_cfg
+        if (not self.streamed_moe or not sc.auto_expert_budget
+                or self._auto_expert_done
+                or self._steps_done < sc.auto_depth_after):
+            return
+        self._auto_expert_done = True
+        cache = self.expert_cache
+        if (cache.misroute_stalls == 0 or cache.capacity is None
+                or self._max_routed_seen >= self._e_slab):
+            return
+        unused = self._e_slab - max(self._max_routed_seen, 1)
+        cache.resize(cache.capacity + unused * self._max_expert_bytes)
 
     def _stream_stall_s(self) -> float:
         """Seconds the compute path has spent blocked on the weight stream:
@@ -1138,6 +1406,7 @@ class Engine:
             out = {**self.expert_stats(), **self.store.stats()}
         else:
             out = {**self.streamer.stats(), **self.store.stats(),
+                   **self.wpool.stats(),
                    "prefetch_depth": self.streamer.prefetch_depth}
         if self.spec_cfg is not None:
             out.update(self.spec_stats())
@@ -1390,6 +1659,7 @@ class Engine:
         self._steps_done += 1
         if self.streamed:
             self._maybe_autotune_depth()
+            self._maybe_retune_expert_budget()
         self._admit()                    # freed slots host waiting requests
         return n_processed
 

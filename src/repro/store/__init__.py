@@ -10,10 +10,11 @@ router-history EMA predictor — so models whose flash tier exceeds device
 memory still serve.
 """
 from repro.store.expert_cache import ExpertCache, ExpertPrefetcher
+from repro.store.page_pool import WeightPagePool
 from repro.store.pagestore import (PageStore, StoreRef, drop_store_refs,
                                    graft_store_refs)
 from repro.store.streamer import LayerStreamer, ResidencyCache, StreamConfig
 
 __all__ = ["PageStore", "StoreRef", "LayerStreamer", "ResidencyCache",
            "StreamConfig", "ExpertCache", "ExpertPrefetcher",
-           "drop_store_refs", "graft_store_refs"]
+           "WeightPagePool", "drop_store_refs", "graft_store_refs"]

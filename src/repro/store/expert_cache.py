@@ -44,13 +44,24 @@ class ExpertCache(ResidencyCache):
     """
 
     def __init__(self, capacity_bytes: int | None, n_layers: int,
-                 n_experts: int, ema_alpha: float = 0.3):
-        super().__init__(capacity_bytes)
+                 n_experts: int, ema_alpha: float = 0.3,
+                 n_slots: int = 0, on_evict=None):
+        super().__init__(capacity_bytes, on_evict=on_evict)
         self.n_layers = int(n_layers)
         self.n_experts = int(n_experts)
         self.ema_alpha = float(ema_alpha)
         # per-(layer, expert) EMA of router hits — the prefetch signal
         self.scores = np.zeros((self.n_layers, self.n_experts), np.float64)
+        # per-SLOT histories (n_slots > 0): one EMA plane per decode slot.
+        # A batch mixes sequences in different routing phases; the global
+        # EMA blurs them into a mean that mispredicts every slot (observed:
+        # hundreds of misroute stalls/run at phase boundaries). Slot planes
+        # keep each sequence's phase sharp; ``predict`` max-combines the
+        # ACTIVE slots' planes so any slot's hot expert makes the cut.
+        self.n_slots = int(n_slots)
+        self.slot_scores = np.zeros(
+            (max(self.n_slots, 0), self.n_layers, self.n_experts),
+            np.float64)
         self.reset_counters()
 
     def reset_counters(self):
@@ -63,6 +74,10 @@ class ExpertCache(ResidencyCache):
             self.prefetched_bytes = 0
             self.misroute_stalls = 0
             self.misroute_stall_s = 0.0
+            # per-slot routed-expert residency: requested / already-resident
+            # counts per decode slot (expert_stats() reports the hit rate)
+            self.slot_requests = np.zeros((max(self.n_slots, 0),), np.int64)
+            self.slot_hits = np.zeros((max(self.n_slots, 0),), np.int64)
 
     # --- router-history predictor -------------------------------------------
 
@@ -75,10 +90,45 @@ class ExpertCache(ResidencyCache):
         a = self.ema_alpha
         self.scores[layer] = (1.0 - a) * self.scores[layer] + a * hit
 
-    def predict(self, layer: int, m: int) -> list[int]:
+    def observe_slot(self, slot: int, layer: int, experts: Iterable[int]):
+        """Fold one slot's routed set into that slot's EMA plane (and keep
+        the global plane updated through ``observe`` separately)."""
+        if not (0 <= slot < self.n_slots):
+            return
+        hit = np.zeros((self.n_experts,), np.float64)
+        ids = np.asarray(list(experts), np.int64)
+        if ids.size:
+            hit[ids] = 1.0
+        a = self.ema_alpha
+        self.slot_scores[slot, layer] = \
+            (1.0 - a) * self.slot_scores[slot, layer] + a * hit
+
+    def note_slot_route(self, slot: int, requested: int, missing: int):
+        """Account one (slot, layer) routing event: ``requested`` experts
+        asked for, ``missing`` of them not yet device-resident."""
+        if not (0 <= slot < self.n_slots):
+            return
+        with self._lock:
+            self.slot_requests[slot] += int(requested)
+            self.slot_hits[slot] += int(requested) - int(missing)
+
+    def slot_hit_rates(self) -> list[float]:
+        with self._lock:
+            return [float(h) / r if r else 0.0
+                    for h, r in zip(self.slot_hits, self.slot_requests)]
+
+    def predict(self, layer: int, m: int,
+                slots: Iterable[int] | None = None) -> list[int]:
         """The up-to-``m`` most-likely experts for ``layer`` (EMA top-m,
-        zero-score experts never predicted — no history, no prefetch)."""
+        zero-score experts never predicted — no history, no prefetch).
+        With ``slots`` (the ACTIVE decode slots) and per-slot tracking on,
+        the signal is max(global, per-slot maxima): a slot whose phase
+        diverges from the batch mean still gets its hot experts ranked."""
         s = self.scores[layer]
+        if slots is not None and self.n_slots > 0:
+            ids = [int(i) for i in slots if 0 <= int(i) < self.n_slots]
+            if ids:
+                s = np.maximum(s, self.slot_scores[ids, layer].max(axis=0))
         order = np.argsort(-s, kind="stable")[:max(int(m), 0)]
         return [int(e) for e in order if s[e] > 0.0]
 
@@ -155,6 +205,10 @@ class ExpertCache(ResidencyCache):
                 "misroute_stalls": self.misroute_stalls,
                 "misroute_stall_s": self.misroute_stall_s,
             })
+            if self.n_slots > 0:
+                base["slot_hit_rates"] = [
+                    float(h) / r if r else 0.0
+                    for h, r in zip(self.slot_hits, self.slot_requests)]
         return base
 
 
@@ -171,9 +225,19 @@ class ExpertPrefetcher:
     """
 
     def __init__(self, cache: ExpertCache,
-                 fetch: Callable[[int, int], tuple[object, int]]):
+                 fetch: Callable[[int, int], tuple[object, int]],
+                 discard: Callable[[object], None] | None = None,
+                 batch_fetch=None):
         self.cache = cache
         self._fetch = fetch
+        # cleanup for a fetched value the cache rejected (page-pool engines
+        # free the orphaned slots; nothing references them afterwards)
+        self._discard = discard
+        # optional ``batch_fetch(keys) -> {key: (value, nbytes)}``: the
+        # worker drains its whole queue into ONE call, so a burst of
+        # predictions (the engine requests a full step of layers at once)
+        # costs one staged pool transfer instead of one per expert.
+        self._batch_fetch = batch_fetch
         self._q: "queue.Queue" = queue.Queue()
         self._inflight: set = set()
         self._lock = threading.Lock()
@@ -198,16 +262,29 @@ class ExpertPrefetcher:
     def _worker(self):
         while not self._stop.is_set():
             try:
-                key = self._q.get(timeout=0.05)
+                keys = [self._q.get(timeout=0.05)]
             except queue.Empty:
                 continue
+            # drain the backlog: one burst of predictions, one fetch round
+            # (with batch_fetch, one staged pool transfer)
+            while True:
+                try:
+                    keys.append(self._q.get_nowait())
+                except queue.Empty:
+                    break
             try:
-                if key is None:
+                if any(k is None for k in keys):
                     return
-                if key not in self.cache:
-                    value, nbytes = self._fetch(*key)
+                todo = [k for k in keys if k not in self.cache]
+                if todo and self._batch_fetch is not None:
+                    fetched = self._batch_fetch(todo)
+                else:
+                    fetched = {k: self._fetch(*k) for k in todo}
+                for key, (value, nbytes) in fetched.items():
                     self.cache.note_fetch(nbytes, prefetch=True)
-                    self.cache.insert(key, value, nbytes)
+                    if (not self.cache.insert(key, value, nbytes)
+                            and self._discard is not None):
+                        self._discard(value)
             except Exception:
                 # a failed prefetch is only a lost optimization — the
                 # compute path re-fetches synchronously and surfaces the
@@ -215,7 +292,8 @@ class ExpertPrefetcher:
                 pass
             finally:
                 with self._lock:
-                    self._inflight.discard(key)
+                    for key in keys:
+                        self._inflight.discard(key)
 
     def drain(self, timeout: float = 5.0):
         """Block until the queue is empty and nothing is in flight

@@ -51,6 +51,18 @@ class StreamConfig:
     # experts the predictor prefetches for layer l+1 beyond the breadth of
     # the set the router just asked for (headroom for routing churn)
     prefetch_experts_margin: int = 1
+    # shared-expert pinning: the first ``pin_shared_experts`` experts of
+    # every MoE layer are pinned device-resident at init (DeepSeek-style
+    # always-routed shared experts never pay a page upload). They count
+    # against the expert cache budget like any pinned entry.
+    pin_shared_experts: int = 0
+    # misroute-stall-aware expert budget retuning (the expert-side analog
+    # of auto_depth): after auto_depth_after measured steps, if misroute
+    # stalls dominate, grow the expert cache toward the observed worst-case
+    # routed set, funded by shrinking the dense-side slack the init split
+    # left over. Re-splits CACHE capacity only — the slab (trace shape) is
+    # fixed at init.
+    auto_expert_budget: bool = False
 
 
 @dataclasses.dataclass
@@ -71,8 +83,13 @@ class ResidencyCache:
       * hits + misses == number of acquire() calls.
     """
 
-    def __init__(self, capacity_bytes: int | None = None):
+    def __init__(self, capacity_bytes: int | None = None,
+                 on_evict: Callable[[Any, Any], None] | None = None):
         self.capacity = capacity_bytes
+        # eviction hook (key, value) — the page-pool engines free an evicted
+        # window's pool slots here. Runs under the cache lock; the hook may
+        # take the pool lock (lock order is ALWAYS cache -> pool).
+        self._on_evict = on_evict
         self._entries: "collections.OrderedDict[Any, _Entry]" = \
             collections.OrderedDict()
         self._lock = threading.Lock()
@@ -114,6 +131,8 @@ class ResidencyCache:
                 used -= e.nbytes
                 del self._entries[k]
                 self.evictions += 1
+                if self._on_evict is not None:
+                    self._on_evict(k, e.value)
 
     def __contains__(self, key) -> bool:
         with self._lock:
@@ -146,14 +165,23 @@ class ResidencyCache:
         return [k for k, e in self._entries.items()
                 if not e.pinned and e.refs == 0]
 
-    def insert(self, key, value, nbytes: int, pin: bool = False) -> bool:
+    def insert(self, key, value, nbytes: int, pin: bool = False,
+               hold: bool = False) -> bool:
         """Admit an entry, evicting ``_eviction_candidates`` (in order) to
         make room. Returns False (entry stays non-resident) if it cannot
-        fit."""
+        fit — the caller then owns ``value`` and must discard it itself
+        (pool-backed windows: free the slots once compute has retired).
+
+        ``hold=True`` admits the entry with refs=1 pre-acquired — the
+        fetching thread hands a liveness ref to the consumer so the entry
+        cannot be evicted (slots freed) before the consumer's dispatch has
+        snapshotted the pool buffer. Pair with ``release``."""
         with self._lock:
             if key in self._entries:
                 e = self._entries[key]
                 e.pinned = e.pinned or pin
+                if hold:
+                    e.refs += 1
                 self._entries.move_to_end(key)
                 return True
             used = sum(e.nbytes for e in self._entries.values())
@@ -165,13 +193,16 @@ class ResidencyCache:
                     for k in self._eviction_candidates(key, pin):
                         if used + nbytes <= self.capacity:
                             break
-                        used -= self._entries[k].nbytes
-                        del self._entries[k]
+                        ev = self._entries.pop(k)
+                        used -= ev.nbytes
                         self.evictions += 1
+                        if self._on_evict is not None:
+                            self._on_evict(k, ev.value)
                 if used + nbytes > self.capacity:
                     self.rejects += 1
                     return False
-            self._entries[key] = _Entry(value, int(nbytes), pinned=pin)
+            self._entries[key] = _Entry(value, int(nbytes), pinned=pin,
+                                        refs=1 if hold else 0)
             return True
 
     def stats(self) -> dict:
@@ -195,10 +226,16 @@ class LayerStreamer:
     def __init__(self, n_groups: int,
                  fetch: Callable[[int], tuple[Any, int]],
                  cache: ResidencyCache,
-                 prefetch_depth: int = 2):
+                 prefetch_depth: int = 2,
+                 discard: Callable[[Any], None] | None = None):
         self.n_groups = int(n_groups)
         self._fetch = fetch
         self.cache = cache
+        # cleanup for a fetched window the cache did NOT keep (opportunistic
+        # insert rejected): called AFTER the consumer retires the window, so
+        # pool-backed engines free the transient slots only once compute has
+        # snapshotted the pool buffer.
+        self._discard = discard
         self.prefetch_depth = max(1, int(prefetch_depth))
         self.stall_s = 0.0            # consumer blocked on the window queue
         self.stream_s = 0.0           # worker reading pages + device_put
@@ -208,12 +245,20 @@ class LayerStreamer:
     def pin(self, g: int) -> bool:
         """Force-fetch a group's window and pin it device-resident."""
         window, nbytes = self._fetch(g)
-        return self.cache.insert(g, window, nbytes, pin=True)
+        ok = self.cache.insert(g, window, nbytes, pin=True)
+        if not ok and self._discard is not None:
+            self._discard(window)
+        return ok
 
     def _window(self, g: int):
+        """Return (window, was_hit, cache_kept). A ref is held in BOTH live
+        cases — acquire on a hit, hold-insert on a kept miss — so the entry
+        (and its pool slots) stays pinned-in-place until the consumer
+        retires it. kept=False means the cache rejected the window: it is a
+        transient the consumer must ``_discard`` after retiring."""
         win = self.cache.acquire(g)
         if win is not None:
-            return win, True
+            return win, True, True
         t0 = time.perf_counter()
         win, nbytes = self._fetch(g)
         self.stream_s += time.perf_counter() - t0
@@ -222,8 +267,8 @@ class LayerStreamer:
         # opportunistic residency: a rotating scan thrashes plain LRU, so a
         # miss only becomes resident if it fits WITHOUT evicting (pinned
         # entries own the budget; the window stays a transient rotation).
-        self.cache.insert(g, win, nbytes)
-        return win, False
+        kept = self.cache.insert(g, win, nbytes, hold=True)
+        return win, False, kept
 
     def stream(self) -> Iterator[tuple[int, Any]]:
         """Yield (group, device_window) for groups 0..n-1 in order, with a
@@ -253,7 +298,17 @@ class LayerStreamer:
 
         t = threading.Thread(target=worker, daemon=True)
         t.start()
-        held_hit: int | None = None           # hit yielded but not released
+        held: tuple | None = None             # yielded but not yet retired
+
+        def _retire(g, win, kept):
+            # a kept window (hit OR hold-insert) carries one liveness ref;
+            # a rejected transient is ours to discard — in both cases only
+            # NOW, after the consumer dispatched against it.
+            if kept:
+                self.cache.release(g)
+            elif self._discard is not None:
+                self._discard(win)
+
         try:
             for _ in range(self.n_groups):
                 t0 = time.perf_counter()
@@ -261,27 +316,26 @@ class LayerStreamer:
                 self.stall_s += time.perf_counter() - t0
                 if isinstance(item, BaseException):
                     raise item                # worker-side fetch failure
-                win, hit = item
-                held_hit = g if hit else None
+                win, hit, kept = item
+                held = (g, win, kept)
                 yield g, win
-                if hit:
-                    self.cache.release(g)
-                held_hit = None
+                _retire(g, win, kept)
+                held = None
                 slots.release()
         finally:
             stop.set()
             # an abandoned iteration must not leak cache refs (a ref-held
-            # entry is never evictable): release the yielded-but-unretired
-            # hit and any hits still sitting in the queue.
-            if held_hit is not None:
-                self.cache.release(held_hit)
+            # entry is never evictable) or transient pool slots: retire the
+            # yielded-but-unretired window and everything still queued.
+            if held is not None:
+                _retire(*held)
             while True:
                 try:
                     g, item = q.get_nowait()
                 except queue.Empty:
                     break
-                if isinstance(item, tuple) and item[1]:
-                    self.cache.release(g)
+                if isinstance(item, tuple):
+                    _retire(g, item[0], item[2])
             t.join()
 
     def stats(self) -> dict:

@@ -215,6 +215,108 @@ def test_close_stops_prefetch_worker(params):
     Engine(CFG, params, max_slots=2, max_seq=MAX_SEQ).close()  # no-op
 
 
+def test_serve_route_grouped_bounds_expert_set():
+    """Group-limited routing (DeepSeek-V2 discipline): every token's top-k
+    lands inside its topk_groups best groups, bounding the distinct-expert
+    set the streamed engine must page per token."""
+    e, n_groups, topk_groups = 8, 4, 2
+    gsz = e // n_groups
+    router = jax.random.normal(jax.random.PRNGKey(0), (16, e), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 16), jnp.bfloat16)
+    gates, idx = moe.serve_route(router, x, top_k=2, n_groups=n_groups,
+                                 topk_groups=topk_groups)
+    np.testing.assert_allclose(np.asarray(gates).sum(-1), 1.0, rtol=1e-5)
+    groups_per_token = np.asarray(idx) // gsz
+    for s in range(2):
+        for t in range(5):
+            assert len(set(groups_per_token[s, t].tolist())) <= topk_groups
+    # topk_groups in {0, n_groups} disables the restriction entirely
+    g0, i0 = moe.serve_route(router, x, top_k=2)
+    g1, i1 = moe.serve_route(router, x, top_k=2, n_groups=n_groups,
+                             topk_groups=n_groups)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    with pytest.raises(ValueError, match="n_expert_groups"):
+        moe.serve_route(router, x, top_k=2, n_groups=3, topk_groups=2)
+
+
+def test_streamed_grouped_routing_matches_resident(params):
+    """The engine threads n_expert_groups/topk_expert_groups through both
+    the resident and streamed routers — parity holds under the restricted
+    routing too (params are shape-identical; only routing changes)."""
+    import dataclasses
+    gcfg = dataclasses.replace(CFG, n_expert_groups=4, topk_expert_groups=2)
+    ref = Engine(gcfg, params, max_slots=2, max_seq=MAX_SEQ)
+    _submit_pair(ref)
+    want = ref.run()
+    store = PageStore(n_planes=8)
+    eng = Engine(gcfg, params, max_slots=2, max_seq=MAX_SEQ,
+                 weight_store=store, stream_cfg=StreamConfig())
+    _submit_pair(eng)
+    assert eng.run() == want
+    assert eng.step_traces == 4
+
+
+def test_streamed_pin_shared_experts(params, resident_tokens):
+    """pin_shared_experts pins the first N experts of every layer at init:
+    they are cache-resident (and pinned) for the whole run, and parity is
+    untouched."""
+    eng, _ = _streamed(params, pin_shared_experts=2)
+    _submit_pair(eng)
+    assert eng.run() == resident_tokens
+    for li in range(CFG.n_layers):
+        for e in range(2):
+            assert (li, e) in eng.expert_cache
+            assert eng.expert_cache._entries[(li, e)].pinned
+
+
+def test_streamed_per_slot_stats(params):
+    """Per-slot router histories: expert_stats() reports one hit rate per
+    decode slot plus the observed max routed-set size."""
+    eng, _ = _streamed(params)
+    _submit_pair(eng)
+    eng.run()
+    st = eng.expert_stats()
+    assert len(st["slot_hit_rates"]) == 2
+    assert all(0.0 <= r <= 1.0 for r in st["slot_hit_rates"])
+    assert any(r > 0.0 for r in st["slot_hit_rates"])
+    assert 0 < st["max_routed_seen"] <= st["expert_slab"]
+    assert st["pool_uploads"] >= 0 and st["pool_pages"] > 0
+
+
+def test_auto_expert_budget_returns_dead_slab_rows(params):
+    """Misroute-stall-aware budget re-split: the one-shot retune returns
+    the slab reservation's unused rows (e_slab vs observed max routed) to
+    the expert cache's capacity — and never fires twice."""
+    from repro.core.tiering import deploy
+    probe = PageStore()
+    deploy(params, store=probe)
+    budget = int(probe.total_bytes * 0.8)
+    eng, _ = _streamed(params, device_budget_bytes=budget,
+                       auto_expert_budget=True, auto_depth_after=2)
+    cap0 = eng.expert_cache.capacity
+    # drive the mechanism deterministically (the end-to-end flag is
+    # covered below): observed routing used 3 of e_slab rows, and at
+    # least one misroute stalled
+    eng._steps_done = 5
+    eng._max_routed_seen = 3
+    eng.expert_cache.note_stall(0.001)
+    eng._maybe_retune_expert_budget()
+    assert eng._auto_expert_done
+    grown = (eng._e_slab - 3) * eng._max_expert_bytes
+    assert eng.expert_cache.capacity == cap0 + grown
+    eng._maybe_retune_expert_budget()            # one-shot: no double-grow
+    assert eng.expert_cache.capacity == cap0 + grown
+    # end-to-end: the flag flips during a real run and serving still works
+    eng2, _ = _streamed(params, device_budget_bytes=budget,
+                        auto_expert_budget=True, auto_depth_after=2)
+    _submit_pair(eng2)
+    eng2.run()
+    assert eng2.expert_stats()["expert_budget_retuned"]
+    if eng2.expert_cache.capacity != cap0:       # retune actually fired
+        assert eng2.expert_cache.capacity > cap0
+        assert eng2.expert_cache.bytes_used <= eng2.expert_cache.capacity
+
+
 def test_spec_streamed_moe_parity(params):
     """Speculative decoding composes with expert paging: verify lanes ride
     the chunk path, their routed experts enter the slab through the

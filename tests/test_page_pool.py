@@ -1,0 +1,221 @@
+"""WeightPagePool: the allocator invariants and the one-staged-transfer
+contract the streamed engines rest on.
+
+The pool is the device half of the paged-weight dataflow: raw store pages
+in one ``(n_pages, 16 KiB)`` buffer, a host free-slot allocator with leak /
+double-map guards, and ONE staged transfer per ``upload`` call. The
+allocator is property-tested (no leaks: free + used == n_pages at every
+point; no double-maps: slots unique across live entries; double-free
+raises); the transfer contract is asserted end-to-end on the dense engine
+(uploads == window rotations, zero under pin_all).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+from repro.core.tiering import encode_flash
+from repro.store import PageStore, WeightPagePool
+
+MAX_SEQ = 96
+
+
+def _store(shapes, rber=0.0):
+    store = PageStore(n_planes=4)
+    for i, (k, n) in enumerate(shapes):
+        w = jax.random.normal(jax.random.PRNGKey(i), (k, n), jnp.float32)
+        store.put(f"w{i}", encode_flash(w, rber=rber, seed=i))
+    return store
+
+
+# --- upload table correctness -------------------------------------------------
+
+def test_upload_tables_name_every_page_once():
+    store = _store([(128, 128), (200, 72), (64, 384)])
+    names = ["w0", "w1", "w2"]
+    total = sum(store.entry_pages(n) for n in names)
+    pool = WeightPagePool(store, total)
+    tbls = pool.upload(names)
+    assert set(tbls) == set(names)
+    for name in names:
+        t = tbls[name]
+        kt, nt = store.table[name]["q"].grid
+        assert t["q_tbl"].shape == (kt, nt)
+        assert t["kn"] == tuple(store.table[name]["q"].shape)
+        assert len(t["slots"]) == store.entry_pages(name)
+        got = np.sort(np.concatenate([t["q_tbl"].reshape(-1),
+                                      t["p_slots"], t["s_slots"]]))
+        assert np.array_equal(got, np.sort(t["slots"]))
+    # every page mapped exactly once, across all entries
+    all_slots = np.concatenate([tbls[n]["slots"] for n in names])
+    assert len(np.unique(all_slots)) == total == pool.used_pages
+    assert pool.free_pages == 0
+
+
+def test_uploaded_pages_hold_store_bytes():
+    """The pool slots hold the store's raw page bytes verbatim — the
+    gathers in kernels/paged_ffn.py (tested there) depend on exactly
+    this."""
+    store = _store([(256, 128)], rber=1e-3)
+    pool = WeightPagePool(store, store.entry_pages("w0"))
+    t = pool.upload(["w0"])["w0"]
+    ids = np.concatenate([np.asarray(store.table["w0"][c].pages)
+                          for c in ("q", "parity", "scale")])
+    want = store.read_pages(ids).view(np.int8)
+    got = np.asarray(pool.buffer)[t["slots"]]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_one_staged_transfer_per_upload_call():
+    store = _store([(128, 128), (200, 72)])
+    pool = WeightPagePool(store, 64)
+    pool.upload(["w0", "w1"])        # two entries, ONE transfer
+    s = pool.stats()
+    assert s["pool_uploads"] == 1
+    assert s["pool_pages_staged"] == (store.entry_pages("w0")
+                                      + store.entry_pages("w1"))
+    assert s["pool_bytes_staged"] == s["pool_pages_staged"] * store.page_bytes
+
+
+def test_snapshot_survives_free_and_reuse():
+    """Functional-update discipline: a buffer snapshot taken before a
+    free+reupload still shows the ORIGINAL bytes — slot reuse only exists
+    in future buffers, so in-flight compute never races eviction."""
+    store = _store([(128, 128), (128, 128)])
+    pool = WeightPagePool(store, store.entry_pages("w0"))
+    t0 = pool.upload(["w0"])["w0"]
+    snap = pool.buffer                       # dispatched-compute's view
+    before = np.asarray(snap)[t0["slots"]].copy()
+    pool.free(t0["slots"])
+    t1 = pool.upload(["w1"])["w1"]           # reuses the same physical slots
+    assert set(t1["slots"].tolist()) == set(t0["slots"].tolist())
+    np.testing.assert_array_equal(np.asarray(snap)[t0["slots"]], before)
+    assert not np.array_equal(np.asarray(pool.buffer)[t1["slots"]], before)
+
+
+def test_donate_pool_updates_in_place():
+    """``donate=True`` (the serving engines' mode): uploads write the new
+    pages INTO the existing buffer — O(new pages), no O(pool) copy — and
+    slot reuse after free lands the fresh bytes in the same physical
+    rows. ``dispatch`` hands consumers the live buffer atomically."""
+    store = _store([(128, 128), (128, 128)])
+    pool = WeightPagePool(store, store.entry_pages("w0"), donate=True)
+    t0 = pool.upload(["w0"])["w0"]
+    ptr0 = pool.buffer.unsafe_buffer_pointer()
+    ids = np.concatenate([np.asarray(store.table["w0"][c].pages)
+                          for c in ("q", "parity", "scale")])
+    want0 = store.read_pages(ids).view(np.int8)
+    got0 = pool.dispatch(lambda buf: np.asarray(buf)[t0["slots"]])
+    np.testing.assert_array_equal(got0, want0)
+    pool.free(t0["slots"])
+    t1 = pool.upload(["w1"])["w1"]           # reuses the same physical slots
+    assert set(t1["slots"].tolist()) == set(t0["slots"].tolist())
+    assert pool.buffer.unsafe_buffer_pointer() == ptr0, \
+        "donating upload must not reallocate the pool buffer"
+    ids1 = np.concatenate([np.asarray(store.table["w1"][c].pages)
+                           for c in ("q", "parity", "scale")])
+    want1 = store.read_pages(ids1).view(np.int8)
+    got1 = pool.dispatch(lambda buf: np.asarray(buf)[t1["slots"]])
+    np.testing.assert_array_equal(got1, want1)
+    s = pool.stats()
+    assert s["pool_uploads"] == 2 and s["pool_grows"] == 0
+
+
+def test_double_free_raises():
+    store = _store([(128, 128)])
+    pool = WeightPagePool(store, store.entry_pages("w0"))
+    t = pool.upload(["w0"])["w0"]
+    pool.free(t["slots"])
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.free(t["slots"][:1])
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.free([10**6])
+
+
+def test_grow_extends_capacity_and_preserves_pages():
+    """Overflow valve: an upload beyond capacity doubles the buffer,
+    keeps every live page's bytes, and keeps the allocator consistent."""
+    store = _store([(128, 128), (256, 256)])
+    pool = WeightPagePool(store, store.entry_pages("w0"))   # exactly w0
+    t0 = pool.upload(["w0"])["w0"]
+    before = np.asarray(pool.buffer)[t0["slots"]].copy()
+    t1 = pool.upload(["w1"])["w1"]                          # must grow
+    assert pool.stats()["pool_grows"] == 1
+    assert pool.n_pages >= store.entry_pages("w0") + store.entry_pages("w1")
+    np.testing.assert_array_equal(np.asarray(pool.buffer)[t0["slots"]],
+                                  before)
+    assert pool.used_pages + pool.free_pages == pool.n_pages
+    assert not (set(t0["slots"].tolist()) & set(t1["slots"].tolist()))
+
+
+# --- allocator invariants (property-tested) -----------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.sampled_from(["up0", "up1", "up2", "free_oldest",
+                                 "free_newest"]),
+                min_size=1, max_size=24))
+def test_allocator_never_leaks_or_double_maps(ops):
+    """Under arbitrary upload/free interleavings (evict-like oldest-first
+    and stack-like newest-first release): free + used == n_pages always,
+    live entries never share a slot, and freed slots are reusable."""
+    store = _store([(128, 128), (128, 256), (256, 128)])
+    pool = WeightPagePool(store, 8)
+    live = []                                 # (name, slots) in upload order
+    for op in ops:
+        if op.startswith("up"):
+            name = f"w{op[2]}"
+            live.append((name, pool.upload([name])[name]["slots"]))
+        elif live:
+            _, slots = live.pop(0 if op == "free_oldest" else -1)
+            pool.free(slots)
+        assert pool.used_pages + pool.free_pages == pool.n_pages
+        mapped = ([s for _, sl in live for s in sl.tolist()])
+        assert len(mapped) == len(set(mapped)), "double-mapped slot"
+        assert len(mapped) == pool.used_pages, "leaked slot"
+    for _, slots in live:
+        pool.free(slots)
+    assert pool.used_pages == 0
+    assert pool.free_pages == pool.n_pages
+
+
+# --- engine contract: one upload per window rotation --------------------------
+
+def _dense_engine(**stream_kw):
+    from repro.configs.paper_models import OPT_TINY
+    from repro.models import dense
+    from repro.serving.engine import Engine
+    from repro.store import StreamConfig
+    params = dense.init(OPT_TINY, jax.random.PRNGKey(0))
+    store = PageStore(n_planes=8)
+    eng = Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ, rber=0.0,
+                 weight_store=store, stream_cfg=StreamConfig(**stream_kw))
+    return eng, store
+
+
+def test_engine_single_upload_per_window_rotation():
+    """THE tentpole contract: each streamed window crosses to the device
+    as exactly ONE staged pool transfer — no per-param device_puts."""
+    _, probe = _dense_engine(group_size=1)      # programming fills total_bytes
+    budget = int(probe.total_bytes * 0.6)       # bounded: forces streaming
+    eng, _ = _dense_engine(group_size=1, prefetch_depth=2,
+                           device_budget_bytes=budget)
+    eng.submit(list(range(1, 30)), max_new=8)
+    eng.run()
+    s = eng.stream_stats()
+    assert s["groups_streamed"] > 0
+    assert s["pool_uploads"] == s["groups_streamed"], \
+        "window rotation must be one staged transfer"
+    assert s["pool_pages_staged"] > 0 and s["pool_bytes_staged"] > 0
+
+
+def test_engine_pin_all_uploads_nothing_during_serving():
+    eng, _ = _dense_engine(group_size=2, pin_all=True)
+    eng.submit([1, 2, 3, 4], max_new=6)
+    eng.run()
+    s = eng.stream_stats()
+    assert s["pool_uploads"] == 0 and s["bytes_streamed"] == 0
+    # the pool still HOLDS the pinned windows from init
+    assert s["pool_used_pages"] > 0
