@@ -1,0 +1,194 @@
+"""Sharded page store + tensor-parallel streamed serving (ISSUE 7).
+
+What this guards, on 4 forced host devices (CPU CI):
+
+  * greedy token parity: the 4-shard dense plane emits exactly the
+    single-device streamed engine's tokens; the expert-paged MoE plane
+    holds a >= 0.9 match-fraction floor (the per-FFN psum reassociates
+    the K-sum, so a one-ulp logit tie can flip a greedy plateau token at
+    depth — see _match_frac; bit-exact parity at the engine-test scale
+    is tests/test_sharded_serving.py's job);
+  * capacity: the flash tier EXCEEDS any single device's share of the
+    weight budget, yet each device's pool stays within budget/4 + the
+    engine's reported trace-static reserve — the model only fits
+    because it is sharded;
+  * transfer discipline: every window rotation crosses as exactly ONE
+    staged transfer PER SHARD (pool_shard_transfers == 4 x pool_uploads);
+  * no trace churn: steady-state trace counts match the unsharded planes
+    (3 dense, 4 MoE).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python benchmarks/serve_sharded.py
+    PYTHONPATH=src REPRO_SMOKE=1 python benchmarks/serve_sharded.py  # CI
+
+Run standalone the module forces the virtual devices itself (before jax
+initializes); under an already-initialized single-device process it
+reports SKIP and exits 0 so the aggregate benchmark run stays green.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                            # direct invocation
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+if "jax" not in sys.modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = \
+            (flags + " --xla_force_host_platform_device_count=4").strip()
+
+import jax
+
+from benchmarks.common import Report, write_bench_json
+from benchmarks.serve_decode import SERVE_BENCH
+from benchmarks.serve_moe import SERVE_MOE_BENCH
+from repro.models import dense, moe
+from repro.serving.engine import Engine
+from repro.store import PageStore, StreamConfig
+
+SMOKE = os.environ.get("REPRO_SMOKE", "0") != "0"
+N_SHARDS = 4
+WARMUP_STEPS = 3
+TIMED_STEPS = 6 if SMOKE else 20
+PROMPTS = [list(range(1, 10)), [9, 8, 7, 6], [3, 1, 4, 1, 5, 9, 2, 6]]
+# SERVE_MOE_BENCH's d_ff=384 is 3 tile columns — not splittable 4 ways;
+# the sharded MoE model widens to 4 whole 128-columns per shard.
+MOE_CFG = dataclasses.replace(SERVE_MOE_BENCH, d_ff=512)
+
+
+def _run_engine(eng, max_new: int) -> tuple[dict, float]:
+    for p in PROMPTS:
+        eng.submit(list(p), max_new=max_new)
+    for _ in range(WARMUP_STEPS):
+        eng.step()
+    t0 = time.perf_counter()
+    n_tokens = 0
+    for _ in range(TIMED_STEPS):
+        n_tokens += eng.step()
+    dt = time.perf_counter() - t0
+    eng.run()
+    return ({r.rid: r.out for r in eng.requests.values()},
+            n_tokens / max(dt, 1e-9))
+
+
+def _serve(cfg, params, budget, n_shards, max_new):
+    eng = Engine(cfg, params, max_slots=4, max_seq=160,
+                 weight_store=PageStore(n_planes=8),
+                 stream_cfg=StreamConfig(device_budget_bytes=budget,
+                                         n_shards=n_shards))
+    got, tps = _run_engine(eng, max_new)
+    stats = (eng.expert_stats() if eng.streamed_moe
+             else eng.stream_stats())
+    traces = eng.step_traces
+    eng.close()
+    return got, tps, stats, traces
+
+
+def _match_frac(got: dict, want: dict) -> float:
+    """Per-position greedy-token agreement across all requests. 1.0 =
+    bit-identical streams. The TP planes place ONE psum after each FFN's
+    row-parallel half, which reassociates the K-sum — exact at the
+    engine-test scale (tests/test_sharded_serving.py), but a one-ulp
+    logit tie CAN flip a token on a greedy plateau at depth, so the MoE
+    gate below is a match-fraction floor rather than exact equality."""
+    n = hit = 0
+    for rid, w in want.items():
+        g = got.get(rid, [])
+        n += max(len(w), len(g))
+        hit += sum(a == b for a, b in zip(w, g))
+    return hit / max(n, 1)
+
+
+def _bench_plane(report: Report, results: dict, label: str, cfg, params,
+                 budget_frac: float, max_new: int, parity_floor: float):
+    probe = PageStore()
+    Engine(cfg, params, max_slots=4, max_seq=160, weight_store=probe,
+           stream_cfg=StreamConfig(pin_edges=False)).close()
+    flash_total = probe.total_bytes
+    budget = int(flash_total * budget_frac)
+    per_dev_budget = budget // N_SHARDS
+
+    want, tps1, _, traces1 = _serve(cfg, params, budget, 1, max_new)
+    got, tps4, st4, traces4 = _serve(cfg, params, budget, N_SHARDS, max_new)
+
+    local_bytes = st4["pool_local_bytes"]
+    # margin: the engine's trace-static pool reservation (in-flight
+    # windows / the expert slab's misroute+prefetch slack — reported, not
+    # guessed) + page-rounding slack. Everything the cache retains beyond
+    # that must fit the device's 1/N budget share.
+    margin = st4["pool_reserve_bytes"] + 8 * probe.page_bytes
+    match = _match_frac(got, want)
+    res = {
+        "flash_tier_bytes": flash_total, "budget_bytes": budget,
+        "page_bytes": probe.page_bytes,
+        "per_device_budget_bytes": per_dev_budget,
+        "pool_local_bytes": local_bytes,
+        "pool_reserve_bytes": st4["pool_reserve_bytes"],
+        "parity": got == want, "token_match_fraction": match,
+        "tps_unsharded": tps1, "tps_sharded": tps4,
+        "traces_unsharded": traces1, "traces_sharded": traces4,
+        "pool_shards": st4["pool_shards"],
+        "pool_uploads": st4["pool_uploads"],
+        "pool_shard_transfers": st4["pool_shard_transfers"],
+    }
+    results[label] = res
+    report.note(
+        f"  {label:5s}: sharded {tps4:7.1f} tok/s vs unsharded "
+        f"{tps1:7.1f} (wall-clock incomparable on virtual CPU devices), "
+        f"flash {flash_total/2**20:.2f} MiB > per-device budget "
+        f"{per_dev_budget/2**20:.2f} MiB, local pool "
+        f"{local_bytes/2**20:.2f} MiB (reserve "
+        f"{st4['pool_reserve_bytes']/2**20:.2f}), "
+        f"{st4['pool_shard_transfers']} shard transfers / "
+        f"{st4['pool_uploads']} rotations, token match {match:.3f}")
+    report.add(f"{label}: greedy token match vs unsharded (1.0 = exact)",
+               match, parity_floor, 1)
+    report.add(f"{label}: flash tier exceeds one device's budget share",
+               flash_total / max(per_dev_budget, 1), 1.0001, float("inf"))
+    report.add(f"{label}: per-device pool <= budget/4 + reserve margin",
+               float(local_bytes <= per_dev_budget + margin), 1, 1)
+    report.add(f"{label}: one staged transfer per shard per rotation",
+               float(st4["pool_shard_transfers"]
+                     == N_SHARDS * st4["pool_uploads"] > 0), 1, 1)
+    report.add(f"{label}: no trace churn vs the unsharded plane",
+               traces4, traces1, traces1)
+
+
+def bench(report: Report) -> dict:
+    results: dict = {"n_shards": N_SHARDS}
+    max_new = WARMUP_STEPS + TIMED_STEPS + 8
+    dense_params = dense.init(SERVE_BENCH, jax.random.PRNGKey(0))
+    _bench_plane(report, results, "dense", SERVE_BENCH, dense_params,
+                 0.7, max_new, parity_floor=1.0)
+    moe_params = moe.init(MOE_CFG, jax.random.PRNGKey(0))
+    _bench_plane(report, results, "moe", MOE_CFG, moe_params, 0.8, max_new,
+                 parity_floor=0.9)
+    return results
+
+
+def run() -> Report:
+    rep = Report(f"Serving: sharded page store, {N_SHARDS}-device "
+                 "tensor-parallel streamed planes")
+    if len(jax.devices()) < N_SHARDS:
+        rep.note(f"  SKIP: {len(jax.devices())} device(s) visible; run "
+                 "with XLA_FLAGS=--xla_force_host_platform_device_count=4")
+        return rep
+    results = bench(rep)
+    path = write_bench_json("serve_sharded", results)
+    rep.note(f"  wrote {path}")
+    return rep
+
+
+def main():
+    rep = run()
+    print(rep.render())
+    sys.exit(0 if rep.ok else 1)
+
+
+if __name__ == "__main__":
+    main()

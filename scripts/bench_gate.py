@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Perf regression gate over BENCH_serve.json (ISSUE 6).
+"""Perf regression gate over BENCH_serve.json (ISSUE 6 + ISSUE 7).
 
 The serving benchmarks already fail their own in-run checks, but those
 bounds live next to the code that produces the numbers — easy to loosen
@@ -11,9 +11,17 @@ and holds the page-pool floors independently:
     (the ratio host-side slab assembly could not reach), greedy parity,
     and streamed bytes/token <= 0.5x the all-experts-streamed cost;
   * serve_stream: every window rotation crossed as exactly ONE staged
-    pool transfer, at every budget.
+    pool transfer, at every budget;
+  * serve_sharded (forced-4-device job): dense greedy parity exact and
+    MoE token match >= 0.9 vs the unsharded plane, per-device pool bytes
+    <= budget/n_shards + the engine's trace-static reserve, exactly
+    n_shards staged transfers per window rotation, and no trace churn.
 
-    python scripts/bench_gate.py [BENCH_serve.json]
+    python scripts/bench_gate.py [--section NAME ...] [BENCH_serve.json]
+
+With no --section, gates serve_moe + serve_stream (and serve_sharded
+when its results are present — the single-device jobs never produce
+them). --section makes the named sections REQUIRED, gating only them.
 """
 from __future__ import annotations
 
@@ -22,58 +30,136 @@ import sys
 
 MOE_TPS_FLOOR = 0.5          # streamed / resident tok/s, page-pool floor
 MOE_BYTES_CEIL = 0.5         # fetched / all-experts-streamed bytes per token
+SHARDED_MATCH_FLOOR = {"dense": 1.0, "moe": 0.9}
+# dense is exact; the MoE plane's per-FFN psum reassociates the K-sum, so
+# a one-ulp greedy tie can flip a plateau token at depth (benchmarks/
+# serve_sharded.py documents the floor)
 
 
-def gate(results: dict) -> list[str]:
-    failures = []
-
+def _gate_moe(results: dict, failures: list[str]):
     moe = results.get("serve_moe")
     if moe is None:
         failures.append("serve_moe: no recorded results")
-    else:
-        ratio = moe.get("streamed_vs_resident_tps", 0.0)
-        if ratio < MOE_TPS_FLOOR:
-            failures.append(
-                f"serve_moe: streamed/resident tok/s {ratio:.3f} fell below "
-                f"the page-pool floor {MOE_TPS_FLOOR}")
-        if not moe.get("parity", False):
-            failures.append("serve_moe: streamed decode lost greedy parity")
-        bytes_ratio = moe.get("bytes_ratio_vs_all_experts", 1.0)
-        if bytes_ratio > MOE_BYTES_CEIL:
-            failures.append(
-                f"serve_moe: bytes/token ratio {bytes_ratio:.3f} exceeds "
-                f"{MOE_BYTES_CEIL}x all-experts-streamed")
+        return
+    ratio = moe.get("streamed_vs_resident_tps", 0.0)
+    if ratio < MOE_TPS_FLOOR:
+        failures.append(
+            f"serve_moe: streamed/resident tok/s {ratio:.3f} fell below "
+            f"the page-pool floor {MOE_TPS_FLOOR}")
+    if not moe.get("parity", False):
+        failures.append("serve_moe: streamed decode lost greedy parity")
+    bytes_ratio = moe.get("bytes_ratio_vs_all_experts", 1.0)
+    if bytes_ratio > MOE_BYTES_CEIL:
+        failures.append(
+            f"serve_moe: bytes/token ratio {bytes_ratio:.3f} exceeds "
+            f"{MOE_BYTES_CEIL}x all-experts-streamed")
 
+
+def _gate_stream(results: dict, failures: list[str]):
     stream = results.get("serve_stream")
     if stream is None:
         failures.append("serve_stream: no recorded results")
-    else:
-        for b in stream.get("budgets", []):
-            up, rot = b.get("pool_uploads"), b.get("groups_streamed")
-            if not (up == rot and (up or 0) > 0):
-                failures.append(
-                    f"serve_stream @ {100 * b.get('budget_fraction', 0):.0f}%"
-                    f" budget: {up} staged uploads for {rot} window "
-                    "rotations (contract: exactly one per rotation)")
+        return
+    for b in stream.get("budgets", []):
+        up, rot = b.get("pool_uploads"), b.get("groups_streamed")
+        if not (up == rot and (up or 0) > 0):
+            failures.append(
+                f"serve_stream @ {100 * b.get('budget_fraction', 0):.0f}%"
+                f" budget: {up} staged uploads for {rot} window "
+                "rotations (contract: exactly one per rotation)")
+
+
+def _gate_sharded(results: dict, failures: list[str], required: bool):
+    sh = results.get("serve_sharded")
+    if sh is None:
+        if required:
+            failures.append("serve_sharded: no recorded results")
+        return
+    n = sh.get("n_shards", 0)
+    for label, floor in SHARDED_MATCH_FLOOR.items():
+        r = sh.get(label)
+        if r is None:
+            failures.append(f"serve_sharded/{label}: no recorded results")
+            continue
+        match = r.get("token_match_fraction", 0.0)
+        if match < floor:
+            failures.append(
+                f"serve_sharded/{label}: token match {match:.3f} vs the "
+                f"unsharded plane fell below the {floor} floor")
+        up = r.get("pool_uploads", 0)
+        if not (r.get("pool_shard_transfers") == n * up and up > 0):
+            failures.append(
+                f"serve_sharded/{label}: {r.get('pool_shard_transfers')} "
+                f"shard transfers for {up} rotations (contract: exactly "
+                f"{n} per rotation, one per shard)")
+        ceil = (r.get("per_device_budget_bytes", 0)
+                + r.get("pool_reserve_bytes", 0)
+                + 8 * r.get("page_bytes", 0))
+        if r.get("pool_local_bytes", 0) > ceil:
+            failures.append(
+                f"serve_sharded/{label}: per-device pool "
+                f"{r.get('pool_local_bytes', 0)}B exceeds budget/{n} + "
+                f"trace-static reserve ({ceil}B)")
+        if r.get("traces_sharded") != r.get("traces_unsharded"):
+            failures.append(
+                f"serve_sharded/{label}: {r.get('traces_sharded')} traces "
+                f"vs the unsharded plane's {r.get('traces_unsharded')} "
+                "(contract: sharding adds no trace churn)")
+
+
+def gate(results: dict, sections: list[str] | None = None) -> list[str]:
+    failures: list[str] = []
+    if sections:
+        if "serve_moe" in sections:
+            _gate_moe(results, failures)
+        if "serve_stream" in sections:
+            _gate_stream(results, failures)
+        if "serve_sharded" in sections:
+            _gate_sharded(results, failures, required=True)
+        return failures
+    _gate_moe(results, failures)
+    _gate_stream(results, failures)
+    _gate_sharded(results, failures, required=False)
     return failures
 
 
 def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_serve.json"
+    args = sys.argv[1:]
+    sections: list[str] = []
+    while "--section" in args:
+        i = args.index("--section")
+        try:
+            sections.append(args[i + 1])
+        except IndexError:
+            print("bench gate: --section needs a name")
+            return 1
+        del args[i:i + 2]
+    path = args[0] if args else "BENCH_serve.json"
     try:
         with open(path) as f:
             results = json.load(f)
     except (OSError, ValueError) as e:
         print(f"bench gate: cannot read {path}: {e}")
         return 1
-    failures = gate(results)
+    failures = gate(results, sections or None)
     for msg in failures:
         print(f"bench gate: FAIL {msg}")
     if not failures:
-        moe = results["serve_moe"]
-        print("bench gate: PASS "
-              f"(serve_moe {moe['streamed_vs_resident_tps']:.3f}x resident, "
-              f"bytes ratio {moe['bytes_ratio_vs_all_experts']:.3f}x)")
+        bits = []
+        moe = results.get("serve_moe")
+        if moe and (not sections or "serve_moe" in sections):
+            bits.append(
+                f"serve_moe {moe['streamed_vs_resident_tps']:.3f}x "
+                f"resident, bytes ratio "
+                f"{moe['bytes_ratio_vs_all_experts']:.3f}x")
+        sh = results.get("serve_sharded")
+        if sh and (not sections or "serve_sharded" in sections):
+            bits.append(
+                f"serve_sharded dense match "
+                f"{sh['dense']['token_match_fraction']:.3f}, moe match "
+                f"{sh['moe']['token_match_fraction']:.3f} over "
+                f"{sh['n_shards']} shards")
+        print(f"bench gate: PASS ({'; '.join(bits) or 'nothing gated'})")
     return 1 if failures else 0
 
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import enum
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.tiering import FlashWeight, PagedWeight
@@ -50,9 +51,15 @@ def flash_matmul(
     out_dtype=jnp.bfloat16,
     block_k: int = 512,
     block_n: int = 512,
+    axis_name: str | None = None,
 ) -> jnp.ndarray:
     """x: (..., K) activations; w: flash-tier (K, N) — a device-resident
-    FlashWeight or a pool-backed PagedWeight. Returns (..., N)."""
+    FlashWeight or a pool-backed PagedWeight. Returns (..., N).
+
+    ``axis_name``: tensor-parallel row-parallel reduction — inside a
+    ``shard_map`` the shard's K-slice produces a PARTIAL product; one f32
+    psum over the named mesh axis completes it BEFORE the ``out_dtype``
+    cast (summing in bf16 would double the rounding)."""
     if isinstance(w, PagedWeight):
         if w.lead:
             raise ValueError("flash_matmul expects a single (K, N) "
@@ -85,6 +92,8 @@ def flash_matmul(
         )
     else:
         out = ops.ecdp_matmul_xla(x2, w.q, w.parity, w.scale, ecc_enabled=ecc_enabled)
+    if axis_name is not None:
+        out = jax.lax.psum(out.astype(jnp.float32), axis_name)
     return out.reshape(lead + (n,)).astype(out_dtype)
 
 
@@ -94,11 +103,16 @@ def maybe_flash_matmul(
     mode: ExecMode = ExecMode.XLA,
     ecc_enabled: bool | None = None,
     out_dtype=jnp.bfloat16,
+    axis_name: str | None = None,
 ) -> jnp.ndarray:
     """Dispatch on tier: FlashWeight/PagedWeight -> ERDPE; plain array ->
-    bf16 matmul."""
+    bf16 matmul. ``axis_name`` = row-parallel psum (see flash_matmul)."""
     if isinstance(w, (FlashWeight, PagedWeight)):
         if ecc_enabled is None:
             ecc_enabled = serve_ecc_mode() == "inline"
-        return flash_matmul(x, w, mode=mode, ecc_enabled=ecc_enabled, out_dtype=out_dtype)
-    return jnp.dot(x, w.astype(x.dtype)).astype(out_dtype)
+        return flash_matmul(x, w, mode=mode, ecc_enabled=ecc_enabled,
+                            out_dtype=out_dtype, axis_name=axis_name)
+    out = jnp.dot(x, w.astype(x.dtype))
+    if axis_name is not None:
+        out = jax.lax.psum(out.astype(jnp.float32), axis_name)
+    return out.astype(out_dtype)

@@ -204,6 +204,28 @@ def routed_experts(idx, q_lens):
     return np.unique(idx[valid])
 
 
+def shard_planes(n_planes: int, n_shards: int) -> np.ndarray:
+    """Round-robin plane-group assignment for the SHARDED page store — the
+    per-shard generalization of Algorithm 2's plane dispatch (DESIGN.md
+    §11): plane ``p`` belongs to shard ``p % n_shards``, so one shard's
+    pages stripe across ``n_planes / n_shards`` planes exactly like the
+    unsharded store stripes across all of them (page ``pid`` lives on
+    plane ``pid % n_planes``, and the store's round-robin TILE partition
+    keeps each shard's page ids on its own plane group's residue class).
+
+    Returns the (n_shards, n_planes // n_shards) plane-id assignment.
+    Raises when ``n_shards`` does not divide the plane-group count — the
+    save-time validation ``PageStore.save`` applies.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_planes % n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} must divide the plane-group count "
+            f"(n_planes={n_planes}) for the per-shard plane dispatch")
+    return np.arange(n_planes).reshape(-1, n_shards).T
+
+
 def routed_experts_by_slot(idx, q_lens):
     """Per-slot split of ``routed_experts`` — same bitmap handoff, kept
     separated by decode slot so the expert cache's per-slot router

@@ -88,10 +88,18 @@ def paged_ecdp_matmul_xla(
     kn: tuple,
     *,
     ecc_enabled: bool = True,
+    axis_name: str | None = None,
 ) -> jnp.ndarray:
     """(M, K) x paged (K, N) -> (M, N) f32: gather the dense weight from the
     pool, then the resident ECDP math (kernels/ops.ecdp_matmul_xla) — exact
-    parity with a resident FlashWeight by construction."""
+    parity with a resident FlashWeight by construction.
+
+    ``axis_name`` is the row-parallel (K-sharded) tensor-parallel hook:
+    inside a ``shard_map`` each shard holds a K/n_shards slice of the pool
+    pages and computes a partial product; ONE psum over the mesh axis
+    completes the contraction. The psum commutes with the per-column scale
+    (row-parallel shards replicate the scale run), so it sits after the
+    dequant — one collective per matmul, nothing else changes."""
     k, n = kn
     wq = gather_q(pool, q_tbl, k, n)
     scales = gather_scale(pool, s_slots, n)
@@ -102,7 +110,10 @@ def paged_ecdp_matmul_xla(
         wq = ecc.bytes_to_weights(corrected)
     out = jnp.dot(a.astype(jnp.float32), wq.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
-    return out * scales.astype(jnp.float32)
+    out = out * scales.astype(jnp.float32)
+    if axis_name is not None:
+        out = lax.psum(out, axis_name)
+    return out
 
 
 # --- Pallas kernel ------------------------------------------------------------

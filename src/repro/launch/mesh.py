@@ -35,6 +35,23 @@ def make_host_mesh(model_axis: int | None = None):
     return _mk((n // m, m), ("data", "model"))
 
 
+def make_model_mesh(n_shards: int):
+    """The tensor-parallel serving mesh: ``n_shards`` devices on the
+    "model" axis (sharded page store / streamed TP serving). Raises a
+    clear error instead of the bare assert when the host cannot supply
+    the shards (CI forces virtual devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    n = len(jax.devices())
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n % n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} needs a device count it divides; "
+            f"{n} device(s) visible (on CPU, set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_shards})")
+    return make_host_mesh(model_axis=n_shards)
+
+
 def data_axis_names(mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
 

@@ -39,7 +39,8 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
           group_size: int = 1, auto_depth: bool = False,
           spec_k: int = 0, drafter: str = "ngram",
           adaptive_k: bool = False,
-          store_image: str | None = None, ckpt: str | None = None) -> dict:
+          store_image: str | None = None, ckpt: str | None = None,
+          shards: int = 1) -> dict:
     cfg = OPT_TINY if arch == "opt-tiny" else get_config(arch, smoke=smoke)
     if cfg.family not in ("dense", "moe"):
         raise SystemExit("engine serves dense- and moe-family archs")
@@ -60,7 +61,8 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
             raise SystemExit("--rber applies at flash-programming time; a "
                              "die image already carries its own injected "
                              "errors (re-run deploy --store with --rber)")
-        store = PageStore.open(store_image)
+        store = PageStore.open(
+            store_image, n_shards=(shards if shards > 1 else None))
         template = dram_tier(mod.init(cfg, jax.random.PRNGKey(seed)))
         params, _ = CheckpointManager(ckpt).restore(template)
         stream = True
@@ -75,9 +77,18 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
             store = PageStore()
         budget = (None if device_budget_mib is None
                   else int(device_budget_mib * 2**20))
+        if shards > 1 and len(jax.devices()) < shards:
+            raise SystemExit(
+                f"--shards {shards} needs {shards} devices, found "
+                f"{len(jax.devices())} (CPU smoke: XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={shards})")
         stream_cfg = StreamConfig(device_budget_bytes=budget,
                                   group_size=group_size,
-                                  auto_depth=auto_depth)
+                                  auto_depth=auto_depth,
+                                  n_shards=shards)
+    elif shards > 1:
+        raise SystemExit("--shards serves through the streamed planes; "
+                         "add --stream (or --store-image)")
     spec_cfg = draft_cfg = draft_params = None
     if spec_k > 0:
         from repro.serving.spec import SpecConfig
@@ -157,6 +168,11 @@ def main():
                          "residency cache); default unbounded")
     ap.add_argument("--group-size", type=int, default=1,
                     help="layers per streamed group (--stream)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="tensor-parallel shards for --stream: the page "
+                         "store partitions by plane group across N "
+                         "devices, each holding 1/N of every window "
+                         "(N x aggregate stream bandwidth)")
     ap.add_argument("--auto-depth", action="store_true",
                     help="re-pick prefetch depth from the first steps' "
                          "stall/stream telemetry (--stream)")
@@ -187,7 +203,8 @@ def main():
                 group_size=args.group_size, auto_depth=args.auto_depth,
                 spec_k=args.spec_k, drafter=args.drafter,
                 adaptive_k=args.adaptive_k,
-                store_image=args.store_image, ckpt=args.ckpt)
+                store_image=args.store_image, ckpt=args.ckpt,
+                shards=args.shards)
     print(f"served {len(out['outputs'])} requests, {out['tokens']} generated "
           f"tokens in {out['seconds']:.1f}s ({out['tps']:.1f} generated "
           f"tok/s, {out['processed_tps']:.1f} processed tok/s on CPU), "

@@ -177,6 +177,54 @@ def named(specs: Any, mesh) -> Any:
                         is_leaf=lambda x: isinstance(x, P))
 
 
+# --- tensor-parallel streamed serving (sharded page store) --------------------
+
+def tp_shard_axis(entry: str) -> int | None:
+    """Which (K, N) axis of a PageStore entry shards across the "model"
+    mesh axis for tensor-parallel STREAMED serving — derived from the same
+    ``_RULES`` the training specs use, so the serving shards and the
+    training shards agree by construction:
+
+      * ``(None, MODEL)`` rules (w_gate / w_up / wq...) -> axis 1 (the
+        N / d_ff column axis — Megatron column-parallel);
+      * ``(MODEL, None)`` rules (w_down / w_out / wo) -> axis 0 (the K
+        row axis — row-parallel, one psum after the matmul);
+      * anything else (``attn_flash/*`` copies, router, lm_head) -> None
+        (replicated on every shard's pool).
+
+    ``entry`` is a store entry name (``layers/ffn/w_gate@3``,
+    ``layers/moe/experts/w_down@1.5``); the ``@idx`` suffix is ignored.
+    """
+    base = entry.partition("@")[0]
+    if base.startswith("attn_flash/"):
+        return None                      # Alg.2 attn copies stay replicated
+    for pat, last2, _ in _RULES:
+        if re.fullmatch(pat, base):
+            if last2 == (None, MODEL):
+                return 1
+            if last2 == (MODEL, None):
+                return 0
+            return None
+    if _EXPERT_RE.match(base):
+        # expert bank slices keep their per-matrix TP axis (the leading
+        # expert dim is already split into per-entry store slices)
+        leaf = base.rsplit("/", 1)[-1]
+        if leaf in ("w_gate", "w_up"):
+            return 1
+        if leaf in ("w_down",):
+            return 0
+    return None
+
+
+def stream_window_specs(mesh) -> dict:
+    """PartitionSpecs for the streamed group step under ``shard_map``:
+    the pool buffer splits its page rows over "model"; page tables, DRAM
+    params, activations and KV stay replicated (attention + router are
+    computed redundantly per shard — the canonical 1-collective TP FFN
+    leaves exactly one psum per layer)."""
+    return {"pool": P(MODEL, None), "replicated": P()}
+
+
 # --- batch / cache rules ---------------------------------------------------------
 
 

@@ -479,11 +479,18 @@ def swiglu_init(key, d, f, dtype=jnp.bfloat16) -> Params:
     }
 
 
-def swiglu_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+def swiglu_apply(p: Params, x: jnp.ndarray,
+                 axis_name: str | None = None) -> jnp.ndarray:
+    """``axis_name``: run the FFN tensor-parallel inside a shard_map —
+    gate/up are column-parallel (each shard owns d_ff/n_shards columns, no
+    collective), down is row-parallel over the SAME column slice, so ONE
+    psum per FFN completes the contraction (erdpe.flash_matmul does it in
+    f32 before the bf16 cast)."""
     g = maybe_flash_matmul(x, p["w_gate"])
     u = maybe_flash_matmul(x, p["w_up"])
     h = jax.nn.silu(g.astype(jnp.float32)) * u.astype(jnp.float32)
-    return maybe_flash_matmul(h.astype(x.dtype), p["w_down"])
+    return maybe_flash_matmul(h.astype(x.dtype), p["w_down"],
+                              axis_name=axis_name)
 
 
 def gelu_ffn_init(key, d, f, dtype=jnp.bfloat16) -> Params:
@@ -492,9 +499,11 @@ def gelu_ffn_init(key, d, f, dtype=jnp.bfloat16) -> Params:
             "w_down": dense_init(ks[1], f, d, dtype)}
 
 
-def gelu_ffn_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+def gelu_ffn_apply(p: Params, x: jnp.ndarray,
+                   axis_name: str | None = None) -> jnp.ndarray:
     h = jax.nn.gelu(maybe_flash_matmul(x, p["w_up"]).astype(jnp.float32))
-    return maybe_flash_matmul(h.astype(x.dtype), p["w_down"])
+    return maybe_flash_matmul(h.astype(x.dtype), p["w_down"],
+                              axis_name=axis_name)
 
 
 # --- losses ------------------------------------------------------------------

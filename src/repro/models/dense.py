@@ -76,10 +76,10 @@ def init(cfg, key) -> dict:
     return params
 
 
-def _ffn_apply(cfg, p, x):
+def _ffn_apply(cfg, p, x, axis_name=None):
     if cfg.ffn_type == "swiglu":
-        return cm.swiglu_apply(p, x)
-    return cm.gelu_ffn_apply(p, x)
+        return cm.swiglu_apply(p, x, axis_name=axis_name)
+    return cm.gelu_ffn_apply(p, x, axis_name=axis_name)
 
 
 def _layer_fwd(cfg, x, lp, positions, collect_kv=True):

@@ -69,8 +69,11 @@ def init(cfg, key) -> dict:
     }
 
 
-def _expert_matmul(x, w):
-    """x: (G, E, C, K) @ w: (E, K, N) -> (G, E, C, N); flash-tier aware."""
+def _expert_matmul(x, w, out_dtype=None):
+    """x: (G, E, C, K) @ w: (E, K, N) -> (G, E, C, N); flash-tier aware.
+    ``out_dtype=float32`` keeps PARTIAL products full-precision for a
+    tensor-parallel psum (summing bf16-rounded partials doubles error);
+    None = the legacy dtype (bf16 on flash tiers, x.dtype on arrays)."""
     g, e, c, k = x.shape
     if isinstance(w, PagedWeight):
         # Pool-paged expert bank (streamed serving): per-expert XLA gather
@@ -90,7 +93,8 @@ def _expert_matmul(x, w):
 
         out = jax.vmap(one)(xe, w.q_tbl, w.p_slots, w.s_slots)
         n = out.shape[-1]
-        return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).astype(jnp.bfloat16)
+        return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).astype(
+            out_dtype or jnp.bfloat16)
     if isinstance(w, FlashWeight):
         # Per-expert ERDPE over the stacked bank (XLA path: correction math
         # folds into the einsum; Pallas path is exercised per-expert in tests).
@@ -102,8 +106,10 @@ def _expert_matmul(x, w):
 
         out = jax.vmap(one)(xe, w.q, w.parity, w.scale)
         n = out.shape[-1]
-        return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).astype(jnp.bfloat16)
-    return jnp.einsum("geck,ekn->gecn", x, w.astype(x.dtype))
+        return out.reshape(e, g, c, n).transpose(1, 0, 2, 3).astype(
+            out_dtype or jnp.bfloat16)
+    out = jnp.einsum("geck,ekn->gecn", x, w.astype(x.dtype))
+    return out if out_dtype is None else out.astype(out_dtype)
 
 
 def _dispatch_group(cfg, xt, router, capacity_factor, dtype):
@@ -234,7 +240,7 @@ def serve_route(router, x, top_k: int, n_groups: int = 1,
     return jax.nn.softmax(gates, axis=-1), idx.astype(jnp.int32)
 
 
-def serve_expert_ffn(bank, x, gates, idx, slab_map=None):
+def serve_expert_ffn(bank, x, gates, idx, slab_map=None, axis_name=None):
     """Batched-expert SwiGLU over a full or partial expert bank.
 
     bank     : {"w_gate","w_up","w_down"} each (E_bank, K, N) FlashWeight
@@ -245,6 +251,11 @@ def serve_expert_ffn(bank, x, gates, idx, slab_map=None):
                (those assignments contribute 0 — the engine only leaves an
                expert unmapped for padding lanes, whose output is never
                read). None = identity (bank row e holds expert e).
+    axis_name: tensor-parallel expert FFN inside a shard_map — each shard's
+               slab holds the expert's d_ff/n_shards columns (gate/up
+               column-parallel, down row-parallel over the same slice), so
+               the down output is PARTIAL; kept f32 through the gate-
+               weighted combine (all linear) and completed by ONE psum.
     """
     s, t, d = x.shape
     k = idx.shape[-1]
@@ -265,10 +276,13 @@ def serve_expert_ffn(bank, x, gates, idx, slab_map=None):
     h_u = _expert_matmul(bb, bank["w_up"])
     h = (jax.nn.silu(h_g.astype(jnp.float32))
          * h_u.astype(jnp.float32)).astype(x.dtype)
-    out_buf = _expert_matmul(h, bank["w_down"])[0]            # (E, A, D)
+    down_dtype = jnp.float32 if axis_name is not None else None
+    out_buf = _expert_matmul(h, bank["w_down"], down_dtype)[0]  # (E, A, D)
     out_a = out_buf[jnp.where(ok, flat_row, 0), cols].astype(jnp.float32)
     out_a = jnp.where(ok[:, None], out_a, 0.0)
     out = (out_a * gates.reshape(a)[:, None]).reshape(s, t, k, d).sum(axis=2)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
     return out.astype(x.dtype)
 
 

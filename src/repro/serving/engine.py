@@ -56,6 +56,12 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                                     # jax >= 0.5 moved shard_map
+    from jax.experimental.shard_map import shard_map
+except ImportError:                      # pragma: no cover
+    from jax.shard_map import shard_map
 
 from repro.core import scheduler as sched
 from repro.core.erdpe import ExecMode, flash_matmul
@@ -124,12 +130,17 @@ def _qkv(cfg, lp, fl, x, positions, bitmap):
 
 
 def _chunk_layer(cfg, exec_mode, bitmap, lengths, positions, block_tables,
-                 x, layer):
+                 x, layer, axis_name=None):
     """One mixed-batch layer over all slots' chunk lanes. ``layer`` =
     (params slice, flash attn copy slice, read-only paged K/V pool slices).
     The pool is never written here — the chunk's own K/V enters through the
     intra-chunk causal term of chunk_attention_paged, so the scan stays
-    write-free and the step does ONE batched paged scatter after it."""
+    write-free and the step does ONE batched paged scatter after it.
+
+    ``axis_name`` = tensor-parallel FFN (DESIGN.md §11): attention and the
+    bitmap-dispatched projections run REPLICATED (every shard holds the
+    DRAM tier and the attn flash copies whole), the FFN consumes the
+    shard-LOCAL page tables and finishes with ONE psum."""
     lp, fl, kc, vc = layer
     ap = lp["attn"]
     b, t, _ = x.shape                                    # t == chunk_tokens
@@ -139,7 +150,8 @@ def _chunk_layer(cfg, exec_mode, bitmap, lengths, positions, block_tables,
         window=cfg.local_window, mode=exec_mode)
     out = _proj(attn.reshape(b, t, -1), ap["wo"], fl["wo"], bitmap)
     x = x + out
-    x = x + dense._ffn_apply(cfg, lp["ffn"], dense._norm(cfg, x, lp, "ln2"))
+    x = x + dense._ffn_apply(cfg, lp["ffn"], dense._norm(cfg, x, lp, "ln2"),
+                             axis_name=axis_name)
     return x, (k, v)
 
 
@@ -202,14 +214,43 @@ def _moe_expert_impl(x, h, gates, idx, slab, slab_map):
     return x + moe_mod.serve_expert_ffn(slab, h, gates, idx, slab_map)
 
 
-def _moe_expert_paged_impl(kn, x, h, gates, idx, slab, slab_map, pool_buf):
+def _moe_expert_paged_impl(kn, x, h, gates, idx, slab, slab_map, pool_buf,
+                           axis_name=None):
     """Pool-paged expert half: the slab is only PAGE TABLES (e_slab,)-
     stacked per param; the expert weights stay raw store pages in
     ``pool_buf`` and the batched-expert FFN gathers them in place —
     no per-layer slab re-stack, no host assembly. ``kn`` carries the
-    static per-param (K, N)."""
+    static per-param (K, N) — shard-LOCAL under tensor parallelism, where
+    ``axis_name`` closes each expert's contraction with one psum."""
     bank = {name: _paged(pool_buf, t, kn[name]) for name, t in slab.items()}
-    return x + moe_mod.serve_expert_ffn(bank, h, gates, idx, slab_map)
+    return x + moe_mod.serve_expert_ffn(bank, h, gates, idx, slab_map,
+                                        axis_name=axis_name)
+
+
+def _moe_fused_impl(cfg, exec_mode, kn, layers_dram, k_pool, v_pool, x, h,
+                    gates, idx, slab, slab_map, pool_buf, positions,
+                    ctx_lens, block_tables, lo, axis_name=None):
+    """FUSED streamed-MoE trace: the EXPERT half of layer ``lo - 1``
+    chained into the attention+router half of layer ``lo`` — one jitted
+    dispatch where the per-layer loop used to make two. The host expert-id
+    handoff still sits between consecutive fused calls (layer ``lo``'s
+    routing leaves this call, its expert set enters the next), so nothing
+    about the expert-bitmap discipline changes — only the dispatch count
+    halves. Layer 0 has no trailing expert half: the engine passes the
+    ZERO slab (all-(-1) ``slab_map`` zeroes every assignment, so the
+    expert term contributes exactly 0 and ``x`` passes through)."""
+    x = _moe_expert_paged_impl(kn, x, h, gates, idx, slab, slab_map,
+                               pool_buf, axis_name=axis_name)
+    # Barrier between the halves: without it XLA fuses the expert combine
+    # into the attention prologue and carries the residual in f32 past the
+    # bf16 handoff, drifting one ulp per layer off the split-dispatch plane
+    # (and off the resident engine's greedy tokens). The barrier pins the
+    # boundary activation to its stated dtype, keeping fused == split
+    # bit-exact at half the dispatch count.
+    x = jax.lax.optimization_barrier(x)
+    return _moe_attn_router_impl(cfg, exec_mode, layers_dram, k_pool,
+                                 v_pool, x, positions, ctx_lens,
+                                 block_tables, lo)
 
 
 def _embed_chunk(cfg, params, lengths, tokens, q_lens):
@@ -416,14 +457,20 @@ def _paged(pool_buf, tbl, kn):
 
 def _stream_group_impl(cfg, exec_mode, kv_aware, group_size, shapes,
                        layers_dram, window, pool_buf, k_pool, v_pool, x,
-                       positions, ctx_lens, block_tables, bitmap, lo):
+                       positions, ctx_lens, block_tables, bitmap, lo,
+                       axis_name=None):
     """One STREAMED layer group — the same per-layer math as the monolithic
     step's scan, but the flash-tier params arrive as PAGE TABLES into
     ``pool_buf`` (the device page pool the LayerStreamer fills from the
     PageStore — raw 16 KiB store pages, consumed in place by the paged
     ERDPE). ``shapes`` carries each param's static (K, N); ``lo`` — the
     group's first layer — is a traced scalar, so every group of every step
-    replays ONE trace."""
+    replays ONE trace.
+
+    Under tensor parallelism (DESIGN.md §11) this body runs inside a
+    ``shard_map``: ``pool_buf`` is the shard-LOCAL page rows, ``shapes``
+    the shard-LOCAL (K, N), and ``axis_name`` closes each layer's FFN
+    with one psum."""
     bm = bitmap if kv_aware else None
 
     def sl(a):
@@ -443,7 +490,8 @@ def _stream_group_impl(cfg, exec_mode, kv_aware, group_size, shapes,
         fl_attn = {k: _paged(pool_buf, t, shapes["attn"][k])
                    for k, t in tf_attn.items()}
         return _chunk_layer(cfg, exec_mode, bm, ctx_lens, positions,
-                            block_tables, x, (lp, fl_attn, kcl, vcl))
+                            block_tables, x, (lp, fl_attn, kcl, vcl),
+                            axis_name=axis_name)
 
     x, (k_new, v_new) = jax.lax.scan(
         body, x, (lp_g, window["ffn"], window["attn"], kc, vc))
@@ -541,6 +589,8 @@ class Engine:
         if self.streamed:
             from repro.store.streamer import StreamConfig
             self.stream_cfg = stream_cfg or StreamConfig()
+            self.mesh = self._make_mesh(exec_mode)
+            self._entry_plans: dict = {}
             self.attn_flash = None
             if self.streamed_moe:
                 self._init_streamed_moe(max_slots)
@@ -548,6 +598,7 @@ class Engine:
                 self._init_streamed(params, rber, seed)
         else:
             self.stream_cfg = None
+            self.mesh = None
             self.attn_flash = (None if cfg.family == "moe"
                                else self._flash_attn_copy(params, rber, seed))
         h = sched_cfg.h if sched_cfg else 32
@@ -627,12 +678,113 @@ class Engine:
 
     _ATTN_FLASH_KEYS = ATTN_FLASH_KEYS   # shared with deploy --store
 
+    # --- tensor-parallel streamed serving (DESIGN.md §11) ---------------------
+
+    def _make_mesh(self, exec_mode):
+        """The "model" mesh behind ``StreamConfig.n_shards`` (None when
+        unsharded). Sharded serving runs the XLA data plane: the paged
+        Pallas kernel has no shard_map lowering yet."""
+        sc = self.stream_cfg
+        if sc.n_shards <= 1:
+            return None
+        if exec_mode == ExecMode.PALLAS:
+            raise ValueError(
+                "n_shards > 1 serves through the XLA data plane "
+                "(exec_mode=XLA); the paged Pallas kernel has no shard_map "
+                "lowering yet")
+        from repro.launch.mesh import make_model_mesh
+        return make_model_mesh(sc.n_shards)
+
+    def _entry_plan(self, name: str):
+        """ShardPlan for one store entry (sharded mode only), memoized —
+        the same plan the ShardedWeightPagePool derives, computed here too
+        because pool SIZING needs per-shard page counts before the pool
+        exists."""
+        plan = self._entry_plans.get(name)
+        if plan is None:
+            from repro.launch.sharding import tp_shard_axis
+            plan = self.store.shard_entry(name, self.stream_cfg.n_shards,
+                                          tp_shard_axis(name))
+            self._entry_plans[name] = plan
+        return plan
+
+    def _entry_pages_local(self, name: str) -> int:
+        """Physical pool pages entry ``name`` occupies PER SHARD."""
+        if self.mesh is None:
+            return self.store.entry_pages(name)
+        p = self._entry_plan(name)
+        pb = self.store.page_bytes
+        return (len(p.q_pages[0]) + -(-p.parity_nbytes // pb)
+                + -(-p.scale_nbytes // pb))
+
+    def _entry_nbytes_local(self, name: str) -> int:
+        """Payload bytes entry ``name`` occupies PER SHARD."""
+        if self.mesh is None:
+            return self.store.entry_nbytes(name)
+        return self._entry_plan(name).local_payload_bytes
+
+    def _entry_kn(self, name: str) -> tuple:
+        """The (K, N) the data plane binds for entry ``name`` — the full
+        matrix unsharded, the shard-LOCAL partition under TP."""
+        if self.mesh is None:
+            return tuple(self.store.table[name]["q"].shape)
+        return tuple(self._entry_plan(name).local_kn)
+
+    def _tbl_dims(self, name: str) -> tuple:
+        """(q-table grid, parity pages, scale pages) of one entry's pool
+        page tables — the shapes the jitted traces bind."""
+        if self.mesh is None:
+            comp = self.store.table[name]
+            return (tuple(comp["q"].grid), len(comp["parity"].pages),
+                    len(comp["scale"].pages))
+        p = self._entry_plan(name)
+        pb = self.store.page_bytes
+        return (tuple(p.local_grid), -(-p.parity_nbytes // pb),
+                -(-p.scale_nbytes // pb))
+
+    def _make_wpool(self, n_pages: int):
+        """The device weight page pool — shard-partitioned over the mesh
+        when TP serving is on (``n_pages`` is then PER-SHARD slots)."""
+        from repro.store.page_pool import (ShardedWeightPagePool,
+                                           WeightPagePool)
+        if self.mesh is None:
+            return WeightPagePool(self.store, n_pages, donate=True)
+        return ShardedWeightPagePool(self.store, n_pages, self.mesh,
+                                     donate=True)
+
+    def _put_replicated(self, tree):
+        """Commit a pytree replicated over the mesh. The mesh jits reject
+        arrays COMMITTED to a single device, and leaving persistent inputs
+        uncommitted would re-replicate them every call — so everything the
+        step reads every step (DRAM tier, lm_head) lands here once."""
+        if self.mesh is None:
+            return tree
+        sh = NamedSharding(self.mesh, P())
+        return jax.tree.map(lambda a: jax.device_put(a, sh), tree)
+
+    def _check_shardable(self, names):
+        """Refuse silent replication of entries the TP rules say must
+        shard: the FFN psum is unconditional under TP, so a replicated
+        w_gate/w_up/w_down would overcount the product n_shards times."""
+        if self.mesh is None:
+            return
+        from repro.launch.sharding import tp_shard_axis
+        bad = sorted({n.partition("@")[0] for n in names
+                      if tp_shard_axis(n) is not None
+                      and self._entry_plan(n).axis is None})
+        if bad:
+            s = self.stream_cfg.n_shards
+            raise ValueError(
+                f"n_shards={s} cannot partition {bad}: the sharded matrix "
+                f"dim must divide into {s} whole 128-wide tile columns/rows "
+                "(make d_ff/d_model a multiple of 128*n_shards, or lower "
+                "n_shards)")
+
     def _init_streamed(self, raw_params, rber, seed):
         """Flash tier lives in the PageStore: program the per-layer attn
         flash copies next to deploy()'s FFN/lm_head entries, split the DRAM
         remainder out of the tiered pytree, and stand up the residency
         cache + layer streamer under the device weight budget."""
-        from repro.store.page_pool import WeightPagePool
         from repro.store.pagestore import StoreRef, drop_store_refs
         from repro.store.streamer import LayerStreamer, ResidencyCache
 
@@ -663,11 +815,14 @@ class Engine:
                              f"(layers/ffn/* + lm_head); stray flash leaves "
                              f"would silently never be fetched: {stray}")
         # DRAM-resident halves of the tiered pytree, fed to the jitted fns
-        self._layers_dram = drop_store_refs(self.params["layers"])
-        self._dram_params = {k: self.params[k]
-                             for k in ("embed", "pos_embed", "final_norm")
-                             if k in self.params}
+        self._layers_dram = self._put_replicated(
+            drop_store_refs(self.params["layers"]))
+        self._dram_params = self._put_replicated(
+            {k: self.params[k]
+             for k in ("embed", "pos_embed", "final_norm")
+             if k in self.params})
         self.n_groups = cfg.n_layers // sc.group_size
+        self._check_shardable(self._group_entries(0))
 
         group_bytes = max(
             sum(self.store.entry_nbytes(n) for n in self._group_entries(g))
@@ -694,26 +849,54 @@ class Engine:
         # one retiring transient; capped at the whole tier. Budget
         # ACCOUNTING stays payload-byte everywhere — this only sizes the
         # physical backing (with _grow as the overflow valve).
+        # Sharded serving: page counts/bytes below are PER-SHARD (the pool
+        # is shard-local backing) while the cache budget stays AGGREGATE;
+        # the clamp below then re-bounds the cache so each shard's backing
+        # pages fit its ~budget/n_shards share (StreamConfig.n_shards).
         group_names = [self._group_entries(g) for g in range(self.n_groups)]
-        group_pages = [sum(self.store.entry_pages(n) for n in names)
+        group_pages = [sum(self._entry_pages_local(n) for n in names)
                        for names in group_names]
         tier_pages = sum(group_pages)
         pb = self.store.page_bytes
-        worst = max(self.store.entry_pages(n) * pb
-                    / max(self.store.entry_nbytes(n), 1)
-                    for names in group_names for n in names)
+        # LOCAL pool pages per GLOBAL cached payload byte, at WINDOW
+        # granularity: the cache charges aggregate payload bytes per
+        # window, and a shard's backing pages don't split evenly —
+        # replicated entries (attention) keep their FULL pages on every
+        # shard — so the conversion uses whole-window local-pages /
+        # global-bytes ratios, never a 1/n_shards budget split (which
+        # undersizes the pool, and a mid-run grow costs a retrace).
+        worst = max(gp * pb
+                    / max(sum(self.store.entry_nbytes(n) for n in names), 1)
+                    for gp, names in zip(group_pages, group_names))
+        # trace-static reservation: in-flight prefetch windows + one
+        # retiring transient, in (local) pool pages — surfaced in
+        # stream_stats so budget gates can separate it from cache bytes
+        self._pool_reserve_pages = \
+            (sc.prefetch_depth + 1) * max(group_pages)
+        if cache_cap is not None and sc.n_shards > 1:
+            # the per-DEVICE bound the mesh divides (each device holds
+            # ~budget/n_shards): clamp the cache's payload capacity so one
+            # shard's cache-backing pages fit its budget share — the local
+            # pool then never exceeds budget/n_shards + the reserve above.
+            cache_cap = min(cache_cap, int(sc.device_budget_bytes
+                                           / (sc.n_shards * worst)))
+            if cache_cap < lm_bytes:
+                raise ValueError(
+                    f"device_budget_bytes={sc.device_budget_bytes} over "
+                    f"{sc.n_shards} shards leaves a per-device share too "
+                    f"small for the pinned lm_head ({lm_bytes}B); raise "
+                    "the budget")
         if cache_cap is None:
             n_pages = tier_pages
         else:
             n_pages = min(tier_pages,
                           -(-int(worst * cache_cap) // pb)
-                          + (sc.prefetch_depth + 1) * max(group_pages))
-        self.wpool = WeightPagePool(self.store, n_pages, donate=True)
+                          + self._pool_reserve_pages)
+        self.wpool = self._make_wpool(n_pages)
         self._win_shapes = {
-            "ffn": {k: tuple(self.store.table[ref.entry(0)]["q"].shape)
+            "ffn": {k: self._entry_kn(ref.entry(0))
                     for k, ref in self._ffn_refs.items()},
-            "attn": {k: tuple(
-                        self.store.table[f"attn_flash/{k}@0"]["q"].shape)
+            "attn": {k: self._entry_kn(f"attn_flash/{k}@0")
                      for k in self._ATTN_FLASH_KEYS},
         }
         self.cache = ResidencyCache(cache_cap, on_evict=self._evict_window)
@@ -724,7 +907,7 @@ class Engine:
         # groups bound the stream's cold start and tail when they fit.
         # lm_head stays a device FlashWeight (finish_fn reads it whole every
         # step — residency, not rotation, so it skips the pool).
-        self._lm_head = self.store.get("lm_head")
+        self._lm_head = self._put_replicated(self.store.get("lm_head"))
         self.cache.insert("lm_head", self._lm_head, lm_bytes, pin=True)
         if sc.pin_all:
             for g in range(self.n_groups):
@@ -803,7 +986,6 @@ class Engine:
         per-layer expert SLAB is budget-accounted like the dense prefetch
         windows."""
         from repro.store.expert_cache import ExpertCache, ExpertPrefetcher
-        from repro.store.page_pool import WeightPagePool
         from repro.store.pagestore import StoreRef, drop_store_refs
 
         cfg, sc = self.cfg, self.stream_cfg
@@ -832,10 +1014,14 @@ class Engine:
             raise ValueError("MoE streamed mode expects the expert flash "
                              "layout (layers/moe/experts/* + lm_head); stray "
                              f"flash leaves would never be fetched: {stray}")
-        self._layers_dram = drop_store_refs(self.params["layers"])
-        self._dram_params = {k: self.params[k]
-                             for k in ("embed", "pos_embed", "final_norm")
-                             if k in self.params}
+        self._layers_dram = self._put_replicated(
+            drop_store_refs(self.params["layers"]))
+        self._dram_params = self._put_replicated(
+            {k: self.params[k]
+             for k in ("embed", "pos_embed", "final_norm")
+             if k in self.params})
+        self._check_shardable(
+            [ref.entry(0, 0) for ref in self._expert_refs.values()])
         self._expert_nbytes = [
             [sum(self.store.entry_nbytes(ref.entry(li, e))
                  for ref in self._expert_refs.values())
@@ -868,8 +1054,12 @@ class Engine:
         # budget converted at the worst payload->page ratio, plus in-flight
         # slack for the slab's misroute fetches and prefetcher traffic,
         # capped at the whole expert tier.
+        # (sharded: LOCAL pages per expert against the AGGREGATE expert-
+        # cache budget — like the dense plane, the conversion ratio is
+        # local-pages / global-bytes per whole expert, so replicated
+        # fallback entries are covered and the pool never grows mid-run)
         expert_pages = [
-            [sum(self.store.entry_pages(ref.entry(li, e))
+            [sum(self._entry_pages_local(ref.entry(li, e))
                  for ref in self._expert_refs.values())
              for e in range(cfg.n_experts)]
             for li in range(cfg.n_layers)]
@@ -880,22 +1070,55 @@ class Engine:
                     / max(self._expert_nbytes[li][e], 1)
                     for li in range(cfg.n_layers)
                     for e in range(cfg.n_experts))
+        # trace-static reservation: slab misroute fetches + prefetcher
+        # in-flight traffic, in (local) pool pages (see the dense twin)
+        self._pool_reserve_pages = 2 * self._e_slab * max_ep
+        if cache_cap is not None and sc.n_shards > 1:
+            # per-device bound, as in the dense plane: each shard's cache-
+            # backing pages must fit its ~budget/n_shards share
+            cache_cap = min(cache_cap, int(sc.device_budget_bytes
+                                           / (sc.n_shards * worst)))
+            if cache_cap < max_expert:
+                raise ValueError(
+                    f"device_budget_bytes={sc.device_budget_bytes} over "
+                    f"{sc.n_shards} shards leaves a per-device share too "
+                    f"small for one cacheable expert ({max_expert}B); "
+                    "raise the budget or shrink StreamConfig.expert_slab")
         if cache_cap is None:
             n_pages = tier_pages
         else:
             n_pages = min(tier_pages,
                           -(-int(worst * cache_cap) // pb)
-                          + 2 * self._e_slab * max_ep)
-        self.wpool = WeightPagePool(self.store, n_pages, donate=True)
+                          + self._pool_reserve_pages)
+        self.wpool = self._make_wpool(n_pages)
         self._expert_kn = {
-            name: tuple(self.store.table[ref.entry(0, 0)]["q"].shape)
+            name: self._entry_kn(ref.entry(0, 0))
             for name, ref in self._expert_refs.items()}
+        # Fused-trace zero expert half (DESIGN.md §9): layer 0's fused call
+        # carries an all-(-1) slab_map, which zeroes every assignment in
+        # serve_expert_ffn — so the page tables only need the right trace
+        # SHAPES (slot 0 is always a valid gather target) and the fused
+        # expert(l-1)+attn_router(l) jit replays ONE trace for all layers.
+        t = self.admission_cfg.chunk_tokens
+        zero_slab = {}
+        for name, ref in self._expert_refs.items():
+            grid, n_pp, n_sp = self._tbl_dims(ref.entry(0, 0))
+            zero_slab[name] = {
+                "q_tbl": jnp.zeros((self._e_slab,) + grid, jnp.int32),
+                "p_slots": jnp.zeros((self._e_slab, n_pp), jnp.int32),
+                "s_slots": jnp.zeros((self._e_slab, n_sp), jnp.int32)}
+        self._zero_expert = {
+            "h": jnp.zeros((max_slots, t, cfg.d_model), jnp.bfloat16),
+            "gates": jnp.zeros((max_slots, t, cfg.top_k), jnp.float32),
+            "idx": jnp.zeros((max_slots, t, cfg.top_k), jnp.int32),
+            "slab": zero_slab,
+            "slab_map": jnp.full((cfg.n_experts,), -1, jnp.int32)}
         self.expert_cache = ExpertCache(cache_cap, cfg.n_layers,
                                         cfg.n_experts, n_slots=max_slots,
                                         on_evict=self._evict_window)
         self.cache = self.expert_cache
         self.streamer = None             # dense group streamer unused here
-        self._lm_head = self.store.get("lm_head")
+        self._lm_head = self._put_replicated(self.store.get("lm_head"))
         if sc.pin_all:                   # fully-resident parity baseline
             for li in range(cfg.n_layers):
                 for e in range(cfg.n_experts):
@@ -1062,7 +1285,13 @@ class Engine:
         takes its layer offset as a TRACED scalar, so all groups share one
         trace; steady state is exactly 3 traces total — speculative mode
         included (drafting folds into the embed trace, verification into
-        the finish trace)."""
+        the finish trace).
+
+        Sharded (``StreamConfig.n_shards > 1``, DESIGN.md §11): the group
+        fn runs under ``shard_map`` — the pool buffer splits its page rows
+        over "model", everything else stays replicated, and the FFN's one
+        psum per layer is the step's only collective. Every jit pins its
+        outputs replicated so the carried serving state stays mesh-legal."""
         cfg = self.cfg
         spec_k = self.spec_cfg.k if self.spec_cfg else None
         proposer = self.proposer
@@ -1084,6 +1313,22 @@ class Engine:
                                    tokens, q_lens, hist, hist_lens,
                                    draft_cap)
 
+        jit_kw = {}
+        if self.mesh is not None:
+            from repro.launch.mesh import MODEL_AXIS
+            from repro.launch.sharding import stream_window_specs
+            specs = stream_window_specs(self.mesh)
+            rspec, pspec = specs["replicated"], specs["pool"]
+            # group args: (layers_dram, window, pool_buf, k, v, x,
+            # positions, ctx_lens, block_tables, bitmap, lo) — the pool
+            # buffer (index 2) is the only sharded operand.
+            group = shard_map(
+                functools.partial(group, axis_name=MODEL_AXIS),
+                mesh=self.mesh,
+                in_specs=(rspec, rspec, pspec) + (rspec,) * 8,
+                out_specs=rspec, check_rep=False)
+            jit_kw = {"out_shardings": NamedSharding(self.mesh, P())}
+
         def group_fn(*args):
             self._trace_count += 1
             return group(*args)
@@ -1093,9 +1338,10 @@ class Engine:
             return finish(*args)
 
         donate = (2,) if jax.default_backend() != "cpu" else ()
-        self._embed_fn = jax.jit(embed_fn)
-        self._group_fn = jax.jit(group_fn)
-        self._finish_fn = jax.jit(finish_fn, donate_argnums=donate)
+        self._embed_fn = jax.jit(embed_fn, **jit_kw)
+        self._group_fn = jax.jit(group_fn, **jit_kw)
+        self._finish_fn = jax.jit(finish_fn, donate_argnums=donate,
+                                  **jit_kw)
         self._step_fn = self._streamed_step
 
     def _streamed_step(self, params, attn_flash, state, tokens, q_lens,
@@ -1140,16 +1386,28 @@ class Engine:
 
     def _build_stream_fns_moe(self, exec_mode):
         """The expert-paged MoE data plane: FOUR jitted pieces (embed →
-        attention+router × L → expert-FFN × L → finish). The router must
-        run before its layer's expert weights can be NAMED, so the dense
-        group trace splits in two around the host expert-bitmap handoff;
-        both halves take the layer index as a traced scalar, so steady
-        state is exactly 4 traces (the dense discipline's 3, +1 for the
-        router handoff — asserted in tests/test_moe_serving.py)."""
+        FUSED[expert(l-1) + attention+router(l)] × L → final expert-FFN →
+        finish). The router must run before its layer's expert weights can
+        be NAMED, so the trace splits around the host expert-bitmap
+        handoff — but the two device halves that STRADDLE each handoff
+        (layer l-1's experts, layer l's attention+router) fuse into one
+        jitted call, halving per-step dispatches vs the split plane
+        (2L + 2 → L + 3 calls). Layer 0's fused call runs a ZERO expert
+        half (all-(-1) slab_map); the last layer's expert half has no
+        following attention and keeps its own trace. Both fused and expert
+        traces take the layer index as a traced scalar, so steady state is
+        exactly 4 traces (asserted in tests/test_moe_serving.py).
+
+        Sharded (``StreamConfig.n_shards > 1``, DESIGN.md §11): both
+        pool-consuming traces run under ``shard_map`` with the pool's page
+        rows split over "model"; each expert's down-projection psum is the
+        only collective."""
         cfg = self.cfg
         spec_k = self.spec_cfg.k if self.spec_cfg else None
         proposer = self.proposer
-        attn_router = functools.partial(_moe_attn_router_impl, cfg, exec_mode)
+        fused = functools.partial(_moe_fused_impl, cfg, exec_mode,
+                                  self._expert_kn)
+        expert = functools.partial(_moe_expert_paged_impl, self._expert_kn)
         finish = functools.partial(_finish_step, cfg, self.sched_cfg,
                                    self.sample_cfg, self.kv_aware, spec_k)
 
@@ -1165,11 +1423,31 @@ class Engine:
                                    tokens, q_lens, hist, hist_lens,
                                    draft_cap)
 
-        def attn_router_fn(*args):
-            self._trace_count += 1
-            return attn_router(*args)
+        jit_kw = {}
+        if self.mesh is not None:
+            from repro.launch.mesh import MODEL_AXIS
+            from repro.launch.sharding import stream_window_specs
+            specs = stream_window_specs(self.mesh)
+            rspec, pspec = specs["replicated"], specs["pool"]
+            # fused args: (layers_dram, k, v, x, h, gates, idx, slab,
+            # slab_map, pool_buf, positions, ctx_lens, block_tables, lo);
+            # expert args: (x, h, gates, idx, slab, slab_map, pool_buf) —
+            # the pool buffer is the only sharded operand of either.
+            fused = shard_map(
+                functools.partial(fused, axis_name=MODEL_AXIS),
+                mesh=self.mesh,
+                in_specs=(rspec,) * 9 + (pspec,) + (rspec,) * 4,
+                out_specs=rspec, check_rep=False)
+            expert = shard_map(
+                functools.partial(expert, axis_name=MODEL_AXIS),
+                mesh=self.mesh,
+                in_specs=(rspec,) * 6 + (pspec,),
+                out_specs=rspec, check_rep=False)
+            jit_kw = {"out_shardings": NamedSharding(self.mesh, P())}
 
-        expert = functools.partial(_moe_expert_paged_impl, self._expert_kn)
+        def fused_fn(*args):
+            self._trace_count += 1
+            return fused(*args)
 
         def expert_fn(*args):
             self._trace_count += 1
@@ -1180,10 +1458,11 @@ class Engine:
             return finish(*args)
 
         donate = (2,) if jax.default_backend() != "cpu" else ()
-        self._embed_fn = jax.jit(embed_fn)
-        self._attn_router_fn = jax.jit(attn_router_fn)
-        self._expert_fn = jax.jit(expert_fn)
-        self._finish_fn = jax.jit(finish_fn, donate_argnums=donate)
+        self._embed_fn = jax.jit(embed_fn, **jit_kw)
+        self._fused_fn = jax.jit(fused_fn, **jit_kw)
+        self._expert_fn = jax.jit(expert_fn, **jit_kw)
+        self._finish_fn = jax.jit(finish_fn, donate_argnums=donate,
+                                  **jit_kw)
         self._step_fn = self._streamed_step_moe
 
     def _streamed_step_moe(self, params, attn_flash, state, tokens, q_lens,
@@ -1195,9 +1474,12 @@ class Engine:
         bytes, the MoE analog of Algorithm 2's plane-bitmap handoff), the
         routed experts are gathered from the ExpertCache (miss = misroute
         stall), and the expert half consumes the assembled device slab.
-        While layer *l* computes, the prefetch worker fetches the
-        router-history predictor's picks for layer *l+1* (wrapping to
-        layer 0 for the next step)."""
+        The expert half of layer *l* dispatches FUSED with the attention+
+        router half of layer *l+1* (one jitted call per handoff instead of
+        two); layer 0 rides a zero expert half, the last layer's experts
+        dispatch alone. While layer *l* computes, the prefetch worker
+        fetches the router-history predictor's picks for layer *l+1*
+        (wrapping to layer 0 for the next step)."""
         del params, attn_flash                       # store-resident tier
         cfg, cache = self.cfg, self.expert_cache
         if self.spec_cfg is None:
@@ -1225,12 +1507,18 @@ class Engine:
             for li in range(cfg.n_layers):
                 self._request_prefetch(li, self._e_slab, slots=active)
         ks, vs = [], []
+        # layer 0's attention+router rides the SAME fused trace as every
+        # other layer, paired with the zero expert half (identity on x).
+        ze = self._zero_expert
+        x, h, gates, idx, k_l, v_l = self.wpool.dispatch(
+            lambda buf: self._fused_fn(
+                self._layers_dram, state["k"], state["v"], x, ze["h"],
+                ze["gates"], ze["idx"], ze["slab"], ze["slab_map"], buf,
+                positions, ctx_lens, block_tables, jnp.int32(0)))
+        ks.append(k_l)
+        vs.append(v_l)
         for li in range(cfg.n_layers):
-            lo = jnp.int32(li)
-            x, h, gates, idx, k_l, v_l = self._attn_router_fn(
-                self._layers_dram, state["k"], state["v"], x, positions,
-                ctx_lens, block_tables, lo)
-            idx_host = np.asarray(idx)
+            idx_host = np.asarray(idx)               # layer li's routing
             by_slot = sched.routed_experts_by_slot(idx_host, lane_bound)
             routed = sched.routed_experts(idx_host, lane_bound)
             cache.observe(li, routed)
@@ -1248,16 +1536,24 @@ class Engine:
             # dispatch under the pool lock: the prefetch worker's donating
             # (in-place) uploads delete the buffer handle they consume, so
             # snapshot-and-dispatch must be atomic against them.
-            x = self.wpool.dispatch(lambda buf: self._expert_fn(
-                x, h, gates, idx, slab, slab_map, buf))
+            if li + 1 < cfg.n_layers:
+                # layer li's experts fused with layer li+1's attn+router
+                x, h, gates, idx, k_l, v_l = self.wpool.dispatch(
+                    lambda buf: self._fused_fn(
+                        self._layers_dram, state["k"], state["v"], x, h,
+                        gates, idx, slab, slab_map, buf, positions,
+                        ctx_lens, block_tables, jnp.int32(li + 1)))
+                ks.append(k_l)
+                vs.append(v_l)
+            else:                        # last layer: expert half alone
+                x = self.wpool.dispatch(lambda buf: self._expert_fn(
+                    x, h, gates, idx, slab, slab_map, buf))
             # dispatch has captured the pool buffer: NOW the held
             # entries can release and the rejected transients can free.
             for hk in held:
                 cache.release(hk)
             for slots in transients:
                 self.wpool.free(slots)
-            ks.append(k_l)
-            vs.append(v_l)
         k_new = jnp.stack(ks, axis=0)                # (L, slots, T, KV, Dh)
         v_new = jnp.stack(vs, axis=0)
         args = (self._dram_params["final_norm"], self._lm_head, state, x,
@@ -1317,6 +1613,9 @@ class Engine:
             "slot_hit_rates": c.get("slot_hit_rates", []),
             "max_routed_seen": self._max_routed_seen,
             "expert_budget_retuned": self._auto_expert_done,
+            "pool_reserve_bytes":
+                self._pool_reserve_pages * self.store.page_bytes,
+            **self.prefetcher.stats(),
             **self.wpool.stats(),
         }
 
@@ -1407,6 +1706,8 @@ class Engine:
         else:
             out = {**self.streamer.stats(), **self.store.stats(),
                    **self.wpool.stats(),
+                   "pool_reserve_bytes":
+                       self._pool_reserve_pages * self.store.page_bytes,
                    "prefetch_depth": self.streamer.prefetch_depth}
         if self.spec_cfg is not None:
             out.update(self.spec_stats())

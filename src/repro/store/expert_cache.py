@@ -240,6 +240,14 @@ class ExpertPrefetcher:
         self._batch_fetch = batch_fetch
         self._q: "queue.Queue" = queue.Queue()
         self._inflight: set = set()
+        # fetch-round accounting: ``batches`` counts worker fetch rounds
+        # (with batch_fetch, each round is ONE staged pool transfer — per
+        # shard under a sharded pool), ``batched_keys`` the keys they
+        # carried. batched_keys/batches is the amortization the benchmark
+        # gates: a burst of predictions must not degenerate into
+        # one-transfer-per-expert.
+        self.batches = 0
+        self.batched_keys = 0
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -276,6 +284,10 @@ class ExpertPrefetcher:
                 if any(k is None for k in keys):
                     return
                 todo = [k for k in keys if k not in self.cache]
+                if todo:
+                    with self._lock:
+                        self.batches += 1
+                        self.batched_keys += len(todo)
                 if todo and self._batch_fetch is not None:
                     fetched = self._batch_fetch(todo)
                 else:
@@ -294,6 +306,11 @@ class ExpertPrefetcher:
                 with self._lock:
                     for key in keys:
                         self._inflight.discard(key)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"prefetch_batches": self.batches,
+                    "prefetch_batched_keys": self.batched_keys}
 
     def drain(self, timeout: float = 5.0):
         """Block until the queue is empty and nothing is in flight

@@ -42,11 +42,17 @@ Two update disciplines, chosen at construction:
 from __future__ import annotations
 
 import threading
-from typing import Any, Iterable
+from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:                                      # moved out of experimental in 0.6
+    from jax.experimental.shard_map import shard_map
+except ImportError:                       # pragma: no cover
+    from jax.shard_map import shard_map
 
 # In-place page scatter for donate=True pools: donating the buffer lets
 # XLA write only the new rows (measured ~170x cheaper than the functional
@@ -54,6 +60,27 @@ import numpy as np
 # pool shares one jit cache (retraces only on a new staged-page count).
 _scatter_donate = jax.jit(lambda buf, slots, pages: buf.at[slots].set(pages),
                           donate_argnums=(0,))
+
+
+def pinned_host_sharding():
+    """The page-locked host staging target for upload H2D, or None.
+
+    Real accelerators expose a ``pinned_host`` memory space; staging the
+    window there turns the device copy into an async DMA out of locked
+    memory (the classic memcpy-into-pinned + async-H2D pipeline). The CPU
+    backend has no DMA to hide, so the path degrades to a no-op fallback —
+    the plain ``device_put`` the pool always did."""
+    if jax.default_backend() == "cpu":
+        return None
+    try:
+        dev = jax.local_devices()[0]
+        kinds = {m.kind for m in dev.addressable_memories()}
+        if "pinned_host" not in kinds:
+            return None
+        return jax.sharding.SingleDeviceSharding(dev,
+                                                 memory_kind="pinned_host")
+    except Exception:                     # old jaxlib without memories API
+        return None
 
 
 class WeightPagePool:
@@ -69,7 +96,21 @@ class WeightPagePool:
         self._allocated: set[int] = set()
         self._lock = threading.Lock()
         self.grows = 0
+        self._init_staging()
         self.reset_counters()
+
+    def _init_staging(self):
+        """Pinned-staging transfer state: a REUSABLE host staging buffer
+        (grown geometrically, never shrunk) that ``read_pages`` fills in
+        place, bounced through page-locked memory so the device copy is an
+        async DMA. Only armed when a ``pinned_host`` space exists: reusing
+        the buffer is only safe once the bytes have landed in jax-owned
+        pinned memory (the bounce blocks on that host-side memcpy; the
+        H2D out of it stays async). Without one — the CPU backend — the
+        upload path is the unchanged one-shot ``device_put``."""
+        self._pinned = pinned_host_sharding()
+        self._staging: np.ndarray | None = None
+        self.staging_allocs = 0
 
     def reset_counters(self):
         """Zero the transfer counters (init-time pin uploads are deployment,
@@ -78,6 +119,38 @@ class WeightPagePool:
             self.uploads = 0
             self.pages_staged = 0
             self.bytes_staged = 0
+            self.pinned_uploads = 0
+            self.pinned_fallbacks = 0
+
+    def _stage_host(self, n_rows: int) -> np.ndarray:
+        """First ``n_rows`` page rows of the reusable staging buffer."""
+        if self._staging is None or self._staging.shape[0] < n_rows:
+            cap = max(n_rows, 2 * (0 if self._staging is None
+                                   else self._staging.shape[0]))
+            self._staging = np.empty((cap, self.page_bytes), np.uint8)
+            self.staging_allocs += 1
+        return self._staging[:n_rows]
+
+    def _read_staged(self, ids: np.ndarray) -> jnp.ndarray:
+        """Store pages -> device array, through the pinned bounce when one
+        is armed. The pinned hop blocks only on the host->pinned memcpy
+        (making the staging rows reusable immediately); the pinned->device
+        DMA is dispatched async and the scatter orders after it."""
+        if self._pinned is None:
+            return jax.device_put(self.store.read_pages(ids).view(np.int8))
+        rows = self._stage_host(len(ids))
+        staged = self.store.read_pages(ids, out=rows).view(np.int8)
+        try:
+            locked = jax.device_put(staged, self._pinned)
+            locked.block_until_ready()
+            self.pinned_uploads += 1
+            return jax.device_put(locked, jax.local_devices()[0])
+        except Exception:
+            # driver said no (e.g. pinned pool exhausted): disarm for good,
+            # copy out of the reusable rows so nothing aliases them
+            self._pinned = None
+            self.pinned_fallbacks += 1
+            return jax.device_put(staged.copy())
 
     # --- allocator -----------------------------------------------------------
 
@@ -140,16 +213,16 @@ class WeightPagePool:
             slots = np.array([self._free.pop() for _ in range(len(ids))],
                              np.int32)
             self._allocated.update(int(s) for s in slots)
-            # one contiguous host staging read, one device_put, one scatter
-            staged = self.store.read_pages(ids).view(np.int8)
+            # one contiguous host staging read, one (possibly pinned-
+            # bounced) device transfer, one scatter
+            staged = self._read_staged(ids)
             if self.donate:
                 # in-place: the runtime sequences the write after every
                 # in-flight reader; the lock orders it against dispatch()
                 self.data = _scatter_donate(self.data, jnp.asarray(slots),
-                                            jax.device_put(staged))
+                                            staged)
             else:
-                self.data = self.data.at[jnp.asarray(slots)].set(
-                    jax.device_put(staged))
+                self.data = self.data.at[jnp.asarray(slots)].set(staged)
             self.uploads += 1
             self.pages_staged += int(ids.size)
             self.bytes_staged += int(ids.size) * self.page_bytes
@@ -202,4 +275,189 @@ class WeightPagePool:
                     "pool_uploads": self.uploads,
                     "pool_pages_staged": self.pages_staged,
                     "pool_bytes_staged": self.bytes_staged,
+                    "pool_pinned_uploads": self.pinned_uploads,
+                    "pool_pinned_fallbacks": self.pinned_fallbacks,
+                    "pool_staging_allocs": self.staging_allocs,
                     "pool_grows": self.grows}
+
+
+class ShardedWeightPagePool(WeightPagePool):
+    """The tensor-parallel pool: ONE logical pool whose pages live sharded
+    across the mesh's "model" axis, ``n_pages`` LOCAL slots per device.
+
+    The decisive simplification is SYMMETRIC slots: every shard uses the
+    same local slot ids for the same entry (per-shard page counts are equal
+    by the divisibility rule in ``PageStore.shard_entry``), so ONE host
+    free-list allocates for all shards at once and the returned page
+    tables are ordinary replicated host arrays in the exact unsharded
+    format — ``q_tbl`` over the shard-LOCAL grid with the shard-LOCAL
+    ``kn``, consumed unchanged by ``kernels/paged_ffn.py`` inside a
+    ``shard_map`` whose pool in_spec is ``P("model", None)``.
+
+    ``upload`` rotates a window as ONE staged transfer PER SHARD: one host
+    staging assembly ``(n_shards, n_slots, page_bytes)``, one sharded
+    ``device_put`` (XLA issues exactly one H2D per device), one donated
+    ``shard_map`` scatter. ``shard_transfers`` counts them — the benchmark
+    gate asserts transfers == n_shards x rotations.
+
+    Which entries split, and along which axis, is ``axis_of`` (default
+    ``launch.sharding.tp_shard_axis``): w_gate/w_up tile-column round-robin
+    (column-parallel), w_down tile-rows (row-parallel), attention copies /
+    routers replicated. Parity and scale runs follow their tiles
+    (``PageStore.shard_host_slices``)."""
+
+    def __init__(self, store: Any, n_pages: int, mesh,
+                 axis_of: Callable[[str], int | None] | None = None,
+                 donate: bool = True):
+        self.store = store
+        self.mesh = mesh
+        self.n_shards = int(mesh.shape["model"])
+        self.donate = bool(donate)
+        self.page_bytes = int(store.page_bytes)
+        self.n_pages = max(int(n_pages), 1)        # LOCAL slots per shard
+        if axis_of is None:
+            from repro.launch.sharding import tp_shard_axis
+            axis_of = tp_shard_axis
+        self._axis_of = axis_of
+        self._plans: dict[str, Any] = {}           # ShardPlan memo per entry
+        self._sh2 = NamedSharding(mesh, P("model", None))
+        self._sh3 = NamedSharding(mesh, P("model", None, None))
+        self.data = jax.device_put(
+            np.zeros((self.n_shards * self.n_pages, self.page_bytes),
+                     np.int8), self._sh2)
+        self._free = list(range(self.n_pages))[::-1]
+        self._allocated = set()
+        self._lock = threading.Lock()
+        self.grows = 0
+        # per-mesh jits (module-level sharing would leak meshes across tests)
+        self._scatter = jax.jit(
+            shard_map(lambda buf, slots, pages: buf.at[slots[0]].set(
+                pages[0]),
+                mesh=mesh,
+                in_specs=(P("model", None), P("model", None),
+                          P("model", None, None)),
+                out_specs=P("model", None), check_rep=False),
+            donate_argnums=(0,) if self.donate else ())
+        self._copy_grow = jax.jit(
+            shard_map(lambda nb, ob: nb.at[:ob.shape[0]].set(ob),
+                      mesh=mesh,
+                      in_specs=(P("model", None), P("model", None)),
+                      out_specs=P("model", None), check_rep=False),
+            donate_argnums=(0,))
+        self._init_staging()
+        self.reset_counters()
+
+    def reset_counters(self):
+        super().reset_counters()
+        with self._lock:
+            self.shard_transfers = 0
+
+    def _grow(self, need: int):
+        """Grow every shard's partition in lockstep (slot symmetry must
+        survive). Costs the jitted consumers a retrace, like the base."""
+        cap = max(2 * self.n_pages, self.n_pages + need)
+        new = jax.device_put(
+            np.zeros((self.n_shards * cap, self.page_bytes), np.int8),
+            self._sh2)
+        self.data = self._copy_grow(new, self.data)
+        self._free.extend(range(self.n_pages, cap))
+        self.n_pages = cap
+        self.grows += 1
+
+    def plan(self, name: str):
+        """The (memoized) ShardPlan for one entry — the page table is
+        write-once, so the round-robin partition never changes."""
+        p = self._plans.get(name)
+        if p is None:
+            p = self._plans[name] = self.store.shard_entry(
+                name, self.n_shards, self._axis_of(name))
+        return p
+
+    def upload(self, names: Iterable[str]) -> dict[str, dict]:
+        """Sharded window rotation: same contract as the base ``upload``
+        but the returned tables are shard-LOCAL (local ``q_tbl`` grid,
+        local ``kn``) and the transfer is one staged put per shard."""
+        names = list(names)
+        S = self.n_shards
+        rows_plan: list[tuple[str, str, int]] = []  # (name, comp, n_pages)
+        for name in names:
+            p = self.plan(name)
+            rows_plan += [
+                (name, "q", len(p.q_pages[0])),
+                (name, "parity", -(-p.parity_nbytes // self.page_bytes)),
+                (name, "scale", -(-p.scale_nbytes // self.page_bytes))]
+        n_slots = sum(n for _, _, n in rows_plan)
+        with self._lock:
+            if n_slots > len(self._free):
+                self._grow(n_slots - len(self._free))
+            slots = np.array([self._free.pop() for _ in range(n_slots)],
+                             np.int32)
+            self._allocated.update(int(s) for s in slots)
+            host = self._stage_shards(names, rows_plan, n_slots)
+            staged = jax.device_put(host.view(np.int8), self._sh3)
+            slot_rows = jax.device_put(np.tile(slots[None], (S, 1)),
+                                       self._sh2)
+            self.data = self._scatter(self.data, slot_rows, staged)
+            self.uploads += 1
+            self.shard_transfers += S
+            self.pages_staged += n_slots * S
+            self.bytes_staged += n_slots * S * self.page_bytes
+        out: dict[str, dict] = {}
+        off = 0
+        for name, comp, n in rows_plan:
+            span = slots[off:off + n]
+            off += n
+            p = self.plan(name)
+            tbl = out.setdefault(name, {})
+            if comp == "q":
+                tbl["q_tbl"] = span.reshape(p.local_grid).copy()
+                tbl["kn"] = tuple(p.local_kn)
+            elif comp == "parity":
+                tbl["p_slots"] = span.copy()
+            else:
+                tbl["s_slots"] = span.copy()
+        for name, tbl in out.items():
+            tbl["slots"] = np.concatenate(
+                [tbl["q_tbl"].reshape(-1), tbl["p_slots"], tbl["s_slots"]])
+        return out
+
+    def _stage_shards(self, names: list[str], rows_plan, n_slots: int
+                      ) -> np.ndarray:
+        """Assemble the (n_shards, n_slots, page_bytes) host staging for
+        one rotation. q pages read per shard (distinct global pages, each
+        read once); parity/scale sliced host-side by shard_host_slices
+        (pages read once, not once per shard); replicated entries read
+        once and broadcast into every shard's rows."""
+        S = self.n_shards
+        host = np.zeros((S, n_slots, self.page_bytes), np.uint8)
+        slices = {n: self.store.shard_host_slices(n, self.plan(n))
+                  for n in names}
+        off = 0
+        for name, comp, n in rows_plan:
+            p = self.plan(name)
+            if comp == "q":
+                if p.axis is None:
+                    host[:, off:off + n] = self.store.read_pages(
+                        p.q_pages[0])[None]
+                else:
+                    for s in range(S):
+                        self.store.read_pages(p.q_pages[s],
+                                              out=host[s, off:off + n])
+            else:
+                idx = 0 if comp == "parity" else 1
+                for s in range(S):
+                    flat = np.frombuffer(slices[name][s][idx].tobytes(),
+                                         np.uint8)
+                    host[s, off:off + n].reshape(-1)[:flat.size] = flat
+            off += n
+        return host
+
+    def stats(self) -> dict:
+        base = super().stats()
+        with self._lock:
+            base.update({
+                "pool_shards": self.n_shards,
+                "pool_shard_transfers": self.shard_transfers,
+                "pool_local_pages": self.n_pages,
+                "pool_local_bytes": self.n_pages * self.page_bytes})
+        return base

@@ -93,6 +93,59 @@ def graft_store_refs(tree, refs: dict) -> dict:
     return out
 
 
+def shard_tiles(grid: tuple, n_shards: int, axis: int):
+    """Round-robin partition of a (kt, nt) q-tile grid along ``axis``.
+
+    Tile column (axis=1) or row (axis=0) ``c`` goes to shard
+    ``c % n_shards`` — the plane-interleave discipline lifted to shards,
+    so consecutive tiles of one param stripe across shards exactly like
+    pages stripe across planes. Returns (per-shard flat tile-index arrays
+    in LOCAL row-major order, the local (kt, nt) grid). Raises when the
+    sharded axis is not divisible — the caller replicates instead.
+    """
+    kt, nt = grid
+    if axis not in (0, 1):
+        raise ValueError(f"shard axis must be 0 or 1, got {axis}")
+    if grid[axis] % n_shards:
+        raise ValueError(
+            f"grid {grid} axis {axis} ({grid[axis]} tiles) is not "
+            f"divisible by n_shards={n_shards}")
+    flat = np.arange(kt * nt).reshape(kt, nt)
+    if axis == 1:
+        parts = [flat[:, s::n_shards].reshape(-1) for s in range(n_shards)]
+        local = (kt, nt // n_shards)
+    else:
+        parts = [flat[s::n_shards, :].reshape(-1) for s in range(n_shards)]
+        local = (kt // n_shards, nt)
+    return parts, local
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """How ONE store entry splits across ``n_shards`` pool partitions.
+
+    ``axis`` None = replicated (every shard stages the full entry);
+    otherwise the q grid round-robins tile columns (axis=1, the N/d_ff
+    axis of w_gate/w_up) or tile rows (axis=0, the K axis of w_down) and
+    the parity/scale runs follow their tiles. ``q_pages[s]`` are GLOBAL
+    store page ids in shard ``s``'s local row-major order."""
+    axis: int | None
+    n_shards: int
+    kn: tuple                     # full logical (K, N)
+    local_kn: tuple               # per-shard logical (K, N)
+    local_grid: tuple             # per-shard (kt, nt)
+    q_pages: tuple                # per-shard np arrays of global page ids
+    parity_nbytes: int            # per-shard parity payload bytes
+    scale_nbytes: int             # per-shard scale payload bytes
+
+    @property
+    def local_payload_bytes(self) -> int:
+        """Per-shard payload (q + parity + scale) — the byte-balance the
+        partitioner property tests hold within one page of ideal."""
+        k, n = self.local_kn
+        return k * n + self.parity_nbytes + self.scale_nbytes
+
+
 @dataclasses.dataclass
 class _Component:
     """One serialized array of a parameter (q / parity / scale)."""
@@ -116,13 +169,20 @@ class PageStore:
     """Host-resident, page-granular store for the flash weight tier."""
 
     def __init__(self, n_planes: int = hw.NVLLM_8C.n_planes,
-                 page_bytes: int = PAGE_BYTES):
+                 page_bytes: int = PAGE_BYTES, n_shards: int = 1):
         self.n_planes = int(n_planes)
         if page_bytes != TILE * TILE:
             # the q layout is one 128x128 int8 tile per page; _put_tiled /
             # _get_tiled bake that in, so other page sizes would corrupt.
             raise ValueError(f"page_bytes must be {TILE * TILE} "
                              f"(one {TILE}x{TILE} int8 tile per page)")
+        # shard layout this store was built/validated for (1 = unsharded;
+        # an unsharded store still serves any mesh — the round-robin
+        # partition is computed at serve time). Validated against the
+        # plane-group count like the per-shard Alg.2 dispatch requires.
+        from repro.core.scheduler import shard_planes
+        shard_planes(self.n_planes, int(n_shards))    # raises if invalid
+        self.n_shards = int(n_shards)
         self.page_bytes = int(page_bytes)
         self.table: dict[str, dict[str, _Component]] = {}
         self._data = np.zeros((0, self.page_bytes), np.uint8)
@@ -218,14 +278,18 @@ class PageStore:
             raise IndexError(f"tile ({k_tile}, {n_tile}) outside grid {comp.grid}")
         return self.plane_of(comp.pages[k_tile * nt + n_tile])
 
-    def read_pages(self, ids) -> np.ndarray:
-        """Raw page reads (len(ids), page_bytes) — counts per-plane traffic."""
+    def read_pages(self, ids, out: np.ndarray | None = None) -> np.ndarray:
+        """Raw page reads (len(ids), page_bytes) — counts per-plane traffic.
+        ``out`` reads straight into a caller-owned (staging) buffer."""
         ids = np.asarray(ids, np.int64)
         with self._read_lock:
             np.add.at(self.plane_reads, ids % self.n_planes, 1)
             self.pages_read += ids.size
             self.bytes_read += ids.size * self.page_bytes
-        return self._data[ids]
+        if out is None:
+            return self._data[ids]
+        np.take(self._data, ids, axis=0, out=out)
+        return out
 
     def _get_flat(self, comp: _Component) -> np.ndarray:
         raw = self.read_pages(comp.pages).reshape(-1)
@@ -293,6 +357,79 @@ class PageStore:
                 lead=lead)
         return refs
 
+    # --- shard partitioner (tensor-parallel streamed serving) ----------------
+
+    def shard_entry(self, name: str, n_shards: int,
+                    axis: int | None) -> ShardPlan:
+        """The shard-aware page table for ONE entry: round-robin tile
+        partition of the q grid along ``axis`` (parity/scale byte runs
+        follow their tiles — sliceable because the (72, 64) Hamming
+        codewords are local to 8-row groups within one column). ``axis``
+        None, or a grid the shard count does not divide, replicates the
+        entry on every shard (the engine only shards the FFN matrices;
+        attn-flash copies and odd-shaped params ride along whole)."""
+        comp = self.table[name]["q"]
+        kt, nt = comp.grid
+        k, n = comp.shape
+        if axis is not None:
+            # an exact split needs whole tiles AND a whole logical dim —
+            # a padded edge tile would give shards unequal logical columns
+            if comp.grid[axis] % n_shards or comp.shape[axis] % n_shards \
+                    or comp.shape[axis] % TILE:
+                axis = None
+        parity = self.table[name]["parity"]
+        scale = self.table[name]["scale"]
+        parity_nb = int(np.prod(parity.shape))
+        scale_nb = int(np.prod(scale.shape)) * 4
+        pages = np.asarray(comp.pages, np.int64)
+        if axis is None:
+            return ShardPlan(
+                axis=None, n_shards=n_shards, kn=(k, n), local_kn=(k, n),
+                local_grid=(kt, nt),
+                q_pages=tuple(pages for _ in range(n_shards)),
+                parity_nbytes=parity_nb, scale_nbytes=scale_nb)
+        parts, local_grid = shard_tiles((kt, nt), n_shards, axis)
+        local_kn = ((k, n // n_shards) if axis == 1
+                    else (k // n_shards, n))
+        return ShardPlan(
+            axis=axis, n_shards=n_shards, kn=(k, n), local_kn=local_kn,
+            local_grid=local_grid,
+            q_pages=tuple(pages[p] for p in parts),
+            parity_nbytes=parity_nb // n_shards,
+            scale_nbytes=(scale_nb // n_shards if axis == 1 else scale_nb))
+
+    def shard_host_slices(self, name: str, plan: ShardPlan):
+        """Per-shard (parity, scale) HOST arrays for one entry — the byte
+        runs that follow their tiles to each shard's pool. One
+        ``read_pages`` per component (the page traffic is counted once,
+        not once per shard); the tile-grouped slicing keeps every local
+        array in its shard's LOCAL tile order, matching the q partition."""
+        e = self.table[name]
+        parity = self._get_flat(e["parity"])              # (K//8, N) uint8
+        scale = self._get_flat(e["scale"])                # (1, N) f32
+        if plan.axis is None:
+            return [(parity, scale)] * plan.n_shards
+        S = plan.n_shards
+        kt, nt = e["q"].grid
+        out = []
+        if plan.axis == 1:
+            p3 = parity.reshape(parity.shape[0], nt, TILE)
+            s3 = scale.reshape(scale.shape[0], nt, TILE)
+            for s in range(S):
+                out.append((
+                    np.ascontiguousarray(
+                        p3[:, s::S, :]).reshape(parity.shape[0], -1),
+                    np.ascontiguousarray(
+                        s3[:, s::S, :]).reshape(scale.shape[0], -1)))
+        else:
+            rows = TILE // 8                 # parity rows per k-tile
+            p3 = parity.reshape(kt, rows, parity.shape[1])
+            for s in range(S):
+                out.append((
+                    np.ascontiguousarray(p3[s::S]).reshape(-1, parity.shape[1]),
+                    scale))                  # row-parallel: scales replicate
+        return out
+
     # --- accounting -----------------------------------------------------------
 
     @property
@@ -313,12 +450,22 @@ class PageStore:
 
     # --- NAND die image (optional mmap backing) -------------------------------
 
-    def save(self, path: str) -> None:
-        """Persist the die image (raw pages) + page table (JSON sidecar)."""
+    def save(self, path: str, n_shards: int | None = None) -> None:
+        """Persist the die image (raw pages) + page table (JSON sidecar).
+
+        ``n_shards`` stamps the shard layout the image is intended for
+        (recorded in the JSON table; ``open`` refuses a disagreeing mesh).
+        It must divide the plane-group count — validated HERE, at save
+        time, so a bad layout fails the deploy job, not the serve job."""
+        from repro.core.scheduler import shard_planes
+        if n_shards is None:
+            n_shards = self.n_shards
+        shard_planes(self.n_planes, int(n_shards))    # raises if invalid
         self._data[:self.n_pages].tofile(path)
         meta = {
             "page_bytes": self.page_bytes, "n_planes": self.n_planes,
             "n_pages": self.n_pages, "total_bytes": self.total_bytes,
+            "n_shards": int(n_shards),
             "table": {name: {c: comp.to_json() for c, comp in e.items()}
                       for name, e in self.table.items()},
         }
@@ -326,11 +473,27 @@ class PageStore:
             json.dump(meta, f)
 
     @classmethod
-    def open(cls, path: str) -> "PageStore":
-        """mmap an existing die image: pages stay on disk until read."""
+    def open(cls, path: str, n_shards: int | None = None) -> "PageStore":
+        """mmap an existing die image: pages stay on disk until read.
+
+        ``n_shards`` is the shard count of the mesh about to serve this
+        image. A die image saved for an explicit shard layout refuses a
+        DIFFERENT mesh with a clear error here — NOT a bare mmap/OS error
+        later when a read-only image cannot be repartitioned. An image
+        saved unsharded (``n_shards=1``, the default) serves any mesh:
+        the round-robin partition is computed at serve time."""
         with open(path + ".meta.json") as f:
             meta = json.load(f)
-        self = cls(n_planes=meta["n_planes"], page_bytes=meta["page_bytes"])
+        saved = int(meta.get("n_shards", 1))
+        if n_shards is not None and saved != 1 and saved != int(n_shards):
+            raise ValueError(
+                f"die image {path} was saved for n_shards={saved} but the "
+                f"requested mesh has n_shards={int(n_shards)}; re-run "
+                "deploy --store with the matching shard count (the image "
+                "is read-only — it cannot be repartitioned in place)")
+        self = cls(n_planes=meta["n_planes"], page_bytes=meta["page_bytes"],
+                   n_shards=(int(n_shards) if n_shards is not None
+                             else saved))
         self.n_pages = meta["n_pages"]
         self.total_bytes = meta["total_bytes"]
         self.table = {name: {c: _Component.from_json(d)

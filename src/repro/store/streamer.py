@@ -63,6 +63,11 @@ class StreamConfig:
     # left over. Re-splits CACHE capacity only — the slab (trace shape) is
     # fixed at init.
     auto_expert_budget: bool = False
+    # tensor-parallel streamed serving (DESIGN.md §11): shard the page pool
+    # and the FFN compute across ``n_shards`` devices on the "model" mesh
+    # axis. 1 = the single-device planes, unchanged. ``device_budget_bytes``
+    # stays the AGGREGATE budget — each device holds ~budget/n_shards.
+    n_shards: int = 1
 
 
 @dataclasses.dataclass
