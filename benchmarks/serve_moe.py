@@ -17,9 +17,10 @@ weight budget, and guards the headline claims:
   * streamed bytes per token land at <= 0.5x the ALL-EXPERTS-streamed
     cost (what rotating every expert of every layer through the device
     window — the PR-3 dense discipline — would fetch);
-  * the expert-paged data plane replays exactly 4 traces (embed + router
-    half + expert half + finish), and the per-plane page counters feed a
-    positive analytical NAND time;
+  * the expert-paged data plane replays exactly 3 traces (head [embed +
+    attn/router(0)] + fused expert/attn handoff + tail [last experts +
+    finish]), and the per-plane page counters feed a positive analytical
+    NAND time;
   * the page-pool dataflow holds its floor: streamed decode runs at
     >= 0.5x the resident engine's tok/s at the 45 % budget (the ratio the
     host-slab assembly path could not reach), with every window crossing
@@ -172,8 +173,8 @@ def bench(report: Report) -> dict:
                st["expert_hit_rate"], 1e-9, 1.0)
     report.add("streamed bytes/token <= 0.5x all-experts-streamed cost",
                ratio, 0.0, 0.5)
-    report.add("expert-paged data plane traces (embed+router+expert+finish)",
-               results["traces"], 4, 4)
+    report.add("expert-paged data plane traces (head+fused+tail)",
+               results["traces"], 3, 3)
     report.add("analytical NAND seconds reported ( > 0 )",
                float(results["nand_seconds"] > 0), 1, 1)
     report.add("streamed tok/s >= 0.5x resident (page-pool floor)",

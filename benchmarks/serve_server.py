@@ -1,0 +1,200 @@
+"""ServeFront under open-loop Poisson traffic through the REAL HTTP
+frontend (ISSUE 8): clients arrive at a fixed rate regardless of server
+progress (open loop — the honest tail-latency protocol), POST
+/v1/generate, and read their SSE token streams off the wire.
+
+Two phases over the same server:
+
+  * COLD: every prompt unique — every request pays full prefill;
+  * PREFIX: every client shares a >= 2-block system prompt — after the
+    first completion seeds the index, admission adopts the cached blocks
+    copy-free and only tails prefill.
+
+Reports sustained generated tok/s and p50/p99 TTFT (first SSE frame)
+per phase, and PASS/FAILs the subsystem's contracts:
+
+  * prefix-phase prefill lanes < cold-phase prefill lanes (the cache
+    actually skips work), with identical output for identical prompts;
+  * a mid-stream client disconnect leaks ZERO KV blocks (free +
+    prefix-cached == all pool blocks at drain);
+  * the monolithic data plane never retraces across the whole run.
+
+    PYTHONPATH=src python -m benchmarks.serve_server
+"""
+from __future__ import annotations
+
+import http.client
+import json
+import os
+import sys
+import threading
+import time
+
+if __package__ in (None, ""):                            # direct invocation
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import Report, write_bench_json
+from benchmarks.serve_decode import SERVE_BENCH
+from repro.models import dense
+from repro.serving.engine import Engine
+from repro.serving.server import ServeFront, make_http_server
+
+SMOKE = os.environ.get("REPRO_SMOKE", "0") != "0"
+N_REQUESTS = 6 if SMOKE else 16
+MAX_NEW = 8 if SMOKE else 16
+ARRIVAL_TPS = 6.0                        # Poisson arrival rate (req/s)
+BS = 16                                  # pool block size
+SYSTEM = list(range(1, 3 * BS + 4))      # shared >= 2-block system prompt
+
+
+def _client(port: int, prompt, max_new: int, out: dict):
+    """One open-loop client: POST, then drain the SSE stream, recording
+    TTFT (first token frame on the wire) and completion."""
+    t0 = time.perf_counter()
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=600)
+    try:
+        conn.request("POST", "/v1/generate",
+                     json.dumps({"prompt": prompt, "max_new": max_new}),
+                     {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        toks, ttft = [], None
+        for raw in resp:
+            line = raw.decode().strip()
+            if not line.startswith("data: ") or line == "data: [DONE]":
+                continue
+            if ttft is None:
+                ttft = time.perf_counter() - t0
+            toks.append(json.loads(line[len("data: "):])["token"])
+        out["ttft"] = ttft
+        out["tokens"] = toks
+    finally:
+        conn.close()
+
+
+def _phase(port: int, eng, prompts, rng) -> dict:
+    """Open loop: arrivals at Poisson(ARRIVAL_TPS) no matter how the
+    server keeps up; returns sustained tok/s + TTFT percentiles +
+    prefill lanes spent serving the phase."""
+    lanes0 = sum(s["prefill_tokens"] for s in eng.stats)
+    results = [{} for _ in prompts]
+    threads = []
+    t0 = time.perf_counter()
+    for i, prompt in enumerate(prompts):
+        t = threading.Thread(target=_client,
+                             args=(port, prompt, MAX_NEW, results[i]))
+        t.start()
+        threads.append(t)
+        time.sleep(rng.exponential(1.0 / ARRIVAL_TPS))
+    for t in threads:
+        t.join(timeout=600)
+    dt = time.perf_counter() - t0
+    ttfts = sorted(r["ttft"] for r in results)
+    n_tok = sum(len(r["tokens"]) for r in results)
+    return {
+        "tps": n_tok / max(dt, 1e-9),
+        "ttft_p50_s": float(np.percentile(ttfts, 50)),
+        "ttft_p99_s": float(np.percentile(ttfts, 99)),
+        "prefill_lanes": sum(s["prefill_tokens"]
+                             for s in eng.stats) - lanes0,
+        "outputs": [r["tokens"] for r in results],
+    }
+
+
+def run() -> Report:
+    rep = Report("ServeFront: Poisson open loop through the HTTP frontend "
+                 f"({SERVE_BENCH.n_layers}L dense, {N_REQUESTS} req/phase, "
+                 f"{ARRIVAL_TPS:.0f} req/s arrivals)")
+    params = dense.init(SERVE_BENCH, jax.random.PRNGKey(0))
+    eng = Engine(SERVE_BENCH, params, max_slots=2, max_seq=160, rber=0.0,
+                 prefix_cache=True)
+    front = ServeFront(eng, max_waiting=2 * N_REQUESTS)
+    server = make_http_server(front, 0)
+    port = server.server_address[1]
+    threading.Thread(target=server.serve_forever, daemon=True).start()
+    rng = np.random.default_rng(0)
+    try:
+        # COLD: unique prompts, full prefill each (same lengths as PREFIX)
+        cold_prompts = [
+            [int(t) for t in rng.integers(1, 500, len(SYSTEM) + 3)]
+            for _ in range(N_REQUESTS)]
+        cold = _phase(port, eng, cold_prompts, rng)
+
+        # PREFIX: one warmup completion seeds the chain, then the phase —
+        # every client shares SYSTEM, only tails (+1 warm block) prefill
+        tail = [int(t) for t in rng.integers(1, 500, 3)]
+        warm = {}
+        _client(port, SYSTEM + tail, MAX_NEW, warm)
+        prefix = _phase(port, eng, [SYSTEM + tail] * N_REQUESTS, rng)
+        parity = all(o == warm["tokens"] for o in prefix["outputs"])
+
+        # mid-stream disconnect: request far more tokens than we read,
+        # drop the socket after the first frame, then verify zero leaks
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=600)
+        conn.request("POST", "/v1/generate", json.dumps(
+            {"prompt": SYSTEM + [500], "max_new": 64}),
+            {"Content-Type": "application/json"})
+        resp = conn.getresponse()
+        resp.fp.readline()               # first SSE frame is flowing
+        resp.close()
+        conn.close()
+        deadline = time.monotonic() + 60
+        while front.stats()["cancelled"] < 1 and time.monotonic() < deadline:
+            time.sleep(0.02)
+    finally:
+        server.shutdown()
+        server.server_close()
+        front.close(drain=True)
+    leaked = (eng.pool.n_blocks - 1
+              - len(eng.pool.free_blocks) - len(eng.prefix))
+    ps = eng.prefix_stats()
+
+    rep.note(f"  cold  : {cold['tps']:7.1f} tok/s   TTFT p50 "
+             f"{1e3 * cold['ttft_p50_s']:6.1f} ms  p99 "
+             f"{1e3 * cold['ttft_p99_s']:6.1f} ms   "
+             f"{cold['prefill_lanes']} prefill lanes")
+    rep.note(f"  prefix: {prefix['tps']:7.1f} tok/s   TTFT p50 "
+             f"{1e3 * prefix['ttft_p50_s']:6.1f} ms  p99 "
+             f"{1e3 * prefix['ttft_p99_s']:6.1f} ms   "
+             f"{prefix['prefill_lanes']} prefill lanes  "
+             f"({ps['prefix_prefill_tokens_saved']} tokens served from "
+             f"cache)")
+    rep.add("prefix-phase prefill lanes < cold phase",
+            prefix["prefill_lanes"], 0, cold["prefill_lanes"] - 1)
+    rep.add("prefix-hit outputs identical to the seeding request",
+            int(parity), 1, 1)
+    rep.add("mid-stream disconnect cancelled the request",
+            front.n_cancelled, 1, float("inf"))
+    rep.add("KV blocks leaked after drain (free + cached == pool)",
+            leaked, 0, 0)
+    rep.add("data plane traced exactly once across both phases",
+            eng.step_traces, 1, 1)
+    write_bench_json("serve_server", {
+        "n_requests": N_REQUESTS, "max_new": MAX_NEW,
+        "arrival_tps": ARRIVAL_TPS,
+        "cold_tps": cold["tps"], "prefix_tps": prefix["tps"],
+        "cold_ttft_p50_s": cold["ttft_p50_s"],
+        "cold_ttft_p99_s": cold["ttft_p99_s"],
+        "prefix_ttft_p50_s": prefix["ttft_p50_s"],
+        "prefix_ttft_p99_s": prefix["ttft_p99_s"],
+        "cold_prefill_lanes": cold["prefill_lanes"],
+        "prefix_prefill_lanes": prefix["prefill_lanes"],
+        "prefix_tokens_saved": ps["prefix_prefill_tokens_saved"],
+        "prefix_hit_rate": ps["prefix_hit_rate"],
+        "parity": parity, "cancelled": front.n_cancelled,
+        "leaked_blocks": leaked, "traces": eng.step_traces,
+    })
+    return rep
+
+
+def main():
+    rep = run()
+    print(rep.render())
+    sys.exit(0 if rep.ok else 1)
+
+
+if __name__ == "__main__":
+    main()

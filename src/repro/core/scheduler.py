@@ -150,8 +150,15 @@ def plan_chunks(
     prefill_slots: list[tuple[int, int]],   # (slot, prompt tokens remaining)
     budget: int,
     chunk_tokens: int,
+    cancelled=None,                         # slots to drop from the plan
 ) -> dict[int, int]:
     """Pure host-side step plan: slot -> token lanes this step.
+
+    ``cancelled`` slots are excluded up front — a request cancelled
+    between the caller's slot scan and this plan (the serving frontend's
+    disconnect path flips the flag from another thread) surrenders its
+    lanes AND its budget share, so the refund funds everyone else's
+    chunks in the same step instead of burning dead lanes.
 
     Decode slots are funded first: ONE base lane each unconditionally
     (inter-token latency never stalls behind someone else's prompt), then
@@ -165,6 +172,12 @@ def plan_chunks(
     the static chunk width. A long prompt therefore spreads over several
     steps while concurrent decoders keep producing a token every step.
     """
+    if cancelled:
+        decode_slots = [s for s in decode_slots
+                        if (s if isinstance(s, int) else s[0])
+                        not in cancelled]
+        prefill_slots = [(s, r) for s, r in prefill_slots
+                         if s not in cancelled]
     wants = [(s, 1) if isinstance(s, int) else (s[0], max(1, int(s[1])))
              for s in decode_slots]
     plan = {s: 1 for s, _ in wants}

@@ -14,7 +14,11 @@ serving models whose flash tier exceeds device weight memory (DESIGN.md §7).
 stall/stream telemetry. ``--spec-k K [--drafter ngram|model]`` serves
 SPECULATIVELY: K draft tokens per decoding slot verified in one forward
 pass — one weight-stream window rotation — emitting n_accept+1 tokens per
-step (DESIGN.md §8).
+step (DESIGN.md §8). ``--serve-http PORT`` swaps the synthetic burst for
+the ServeFront frontend (DESIGN.md §12): continuous batching behind a
+stdlib HTTP server with SSE token streaming, hash-based prefix caching
+(``--no-prefix-cache`` to disable), disconnect-driven cancellation, and
+``--max-waiting`` backpressure.
 """
 from __future__ import annotations
 
@@ -32,15 +36,20 @@ from repro.serving.engine import Engine
 from repro.serving.sampler import SampleConfig
 
 
-def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
-          max_new: int = 12, rber: float = 0.0, seed: int = 0,
-          kv_aware: bool = True, stream: bool = False,
-          device_budget_mib: float | None = None,
-          group_size: int = 1, auto_depth: bool = False,
-          spec_k: int = 0, drafter: str = "ngram",
-          adaptive_k: bool = False,
-          store_image: str | None = None, ckpt: str | None = None,
-          shards: int = 1) -> dict:
+def build_engine(arch: str = "opt-tiny", smoke: bool = True,
+                 rber: float = 0.0, seed: int = 0, kv_aware: bool = True,
+                 stream: bool = False,
+                 device_budget_mib: float | None = None,
+                 group_size: int = 1, auto_depth: bool = False,
+                 spec_k: int = 0, drafter: str = "ngram",
+                 adaptive_k: bool = False,
+                 store_image: str | None = None, ckpt: str | None = None,
+                 shards: int = 1, prefix_cache: bool = False,
+                 max_waiting: int | None = None,
+                 sample_cfg: SampleConfig | None = None) -> Engine:
+    """Deploy ``arch`` into the tiered form and construct the serving
+    engine — shared by the burst driver (``serve``) and the HTTP
+    frontend (``--serve-http``)."""
     cfg = OPT_TINY if arch == "opt-tiny" else get_config(arch, smoke=smoke)
     if cfg.family not in ("dense", "moe"):
         raise SystemExit("engine serves dense- and moe-family archs")
@@ -107,12 +116,33 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
                 n_kv_heads=max(cfg.n_kv_heads // 2, 1),
                 d_ff=max(cfg.d_ff // 2, 128))
             draft_params = mod.init(draft_cfg, jax.random.PRNGKey(seed + 1))
-    eng = Engine(cfg, params, max_slots=4, max_seq=256, rber=rber,
-                 sample_cfg=SampleConfig(temperature=0.8, top_k=40),
-                 kv_aware=kv_aware, seed=seed,
-                 weight_store=store, stream_cfg=stream_cfg,
-                 spec_cfg=spec_cfg, draft_cfg=draft_cfg,
-                 draft_params=draft_params)
+    if sample_cfg is None:
+        sample_cfg = SampleConfig(temperature=0.8, top_k=40)
+    return Engine(cfg, params, max_slots=4, max_seq=256, rber=rber,
+                  sample_cfg=sample_cfg, kv_aware=kv_aware, seed=seed,
+                  weight_store=store, stream_cfg=stream_cfg,
+                  spec_cfg=spec_cfg, draft_cfg=draft_cfg,
+                  draft_params=draft_params, prefix_cache=prefix_cache,
+                  max_waiting=max_waiting)
+
+
+def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
+          max_new: int = 12, rber: float = 0.0, seed: int = 0,
+          kv_aware: bool = True, stream: bool = False,
+          device_budget_mib: float | None = None,
+          group_size: int = 1, auto_depth: bool = False,
+          spec_k: int = 0, drafter: str = "ngram",
+          adaptive_k: bool = False,
+          store_image: str | None = None, ckpt: str | None = None,
+          shards: int = 1) -> dict:
+    eng = build_engine(arch, smoke=smoke, rber=rber, seed=seed,
+                       kv_aware=kv_aware, stream=stream,
+                       device_budget_mib=device_budget_mib,
+                       group_size=group_size, auto_depth=auto_depth,
+                       spec_k=spec_k, drafter=drafter,
+                       adaptive_k=adaptive_k, store_image=store_image,
+                       ckpt=ckpt, shards=shards)
+    cfg = eng.cfg
     rng = np.random.default_rng(seed)
     # submit enqueues: the whole burst goes in up front and the engine's
     # waiting->running queue admits as slots/blocks free up (no host-side
@@ -140,7 +170,7 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
            "processed_tps": n_processed / max(dt, 1e-9),
            "stats": eng.stats,
            "ttft_steps": first_tok, "traces": eng.step_traces}
-    if stream:
+    if eng.streamed:
         out["stream"] = eng.stream_stats()
         if eng.streamed_moe:
             out["experts"] = eng.expert_stats()
@@ -148,6 +178,30 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
         out["spec"] = eng.spec_stats()
     eng.close()
     return out
+
+
+def serve_http(port: int, arch: str = "opt-tiny", prefix_cache: bool = True,
+               max_waiting: int = 64, **engine_kw):
+    """``--serve-http``: the ServeFront continuous-batching loop behind
+    the stdlib HTTP frontend (DESIGN.md §12). Binds, prints the resolved
+    address, and serves until interrupted; client disconnects cancel
+    their requests and drain-close on exit serves what's left."""
+    from repro.serving.server import ServeFront, make_http_server
+    eng = build_engine(arch, prefix_cache=prefix_cache, **engine_kw)
+    front = ServeFront(eng, max_waiting=max_waiting)
+    server = make_http_server(front, port)
+    host, bound = server.server_address[:2]
+    print(f"serving {arch} on http://{host}:{bound} "
+          f"(POST /v1/generate, GET /v1/stats; prefix_cache="
+          f"{'on' if prefix_cache else 'off'}, max_waiting={max_waiting})")
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+        server.server_close()
+        front.close(drain=True)
 
 
 def main():
@@ -192,10 +246,34 @@ def main():
     ap.add_argument("--ckpt", default=None,
                     help="deploy output dir holding the DRAM tier "
                          "(required with --store-image)")
+    ap.add_argument("--serve-http", type=int, default=None, metavar="PORT",
+                    help="run the ServeFront HTTP frontend instead of the "
+                         "synthetic burst: POST /v1/generate streams "
+                         "tokens as SSE, GET /v1/stats reports telemetry "
+                         "(0 = pick a free port)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable hash-based prefix caching over the "
+                         "paged KV pool (--serve-http; default on)")
+    ap.add_argument("--max-waiting", type=int, default=64,
+                    help="backpressure bound: live requests the frontend "
+                         "holds before add_request blocks (--serve-http)")
     args = ap.parse_args()
     rber = args.rber
     if rber is None:
         rber = 0.0 if args.store_image else 1e-4
+    if args.serve_http is not None:
+        serve_http(args.serve_http, arch=args.arch,
+                   prefix_cache=args.prefix_cache,
+                   max_waiting=args.max_waiting, smoke=args.smoke,
+                   rber=rber, kv_aware=args.kv_aware, stream=args.stream,
+                   device_budget_mib=args.device_budget_mib,
+                   group_size=args.group_size, auto_depth=args.auto_depth,
+                   spec_k=args.spec_k, drafter=args.drafter,
+                   adaptive_k=args.adaptive_k,
+                   store_image=args.store_image, ckpt=args.ckpt,
+                   shards=args.shards)
+        return
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
                 max_new=args.max_new, rber=rber, kv_aware=args.kv_aware,
                 stream=args.stream,

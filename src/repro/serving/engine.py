@@ -51,6 +51,7 @@ import collections
 import dataclasses
 import functools
 import itertools
+import threading
 import time
 
 import jax
@@ -72,6 +73,7 @@ from repro.models import dense
 from repro.models import moe as moe_mod
 from repro.serving import spec as spec_mod
 from repro.serving.kvcache import PagedKVPool
+from repro.serving.prefix import PrefixIndex, block_hashes
 from repro.serving.sampler import SampleConfig, last_valid_hidden, sample
 
 
@@ -84,6 +86,11 @@ class Request:
     slot: int | None = None          # None while waiting for admission
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    cancelled: bool = False          # set by Engine.cancel; done implies no
+                                     # more tokens, cancelled implies no
+                                     # prefix retain and an unread stream
+    cached_len: int = 0              # prompt tokens adopted from the prefix
+                                     # cache at admission (pos starts here)
 
     @property
     def prefilling(self) -> bool:
@@ -236,9 +243,11 @@ def _moe_fused_impl(cfg, exec_mode, kn, layers_dram, k_pool, v_pool, x, h,
     handoff still sits between consecutive fused calls (layer ``lo``'s
     routing leaves this call, its expert set enters the next), so nothing
     about the expert-bitmap discipline changes — only the dispatch count
-    halves. Layer 0 has no trailing expert half: the engine passes the
-    ZERO slab (all-(-1) ``slab_map`` zeroes every assignment, so the
-    expert term contributes exactly 0 and ``x`` passes through)."""
+    halves. ``lo`` ranges over 1..L-1: layer 0's attention+router rides
+    the HEAD trace (fused with the embed, ``_moe_head_impl``) and the
+    last layer's expert half rides the TAIL trace (fused with the
+    finish, ``_moe_tail_impl``), so a step is L+1 dispatches over three
+    traces."""
     x = _moe_expert_paged_impl(kn, x, h, gates, idx, slab, slab_map,
                                pool_buf, axis_name=axis_name)
     # Barrier between the halves: without it XLA fuses the expert combine
@@ -251,6 +260,55 @@ def _moe_fused_impl(cfg, exec_mode, kn, layers_dram, k_pool, v_pool, x, h,
     return _moe_attn_router_impl(cfg, exec_mode, layers_dram, k_pool,
                                  v_pool, x, positions, ctx_lens,
                                  block_tables, lo)
+
+
+def _moe_head_impl(cfg, proposer, spec_k, exec_mode, layers_dram, k_pool,
+                   v_pool, params, lengths, tokens, q_lens, block_tables,
+                   hist=None, hist_lens=None, draft_cap=None):
+    """HEAD trace of the streamed-MoE plane: token embed (speculative
+    drafting included) fused into layer 0's attention+router half — the
+    embed/layer boundary folded into the adjacent jit, replacing the
+    zero-expert-slab dispatch the old 4-trace plane paid for layer 0.
+    Consumes no pool pages, so it jits plain even under tensor
+    parallelism (everything it reads is replicated). The barrier pins
+    the embed output to bf16 at the fusion seam, exactly like the
+    expert→attention seam inside the fused trace — the head must stay
+    bit-identical to the split embed-then-router dispatch it replaces."""
+    if spec_k is None:
+        x, positions, ctx_lens = _embed_chunk(cfg, params, lengths, tokens,
+                                              q_lens)
+        extras = ()
+    else:
+        x, positions, ctx_lens, q_lens, drafts, n_draft = _embed_spec(
+            cfg, proposer, spec_k, params, lengths, tokens, q_lens, hist,
+            hist_lens, draft_cap)
+        extras = (q_lens, drafts, n_draft)
+    x = jax.lax.optimization_barrier(x)
+    x, h, gates, idx, k, v = _moe_attn_router_impl(
+        cfg, exec_mode, layers_dram, k_pool, v_pool, x, positions,
+        ctx_lens, block_tables, jnp.int32(0))
+    return (x, h, gates, idx, k, v, positions, ctx_lens) + extras
+
+
+def _moe_tail_impl(cfg, sched_cfg, sample_cfg, kv_aware, spec_k, kn,
+                   final_norm, lm_head, state, x, h, gates, idx, slab,
+                   slab_map, pool_buf, k_new, v_new, q_lens, admitted,
+                   positions, block_tables, key, drafts=None, n_draft=None,
+                   is_decode=None, axis_name=None):
+    """TAIL trace of the streamed-MoE plane: the LAST layer's expert half
+    fused into the finish step (final norm, sampling/verification, paged
+    KV scatter, Algorithm 2) — the layer/finish boundary folded into one
+    jitted dispatch, mirroring the head. The pool buffer is its only
+    sharded operand under tensor parallelism; the barrier keeps the
+    residual handoff bf16-exact (see ``_moe_fused_impl``)."""
+    x = _moe_expert_paged_impl(kn, x, h, gates, idx, slab, slab_map,
+                               pool_buf, axis_name=axis_name)
+    x = jax.lax.optimization_barrier(x)
+    return _finish_step(cfg, sched_cfg, sample_cfg, kv_aware, spec_k,
+                        final_norm, lm_head, state, x, k_new, v_new,
+                        q_lens, admitted, positions, block_tables, key,
+                        drafts=drafts, n_draft=n_draft,
+                        is_decode=is_decode)
 
 
 def _embed_chunk(cfg, params, lengths, tokens, q_lens):
@@ -526,7 +584,9 @@ class Engine:
                  admission_cfg: sched.AdmissionConfig | None = None,
                  weight_store=None, stream_cfg=None,
                  spec_cfg: spec_mod.SpecConfig | None = None,
-                 draft_cfg=None, draft_params=None):
+                 draft_cfg=None, draft_params=None,
+                 prefix_cache: bool = False,
+                 max_waiting: int | None = None):
         if cfg.family not in ("dense", "moe"):
             raise ValueError("engine serves dense- and moe-family archs "
                              f"(got {cfg.family!r})")
@@ -618,6 +678,21 @@ class Engine:
         if "pos_embed" in self.params:
             kv_cap = min(kv_cap, self.params["pos_embed"].shape[0])
         self._kv_cap = kv_cap
+        # hash-based prefix caching (DESIGN.md §12): completed requests
+        # retain their full prompt blocks under a chain hash; admission
+        # adopts the longest cached chain copy-free (ref bump only).
+        self.prefix = PrefixIndex(self.pool) if prefix_cache else None
+        self._prefix_tokens_saved = 0
+        # control-plane lock: submit/cancel-sweep/step/close mutate the
+        # queues and the pool from different threads when a serving
+        # frontend drives the engine. An RLock (step re-enters _admit)
+        # with a Condition for the bounded-submit wait; ``cancel`` stays
+        # LOCK-FREE (flag flips only) so a disconnect never blocks behind
+        # a running step.
+        self._mu = threading.RLock()
+        self._cv = threading.Condition(self._mu)
+        self._closed = False
+        self.max_waiting = max_waiting
         self.requests: dict[int, Request] = {}
         self.waiting: collections.deque[Request] = collections.deque()
         self._next_rid = 0
@@ -729,18 +804,6 @@ class Engine:
         if self.mesh is None:
             return tuple(self.store.table[name]["q"].shape)
         return tuple(self._entry_plan(name).local_kn)
-
-    def _tbl_dims(self, name: str) -> tuple:
-        """(q-table grid, parity pages, scale pages) of one entry's pool
-        page tables — the shapes the jitted traces bind."""
-        if self.mesh is None:
-            comp = self.store.table[name]
-            return (tuple(comp["q"].grid), len(comp["parity"].pages),
-                    len(comp["scale"].pages))
-        p = self._entry_plan(name)
-        pb = self.store.page_bytes
-        return (tuple(p.local_grid), -(-p.parity_nbytes // pb),
-                -(-p.scale_nbytes // pb))
 
     def _make_wpool(self, n_pages: int):
         """The device weight page pool — shard-partitioned over the mesh
@@ -1094,25 +1157,6 @@ class Engine:
         self._expert_kn = {
             name: self._entry_kn(ref.entry(0, 0))
             for name, ref in self._expert_refs.items()}
-        # Fused-trace zero expert half (DESIGN.md §9): layer 0's fused call
-        # carries an all-(-1) slab_map, which zeroes every assignment in
-        # serve_expert_ffn — so the page tables only need the right trace
-        # SHAPES (slot 0 is always a valid gather target) and the fused
-        # expert(l-1)+attn_router(l) jit replays ONE trace for all layers.
-        t = self.admission_cfg.chunk_tokens
-        zero_slab = {}
-        for name, ref in self._expert_refs.items():
-            grid, n_pp, n_sp = self._tbl_dims(ref.entry(0, 0))
-            zero_slab[name] = {
-                "q_tbl": jnp.zeros((self._e_slab,) + grid, jnp.int32),
-                "p_slots": jnp.zeros((self._e_slab, n_pp), jnp.int32),
-                "s_slots": jnp.zeros((self._e_slab, n_sp), jnp.int32)}
-        self._zero_expert = {
-            "h": jnp.zeros((max_slots, t, cfg.d_model), jnp.bfloat16),
-            "gates": jnp.zeros((max_slots, t, cfg.top_k), jnp.float32),
-            "idx": jnp.zeros((max_slots, t, cfg.top_k), jnp.int32),
-            "slab": zero_slab,
-            "slab_map": jnp.full((cfg.n_experts,), -1, jnp.int32)}
         self.expert_cache = ExpertCache(cache_cap, cfg.n_layers,
                                         cfg.n_experts, n_slots=max_slots,
                                         on_evict=self._evict_window)
@@ -1385,43 +1429,34 @@ class Engine:
         return self._finish_fn(*args)
 
     def _build_stream_fns_moe(self, exec_mode):
-        """The expert-paged MoE data plane: FOUR jitted pieces (embed →
-        FUSED[expert(l-1) + attention+router(l)] × L → final expert-FFN →
-        finish). The router must run before its layer's expert weights can
-        be NAMED, so the trace splits around the host expert-bitmap
-        handoff — but the two device halves that STRADDLE each handoff
-        (layer l-1's experts, layer l's attention+router) fuse into one
-        jitted call, halving per-step dispatches vs the split plane
-        (2L + 2 → L + 3 calls). Layer 0's fused call runs a ZERO expert
-        half (all-(-1) slab_map); the last layer's expert half has no
-        following attention and keeps its own trace. Both fused and expert
-        traces take the layer index as a traced scalar, so steady state is
-        exactly 4 traces (asserted in tests/test_moe_serving.py).
+        """The expert-paged MoE data plane: THREE jitted pieces (HEAD
+        [embed + attention+router(0)] → FUSED[expert(l-1) + attention+
+        router(l)] × (L-1) → TAIL[expert(L-1) + finish]). The router must
+        run before its layer's expert weights can be NAMED, so the trace
+        splits around the host expert-bitmap handoff — but every pair of
+        device halves that STRADDLE a boundary fuses into one jitted
+        call: interior handoffs ride the fused trace, and the embed/
+        finish boundaries fold into the adjacent traces (head and tail),
+        so a step is L+1 dispatches (vs the split plane's 2L + 2) over
+        exactly 3 steady-state traces (asserted in
+        tests/test_moe_serving.py). The fused trace takes the layer
+        index as a traced scalar.
 
-        Sharded (``StreamConfig.n_shards > 1``, DESIGN.md §11): both
-        pool-consuming traces run under ``shard_map`` with the pool's page
-        rows split over "model"; each expert's down-projection psum is the
-        only collective."""
+        Sharded (``StreamConfig.n_shards > 1``, DESIGN.md §11): the two
+        pool-consuming traces (fused, tail) run under ``shard_map`` with
+        the pool's page rows split over "model"; each expert's
+        down-projection psum is the only collective. The head consumes
+        no pool pages and jits plain."""
         cfg = self.cfg
         spec_k = self.spec_cfg.k if self.spec_cfg else None
-        proposer = self.proposer
+        n_extra = 0 if spec_k is None else 3        # drafts/n_draft/is_decode
+        head = functools.partial(_moe_head_impl, cfg, self.proposer,
+                                 spec_k, exec_mode)
         fused = functools.partial(_moe_fused_impl, cfg, exec_mode,
                                   self._expert_kn)
-        expert = functools.partial(_moe_expert_paged_impl, self._expert_kn)
-        finish = functools.partial(_finish_step, cfg, self.sched_cfg,
-                                   self.sample_cfg, self.kv_aware, spec_k)
-
-        if spec_k is None:
-            def embed_fn(params, lengths, tokens, q_lens):
-                self._trace_count += 1    # runs only while jax traces
-                return _embed_chunk(cfg, params, lengths, tokens, q_lens)
-        else:
-            def embed_fn(params, lengths, tokens, q_lens, hist, hist_lens,
-                         draft_cap):
-                self._trace_count += 1
-                return _embed_spec(cfg, proposer, spec_k, params, lengths,
-                                   tokens, q_lens, hist, hist_lens,
-                                   draft_cap)
+        tail = functools.partial(_moe_tail_impl, cfg, self.sched_cfg,
+                                 self.sample_cfg, self.kv_aware, spec_k,
+                                 self._expert_kn)
 
         jit_kw = {}
         if self.mesh is not None:
@@ -1431,38 +1466,39 @@ class Engine:
             rspec, pspec = specs["replicated"], specs["pool"]
             # fused args: (layers_dram, k, v, x, h, gates, idx, slab,
             # slab_map, pool_buf, positions, ctx_lens, block_tables, lo);
-            # expert args: (x, h, gates, idx, slab, slab_map, pool_buf) —
-            # the pool buffer is the only sharded operand of either.
+            # tail args: (final_norm, lm_head, state, x, h, gates, idx,
+            # slab, slab_map, pool_buf, k_new, v_new, q_lens, admitted,
+            # positions, block_tables, key[, drafts, n_draft, is_decode])
+            # — the pool buffer is the only sharded operand of either.
             fused = shard_map(
                 functools.partial(fused, axis_name=MODEL_AXIS),
                 mesh=self.mesh,
                 in_specs=(rspec,) * 9 + (pspec,) + (rspec,) * 4,
                 out_specs=rspec, check_rep=False)
-            expert = shard_map(
-                functools.partial(expert, axis_name=MODEL_AXIS),
+            tail = shard_map(
+                functools.partial(tail, axis_name=MODEL_AXIS),
                 mesh=self.mesh,
-                in_specs=(rspec,) * 6 + (pspec,),
+                in_specs=(rspec,) * 9 + (pspec,)
+                + (rspec,) * (7 + n_extra),
                 out_specs=rspec, check_rep=False)
             jit_kw = {"out_shardings": NamedSharding(self.mesh, P())}
+
+        def head_fn(*args):
+            self._trace_count += 1        # runs only while jax traces
+            return head(*args)
 
         def fused_fn(*args):
             self._trace_count += 1
             return fused(*args)
 
-        def expert_fn(*args):
+        def tail_fn(*args):
             self._trace_count += 1
-            return expert(*args)
-
-        def finish_fn(*args):
-            self._trace_count += 1
-            return finish(*args)
+            return tail(*args)
 
         donate = (2,) if jax.default_backend() != "cpu" else ()
-        self._embed_fn = jax.jit(embed_fn, **jit_kw)
+        self._head_fn = jax.jit(head_fn, **jit_kw)
         self._fused_fn = jax.jit(fused_fn, **jit_kw)
-        self._expert_fn = jax.jit(expert_fn, **jit_kw)
-        self._finish_fn = jax.jit(finish_fn, donate_argnums=donate,
-                                  **jit_kw)
+        self._tail_fn = jax.jit(tail_fn, donate_argnums=donate, **jit_kw)
         self._step_fn = self._streamed_step_moe
 
     def _streamed_step_moe(self, params, attn_flash, state, tokens, q_lens,
@@ -1476,21 +1512,26 @@ class Engine:
         stall), and the expert half consumes the assembled device slab.
         The expert half of layer *l* dispatches FUSED with the attention+
         router half of layer *l+1* (one jitted call per handoff instead of
-        two); layer 0 rides a zero expert half, the last layer's experts
-        dispatch alone. While layer *l* computes, the prefetch worker
-        fetches the router-history predictor's picks for layer *l+1*
-        (wrapping to layer 0 for the next step)."""
+        two); layer 0's attention+router rides the HEAD trace with the
+        embed, the last layer's experts ride the TAIL trace with the
+        finish — L+1 dispatches over exactly three compiled traces. While
+        layer *l* computes, the prefetch worker fetches the router-history
+        predictor's picks for layer *l+1* (wrapping to layer 0 for the
+        next step)."""
         del params, attn_flash                       # store-resident tier
         cfg, cache = self.cfg, self.expert_cache
+        head_args = (self._layers_dram, state["k"], state["v"],
+                     self._dram_params, state["lengths"], tokens, q_lens,
+                     block_tables)
         if self.spec_cfg is None:
             drafts = n_draft = None
-            x, positions, ctx_lens = self._embed_fn(
-                self._dram_params, state["lengths"], tokens, q_lens)
+            x, h, gates, idx, k_l, v_l, positions, ctx_lens = \
+                self._head_fn(*head_args)
             lane_bound = self._host_q_lens
         else:
-            x, positions, ctx_lens, q_lens, drafts, n_draft = self._embed_fn(
-                self._dram_params, state["lengths"], tokens, q_lens, hist,
-                hist_lens, draft_cap)
+            (x, h, gates, idx, k_l, v_l, positions, ctx_lens, q_lens,
+             drafts, n_draft) = self._head_fn(*head_args, hist, hist_lens,
+                                              draft_cap)
             # verify lanes grow q_lens IN-GRAPH (by n_draft <= draft_cap);
             # the host-side routed-expert filter uses the superset bound so
             # a draft lane's routing is never dropped from the slab.
@@ -1506,17 +1547,10 @@ class Engine:
         if self._steps_done > 0:
             for li in range(cfg.n_layers):
                 self._request_prefetch(li, self._e_slab, slots=active)
-        ks, vs = [], []
-        # layer 0's attention+router rides the SAME fused trace as every
-        # other layer, paired with the zero expert half (identity on x).
-        ze = self._zero_expert
-        x, h, gates, idx, k_l, v_l = self.wpool.dispatch(
-            lambda buf: self._fused_fn(
-                self._layers_dram, state["k"], state["v"], x, ze["h"],
-                ze["gates"], ze["idx"], ze["slab"], ze["slab_map"], buf,
-                positions, ctx_lens, block_tables, jnp.int32(0)))
-        ks.append(k_l)
-        vs.append(v_l)
+        # layer 0's attention+router already ran inside the head trace
+        # (no pool operand — embed/attn weights are DRAM-resident).
+        ks, vs = [k_l], [v_l]
+        out = None
         for li in range(cfg.n_layers):
             idx_host = np.asarray(idx)               # layer li's routing
             by_slot = sched.routed_experts_by_slot(idx_host, lane_bound)
@@ -1545,23 +1579,24 @@ class Engine:
                         ctx_lens, block_tables, jnp.int32(li + 1)))
                 ks.append(k_l)
                 vs.append(v_l)
-            else:                        # last layer: expert half alone
-                x = self.wpool.dispatch(lambda buf: self._expert_fn(
-                    x, h, gates, idx, slab, slab_map, buf))
+            else:        # last layer: experts fused with the finish step
+                k_new = jnp.stack(ks, axis=0)    # (L, slots, T, KV, Dh)
+                v_new = jnp.stack(vs, axis=0)
+                pre = (self._dram_params["final_norm"], self._lm_head,
+                       state, x, h, gates, idx, slab, slab_map)
+                post = (k_new, v_new, q_lens, admitted, positions,
+                        block_tables, key)
+                if self.spec_cfg is not None:
+                    post += (drafts, n_draft, is_decode)
+                out = self.wpool.dispatch(
+                    lambda buf: self._tail_fn(*pre, buf, *post))
             # dispatch has captured the pool buffer: NOW the held
             # entries can release and the rejected transients can free.
             for hk in held:
                 cache.release(hk)
             for slots in transients:
                 self.wpool.free(slots)
-        k_new = jnp.stack(ks, axis=0)                # (L, slots, T, KV, Dh)
-        v_new = jnp.stack(vs, axis=0)
-        args = (self._dram_params["final_norm"], self._lm_head, state, x,
-                k_new, v_new, q_lens, admitted, positions, block_tables,
-                key)
-        if self.spec_cfg is not None:
-            args += (drafts, n_draft, is_decode)
-        return self._finish_fn(*args)
+        return out
 
     def _request_prefetch(self, layer: int, breadth: int, slots=None):
         """Enqueue predicted experts for ``layer`` — gated by the cache's
@@ -1738,51 +1773,174 @@ class Engine:
 
     # --- request management (control plane) -----------------------------------
 
-    def submit(self, prompt: list[int], max_new: int = 16) -> int:
-        """Enqueue a request and return its id immediately. Admission
-        (slot + worst-case block reservation) happens when capacity frees
-        up — oversubscription waits, it never errors."""
+    def submit(self, prompt: list[int], max_new: int = 16,
+               timeout: float | None = None) -> int:
+        """Enqueue a request and return its id. Admission (slot +
+        worst-case block reservation) happens when capacity frees up —
+        oversubscription waits, it never errors. Thread-safe; with
+        ``max_waiting`` set, a full waiting queue BLOCKS the caller
+        (backpressure) until space frees, ``timeout`` seconds expire
+        (TimeoutError) or the engine closes (RuntimeError) — a dying
+        server never hangs a producer on a full queue."""
         if not prompt:
             raise ValueError("empty prompt (a request needs >= 1 token)")
         if max_new < 1:
             raise ValueError("max_new must be >= 1 (every request samples "
                              "at least the token after its prompt)")
-        # a request that can never fit the per-slot table or the whole
-        # pool is rejected up front.
-        rid = self._next_rid
-        self._next_rid += 1
-        req = Request(rid, list(prompt), max_new)
-        # bound by the EXACT max_seq (rounding up to block granularity
-        # would admit valid lanes past the learned-position table), by the
-        # physical pool minus the dump block, and — for learned-position
-        # models — by the table itself (a valid lane's out-of-bounds
-        # jnp.take would fill NaN under jit). Computed once in __init__;
-        # the speculative verify-lane cap shares it.
-        cap = self._kv_cap
-        if req.kv_rows > cap:
-            self._next_rid = rid
-            raise ValueError(
-                f"request needs {req.kv_rows} KV rows > max_seq={cap}")
-        self.requests[rid] = req
-        self.waiting.append(req)
-        self._admit()
-        return rid
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("submit: engine is closed")
+            if self.max_waiting is not None:
+                deadline = None if timeout is None \
+                    else time.monotonic() + timeout
+                while len(self.waiting) >= self.max_waiting \
+                        and not self._closed:
+                    remaining = None
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise TimeoutError(
+                                "submit: waiting queue full "
+                                f"(max_waiting={self.max_waiting})")
+                    self._cv.wait(remaining)
+                if self._closed:
+                    raise RuntimeError("submit: engine is closed")
+            # a request that can never fit the per-slot table or the whole
+            # pool is rejected up front.
+            rid = self._next_rid
+            self._next_rid += 1
+            req = Request(rid, list(prompt), max_new)
+            # bound by the EXACT max_seq (rounding up to block granularity
+            # would admit valid lanes past the learned-position table), by
+            # the physical pool minus the dump block, and — for learned-
+            # position models — by the table itself (a valid lane's
+            # out-of-bounds jnp.take would fill NaN under jit). Computed
+            # once in __init__; the speculative verify-lane cap shares it.
+            cap = self._kv_cap
+            if req.kv_rows > cap:
+                self._next_rid = rid
+                raise ValueError(
+                    f"request needs {req.kv_rows} KV rows > max_seq={cap}")
+            self.requests[rid] = req
+            self.waiting.append(req)
+            self._admit()
+            return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a waiting OR running request (client disconnect). LOCK-
+        FREE — flips flags only, so a disconnect handler never blocks
+        behind a running compiled step. The resources come back through
+        the normal control-plane paths: a waiting request is dropped at
+        the queue head by ``_admit``/the step sweep, a running slot
+        releases (all its KV blocks to the free list) within ONE ``step``
+        call. Returns False if the request is unknown or already done."""
+        req = self.requests.get(rid)
+        if req is None or req.done:
+            return False
+        req.cancelled = True
+        req.done = True
+        return True
+
+    def forget(self, rid: int) -> bool:
+        """Drop a finished request's bookkeeping (ServeFront calls this
+        once a handle's stream has drained, so ``requests`` doesn't grow
+        without bound). Refuses — returns False — while the request is
+        live or its slot has not been swept yet."""
+        with self._mu:
+            req = self.requests.get(rid)
+            if req is None or not req.done:
+                return False
+            if req.slot is not None \
+                    and self.pool.active.get(req.slot) == rid:
+                return False             # cancelled mid-step; not yet swept
+            if req in self.waiting:
+                self.waiting.remove(req)
+            del self.requests[rid]
+            return True
 
     def _admit(self):
         """waiting -> running, FCFS: claim a slot and reserve the request's
         worst-case block count so lazily-growing slots never deadlock on an
-        exhausted pool mid-flight."""
+        exhausted pool mid-flight. With prefix caching on, admission first
+        adopts the longest cached prefix copy-free (ref bump on shared
+        blocks; only the tail is reserved/prefilled), evicting cold fully-
+        released chains when the tail reservation is short."""
         while self.waiting:
             req = self.waiting[0]
-            slot = self.pool.alloc(req.rid, req.kv_rows)
+            if req.done:                 # cancelled while waiting
+                self.waiting.popleft()
+                self._cv.notify_all()
+                continue
+            shared, hashes = (), None
+            if self.prefix is not None:
+                bs = self.pool.block_size
+                # cap: >= 1 prompt token always prefills — every request
+                # must sample from its own last prompt lane.
+                hashes = block_hashes(req.prompt, bs,
+                                      limit=(len(req.prompt) - 1) // bs)
+                shared = self.prefix.lookup(hashes)
+            slot = self.pool.alloc(req.rid, req.kv_rows,
+                                   shared_blocks=shared)
+            if slot is None and self.prefix is not None \
+                    and self.pool.free_slots:
+                need = self.pool.blocks_for(req.kv_rows) - len(shared)
+                short = need - self.pool.n_free_blocks
+                if short > 0 and self.prefix.evict(short) > 0:
+                    # eviction may have reclaimed part of the hit chain
+                    # itself (LRU doesn't pin this lookup) — re-resolve.
+                    shared = self.prefix.lookup(hashes)
+                    slot = self.pool.alloc(req.rid, req.kv_rows,
+                                           shared_blocks=shared)
             if slot is None:
                 break
             req.slot = slot
+            if shared:
+                req.cached_len = len(shared) * self.pool.block_size
+                req.pos = req.cached_len
+                self._prefix_tokens_saved += req.cached_len
             if self.spec_cfg is not None:
                 # a recycled slot must not inherit the previous request's
                 # acceptance history; start optimistic (full draft depth)
                 self._accept_ema[slot] = 1.0
             self.waiting.popleft()
+            self._cv.notify_all()
+
+    def _sweep_cancelled(self):
+        """Reclaim cancelled requests' resources (under the lock, at the
+        top of every step): running slots release — O(1), every KV block
+        back on the free list — and cancelled waiting requests drop out of
+        the queue. No prefix retain: a cancelled stream was never fully
+        read, so its tail blocks are not certified shareable."""
+        for slot, rid in list(self.pool.active.items()):
+            req = self.requests[rid]
+            if req.done and req.cancelled:
+                self.pool.release(slot)
+        if any(r.done for r in self.waiting):
+            self.waiting = collections.deque(
+                r for r in self.waiting if not r.done)
+            self._cv.notify_all()
+
+    def _finish_request(self, req: Request, slot: int):
+        """Completion path: retain the request's full prompt blocks in the
+        prefix index (ref bump BEFORE the slot's release drops its own
+        refs), then release the slot."""
+        if self.prefix is not None:
+            bs = self.pool.block_size
+            hashes = block_hashes(req.prompt, bs)
+            if hashes:
+                blocks = [int(b) for b in
+                          self.pool.block_tables[slot, :len(hashes)]]
+                self.prefix.insert(hashes, blocks)
+        self.pool.release(slot)          # O(1): no device work
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache telemetry: index entries/hits/misses/evictions
+        plus the total prefill tokens admission skipped via cache hits."""
+        if self.prefix is None:
+            raise ValueError("prefix_stats: prefix caching is disabled "
+                             "(construct with prefix_cache=True)")
+        return {**self.prefix.stats(),
+                "prefix_prefill_tokens_saved": self._prefix_tokens_saved}
 
     # --- the serving step (one compiled call; mixed prefill/decode) -----------
 
@@ -1809,7 +1967,17 @@ class Engine:
         slots advance (one token — or, speculatively, ``n_accept + 1``
         tokens through ONE forward pass), prefilling slots consume a
         prompt chunk under the Alg.2/stall-coupled token budget. Returns
-        tokens processed (prompt lanes + emitted decode tokens)."""
+        tokens processed (prompt lanes + emitted decode tokens).
+        Thread-safe — one step at a time, producers interleave between
+        steps; cancelled requests are swept FIRST, so a disconnect's KV
+        blocks are back on the free list within one call."""
+        with self._cv:
+            self._sweep_cancelled()
+            n = self._step_locked()
+            self._cv.notify_all()
+            return n
+
+    def _step_locked(self) -> int:
         self._admit()
         spec = self.spec_cfg is not None
         decode_slots, prefill_slots = [], []
@@ -1828,8 +1996,13 @@ class Engine:
                 decode_slots.append(slot)
         budget = sched.step_token_budget(self.admission_cfg, self._npu_frac,
                                          self._stall_frac)
+        # snapshot AFTER list-building: a lock-free cancel() landing since
+        # the req.done filter above must not be granted lanes or budget.
+        cancelled = {slot for slot, rid in self.pool.active.items()
+                     if self.requests[rid].done}
         plan = sched.plan_chunks(decode_slots, prefill_slots, budget,
-                                 self.admission_cfg.chunk_tokens)
+                                 self.admission_cfg.chunk_tokens,
+                                 cancelled=cancelled)
         if not plan:
             return 0
         n, t_chunk = self.pool.n_slots, self.admission_cfg.chunk_tokens
@@ -1898,11 +2071,11 @@ class Engine:
                 n_prefill += cnt
                 self.pool.bump(slot, cnt)
                 req.pos += cnt
-                if req.prefilling:
-                    continue         # more prompt chunks to go: no sample yet
-                # just-completed prefill sampled one token at its last lane
-                req.out.append(int(toks_host[slot, 0] if spec
-                                   else toks_host[slot]))
+                if not req.prefilling:
+                    # just-completed prefill sampled one token at its last
+                    # lane
+                    req.out.append(int(toks_host[slot, 0] if spec
+                                       else toks_host[slot]))
             elif spec:
                 # verify step: n_accept + 1 tokens emitted; the pool length
                 # REWINDS to the accepted rows (host mirror here — device
@@ -1918,9 +2091,13 @@ class Engine:
                 self.pool.bump(slot, cnt)
                 req.out.append(int(toks_host[slot]))
                 n_processed += cnt
-            if len(req.out) >= req.max_new:
+            if req.cancelled:
+                # cancel() landed mid-step: reclaim NOW (the "within one
+                # step" guarantee); the unread output is discarded.
+                self.pool.release(slot)
+            elif not req.prefilling and len(req.out) >= req.max_new:
                 req.done = True
-                self.pool.release(slot)   # O(1): no device work
+                self._finish_request(req, slot)
         st = jax.device_get(stats)
         self._npu_frac = float(st["npu_fraction"])
         entry = {
@@ -1965,11 +2142,15 @@ class Engine:
         return n_processed
 
     def close(self):
-        """Release background resources: the MoE expert prefetcher's
-        worker thread (whose fetch closure pins this engine — without an
-        explicit close, neither the thread nor the device-resident expert
-        cache is ever reclaimed). Idempotent; a no-op for non-MoE-streamed
-        engines."""
+        """Mark the engine closed — wakes every ``submit`` blocked on
+        backpressure (they raise RuntimeError instead of hanging on a
+        dying server) — and release background resources: the MoE expert
+        prefetcher's worker thread (whose fetch closure pins this engine —
+        without an explicit close, neither the thread nor the device-
+        resident expert cache is ever reclaimed). Idempotent."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
         p = getattr(self, "prefetcher", None)
         if p is not None:
             p.stop()
@@ -1979,7 +2160,9 @@ class Engine:
         """Times the serving data plane was traced/compiled. A fully static
         monolithic path stays at 1 regardless of slot churn, chunked
         prefills, and oversubscribed admission; the streamed path stays at
-        3 (embed + ONE group trace shared by every layer group + finish);
+        3 — dense: embed + ONE group trace shared by every layer group +
+        finish; expert-paged MoE: head (embed + layer-0 attn/router) + ONE
+        fused expert/attn handoff trace + tail (last experts + finish);
         -1 for eager engines."""
         return self._trace_count if self.compiled else -1
 

@@ -91,22 +91,40 @@ class PagedKVPool:
 
     # --- slot lifecycle ------------------------------------------------------
 
-    def alloc(self, request_id: int, need_tokens: int) -> int | None:
+    def alloc(self, request_id: int, need_tokens: int,
+              shared_blocks=()) -> int | None:
         """Admit a request: claim a slot and RESERVE its worst-case block
         count (``need_tokens`` KV rows). Returns the slot, or None when no
-        slot is free or the reservation would oversubscribe the pool."""
+        slot is free or the reservation would oversubscribe the pool.
+
+        ``shared_blocks`` is the prefix-cache hit: already-populated pool
+        blocks the request ADOPTS copy-free — they map at the head of the
+        slot's table with a ref bump each (never drawn from the free
+        list), the slot's length starts past them, and only the tail of
+        the worst case is reserved. The caller (the prefix index) must
+        hold its own ref on every shared block, so adoption can never
+        race a concurrent free."""
         need_blocks = self.blocks_for(need_tokens)
         if need_blocks > self.max_blocks:
             raise ValueError(
                 f"request needs {need_tokens} KV rows > "
                 f"max_seq={self.max_blocks * self.block_size}")
-        if not self.free_slots or need_blocks > self.n_free_blocks:
+        n_shared = len(shared_blocks)
+        assert n_shared < max(need_blocks, 1), \
+            "shared prefix must leave >= 1 tail block to prefill/decode"
+        if not self.free_slots or need_blocks - n_shared > self.n_free_blocks:
             return None
         slot = self.free_slots.pop()
         self.active[slot] = request_id
-        self.reserved[slot] = need_blocks
-        self.lengths[slot] = 0
-        self.lengths_dev = self.lengths_dev.at[slot].set(0)
+        self.reserved[slot] = need_blocks - n_shared
+        for i, blk in enumerate(shared_blocks):
+            blk = int(blk)
+            assert self.ref_count[blk] > 0, "adopting an unreferenced block"
+            self.ref_count[blk] += 1
+            self.block_tables[slot, i] = blk
+        cached_len = n_shared * self.block_size
+        self.lengths[slot] = cached_len
+        self.lengths_dev = self.lengths_dev.at[slot].set(cached_len)
         return slot
 
     def ensure(self, slot: int, new_len: int):
@@ -142,6 +160,24 @@ class PagedKVPool:
             self.block_tables[slot, i] = 0
         self.reserved[slot] = 0
         self.free_slots.append(slot)
+
+    # --- prefix-cache ref plumbing (serving/prefix.py) ------------------------
+
+    def ref(self, blk: int):
+        """Take one ref on a LIVE block (the prefix index retaining a
+        completed request's prompt blocks before its slot releases)."""
+        assert blk != 0 and self.ref_count[blk] > 0, \
+            "prefix retain of a free/dump block"
+        self.ref_count[blk] += 1
+
+    def deref(self, blk: int) -> bool:
+        """Drop one ref; frees the block at zero. Returns True if freed."""
+        assert self.ref_count[blk] > 0, "deref underflow"
+        self.ref_count[blk] -= 1
+        if self.ref_count[blk] == 0:
+            self.free_blocks.append(blk)
+            return True
+        return False
 
     def bump(self, slot: int, n: int = 1):
         """Advance the HOST mirror after a step (the device lengths were

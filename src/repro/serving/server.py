@@ -1,0 +1,378 @@
+"""ServeFront: async continuous-batching frontend over any Engine.
+
+The engine is a library — ``submit``/``step`` must be driven by a caller's
+loop, which is fine for benchmarks and useless for traffic. ServeFront is
+the missing producer/consumer split (the nano-vLLM shape, SNIPPETS §1):
+
+  * producers call ``add_request`` from any thread (or the HTTP handler
+    below) and get back a ``RequestHandle`` that streams tokens as they
+    are sampled — a blocking iterator for sync consumers, ``atokens()``
+    for async ones;
+  * ONE consumer loop thread steps the engine whenever work is pending
+    and pumps each request's new tokens into its handle between steps;
+  * cancellation (client disconnect) is immediate and lock-free on the
+    caller's side — ``handle.cancel()`` flips the engine's per-request
+    flags and the next step's sweep returns every KV block the request
+    held (within one step, tested in tests/test_server.py);
+  * backpressure: a bounded number of live handles — ``add_request``
+    blocks (with optional timeout) instead of growing the queue without
+    bound, and ``close`` wakes every blocked producer.
+
+Because every data plane (resident, streamed dense, expert-paged MoE,
+sharded, speculative) rides the same Engine API, one frontend serves all
+of them; prefix caching (serving/prefix.py) composes transparently —
+admission happens inside ``Engine.submit``/``step`` as usual.
+
+The HTTP layer is stdlib-only (DESIGN.md §12): ``POST /v1/generate``
+streams Server-Sent Events (one ``data: {"token": N}`` frame per token),
+``GET /v1/stats`` reports engine/front/prefix/stream/expert/spec
+telemetry. A broken client socket mid-stream triggers the cancellation
+path — the serving analogue of the paper's claim that the host
+orchestration layer, not the accelerator, decides whether the flash/DRAM
+tiers are kept busy.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import queue
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+_DONE = object()                 # stream terminator sentinel
+
+
+class RequestHandle:
+    """Per-request streaming handle. The loop thread pushes sampled
+    tokens onto a thread-safe queue; consumers drain it without ever
+    touching the engine. ``tokens`` accumulates the full output (the
+    ``result()`` view); the queue is the incremental one."""
+
+    def __init__(self, front: "ServeFront", rid: int):
+        self._front = front
+        self.rid = rid
+        self.tokens: list[int] = []
+        self.cancelled = False
+        self._q: queue.Queue = queue.Queue()
+        self._done = threading.Event()
+
+    # --- loop-thread side -----------------------------------------------------
+
+    def _push(self, toks):
+        for t in toks:
+            self.tokens.append(int(t))
+            self._q.put(int(t))
+
+    def _finish(self):
+        if not self._done.is_set():
+            self._done.set()
+            self._q.put(_DONE)
+
+    # --- consumer side --------------------------------------------------------
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def __iter__(self):
+        """Blocking per-token stream (sync consumers, the SSE handler)."""
+        while True:
+            t = self._q.get()
+            if t is _DONE:
+                return
+            yield t
+
+    async def atokens(self):
+        """Async per-token stream; the blocking queue get rides the event
+        loop's default thread-pool executor."""
+        loop = asyncio.get_running_loop()
+        while True:
+            t = await loop.run_in_executor(None, self._q.get)
+            if t is _DONE:
+                return
+            yield t
+
+    def result(self, timeout: float | None = None) -> list[int]:
+        """Block until the request completes; the full output tokens."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still generating")
+        return list(self.tokens)
+
+    def cancel(self) -> bool:
+        """Disconnect: stop generating and release the request's KV
+        blocks (next step's sweep). Lock-free — never blocks behind a
+        running step — and immediately terminates the token stream."""
+        if self.done or self.cancelled:
+            return False
+        self.cancelled = True
+        self._front._cancel(self)
+        return True
+
+
+class ServeFront:
+    """The continuous-batching frontend: producer intake + one consumer
+    step-loop thread over a single Engine (any plane)."""
+
+    def __init__(self, engine, max_waiting: int = 64,
+                 poll_s: float = 0.05):
+        self.engine = engine
+        self.max_waiting = max_waiting
+        self._poll_s = poll_s
+        self._handles: dict[int, RequestHandle] = {}
+        self._progress: dict[int, int] = {}      # rid -> tokens pumped
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)
+        self._wake = threading.Event()
+        self._closed = False
+        self.error: BaseException | None = None
+        self.n_finished = 0
+        self.n_cancelled = 0
+        self._loop = threading.Thread(target=self._run, daemon=True,
+                                      name="servefront-loop")
+        self._loop.start()
+
+    # --- producer side --------------------------------------------------------
+
+    def add_request(self, prompt, max_new: int = 16,
+                    timeout: float | None = None) -> RequestHandle:
+        """Thread-safe intake. Blocks while ``max_waiting`` handles are
+        live (backpressure — the frontend's bound, enforced HERE so the
+        loop thread never blocks inside ``Engine.submit``); raises
+        TimeoutError past ``timeout`` and RuntimeError once closed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while len(self._handles) >= self.max_waiting \
+                    and not self._closed:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(
+                            "add_request: server at capacity "
+                            f"(max_waiting={self.max_waiting})")
+                self._cv.wait(remaining)
+            if self._closed:
+                raise RuntimeError("add_request: server is closed"
+                                   + (f" ({self.error!r})" if self.error
+                                      else ""))
+            rid = self.engine.submit(list(prompt), max_new=max_new)
+            h = RequestHandle(self, rid)
+            self._handles[rid] = h
+            self._progress[rid] = 0
+        self._wake.set()
+        return h
+
+    def _cancel(self, h: RequestHandle):
+        # lock-free on purpose: called from disconnect handlers that must
+        # never wait behind a running compiled step.
+        self.engine.cancel(h.rid)
+        self.n_cancelled += 1
+        h._finish()                     # terminate the stream NOW
+        self._wake.set()                # let the loop sweep the slot
+
+    # --- consumer loop --------------------------------------------------------
+
+    def _work_pending(self) -> bool:
+        eng = self.engine
+        return (bool(eng.waiting) or bool(eng.pool.active)
+                or any(not r.done for r in eng.requests.values()))
+
+    def _pump(self):
+        """Forward each request's newly sampled tokens into its handle,
+        finish handles whose requests completed, and drop fully-drained
+        bookkeeping (``Engine.forget`` refuses until the slot is swept,
+        so a cancelled-mid-step rid simply retries next pump)."""
+        drained = []
+        with self._mu:
+            for rid, h in self._handles.items():
+                req = self.engine.requests.get(rid)
+                if req is None:                  # already forgotten
+                    h._finish()
+                    drained.append(rid)
+                    continue
+                if not h.cancelled:
+                    out = req.out
+                    prog = self._progress[rid]
+                    if len(out) > prog:
+                        h._push(out[prog:len(out)])
+                        self._progress[rid] = len(out)
+                if req.done:
+                    if not h.done:
+                        if req.cancelled:
+                            h.cancelled = True   # engine-side cancel
+                        else:
+                            self.n_finished += 1
+                        h._finish()
+                    if self.engine.forget(rid):
+                        drained.append(rid)
+            for rid in drained:
+                self._handles.pop(rid, None)
+                self._progress.pop(rid, None)
+            if drained:
+                self._cv.notify_all()            # backpressure slots freed
+
+    def _run(self):
+        while True:
+            try:
+                stepped = False
+                if self._work_pending():
+                    self.engine.step()
+                    stepped = True
+                self._pump()
+            except BaseException as e:           # engine died: fail fast,
+                self._fail(e)                    # never hang consumers
+                return
+            with self._mu:
+                if self._closed and not self._handles \
+                        and not self._work_pending():
+                    return
+            if not stepped:
+                self._wake.wait(timeout=self._poll_s)
+                self._wake.clear()
+
+    def _fail(self, e: BaseException):
+        with self._cv:
+            self.error = e
+            self._closed = True
+            for h in self._handles.values():
+                h._finish()
+            self._handles.clear()
+            self._progress.clear()
+            self._cv.notify_all()
+
+    # --- lifecycle / telemetry ------------------------------------------------
+
+    def close(self, drain: bool = True, timeout: float | None = None):
+        """Stop intake and shut the loop down. ``drain=True`` serves every
+        live request to completion first; ``drain=False`` cancels them
+        (their KV blocks come back through the final sweep). Idempotent;
+        also closes the engine (prefetcher thread, blocked submitters)."""
+        with self._cv:
+            self._closed = True
+            if not drain:
+                for h in list(self._handles.values()):
+                    if not (h.done or h.cancelled):
+                        h.cancelled = True
+                        self.engine.cancel(h.rid)
+                        self.n_cancelled += 1
+                        h._finish()
+            self._cv.notify_all()
+        self._wake.set()
+        self._loop.join(timeout)
+        self.engine.close()
+        if self.error is not None:
+            raise RuntimeError("serve loop failed") from self.error
+
+    def stats(self) -> dict:
+        """One merged telemetry dict for GET /v1/stats: frontend counters
+        + engine queue/pool state + whichever plane-specific stats the
+        wrapped engine exposes."""
+        eng = self.engine
+        out = {
+            "live_handles": len(self._handles),
+            "waiting": len(eng.waiting),
+            "running": len(eng.pool.active),
+            "finished": self.n_finished,
+            "cancelled": self.n_cancelled,
+            "steps": eng._steps_done,
+            "free_kv_blocks": len(eng.pool.free_blocks),
+            "step_traces": eng.step_traces,
+            "closed": self._closed,
+        }
+        if getattr(eng, "prefix", None) is not None:
+            out.update(eng.prefix_stats())
+        if getattr(eng, "streamed", False):
+            out["stream"] = eng.stream_stats()
+            if eng.streamed_moe:
+                out["experts"] = eng.expert_stats()
+        if getattr(eng, "spec_cfg", None) is not None:
+            out["spec"] = eng.spec_stats()
+        return out
+
+
+# --- stdlib HTTP frontend -----------------------------------------------------
+
+
+def make_http_server(front: ServeFront, port: int = 8000,
+                     host: str = "127.0.0.1") -> ThreadingHTTPServer:
+    """Bind the frontend to a threading stdlib HTTP server (one handler
+    thread per connection; ``port=0`` picks a free port — the bound one
+    is ``server.server_address[1]``). Caller runs ``serve_forever`` in a
+    thread and ``shutdown()``s it on exit.
+
+      POST /v1/generate  {"prompt": [ids], "max_new": N, "stream": true}
+          -> SSE: one ``data: {"token": t}`` frame per sampled token,
+             then ``data: [DONE]``; ``"stream": false`` -> one JSON body.
+          A broken client socket mid-stream cancels the request (KV
+          blocks back on the free list within one step).
+      GET  /v1/stats     -> ServeFront.stats() as JSON.
+    """
+
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, *args):            # keep test output clean
+            pass
+
+        def _json(self, code: int, payload: dict):
+            body = json.dumps(payload).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path != "/v1/stats":
+                self.send_error(404)
+                return
+            self._json(200, front.stats())
+
+        def do_POST(self):
+            if self.path != "/v1/generate":
+                self.send_error(404)
+                return
+            try:
+                n = int(self.headers.get("Content-Length", 0))
+                payload = json.loads(self.rfile.read(n) or b"{}")
+                prompt = [int(t) for t in payload["prompt"]]
+                max_new = int(payload.get("max_new", 16))
+                stream = bool(payload.get("stream", True))
+                timeout = payload.get("timeout")
+            except (KeyError, TypeError, ValueError):
+                self.send_error(400, "bad request body")
+                return
+            try:
+                h = front.add_request(prompt, max_new=max_new,
+                                      timeout=timeout)
+            except TimeoutError:
+                self.send_error(503, "server at capacity")
+                return
+            except (RuntimeError, ValueError) as e:
+                self.send_error(400, str(e))
+                return
+            if not stream:
+                self._json(200, {"rid": h.rid, "tokens": h.result()})
+                return
+            self.close_connection = True
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.send_header("Connection", "close")
+            self.end_headers()
+            try:
+                for t in h:
+                    frame = json.dumps({"token": int(t)})
+                    self.wfile.write(f"data: {frame}\n\n".encode())
+                    self.wfile.flush()
+                self.wfile.write(b"data: [DONE]\n\n")
+                self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                # client went away mid-stream: the cancellation path —
+                # flags flip now, the next step's sweep frees the KV
+                h.cancel()
+
+    server = ThreadingHTTPServer((host, port), Handler)
+    server.front = front
+    return server

@@ -1,7 +1,8 @@
 """Expert-paged MoE serving (ISSUE 5): the engine must serve the MoE smoke
 configs streamed from the PageStore — only ROUTED experts crossing to the
 device — token-identical to the fully-resident MoE engine, through exactly
-four compiled traces (embed + router half + expert half + finish)."""
+three compiled traces (head [embed + attn/router(0)] + fused expert/attn
+handoff + tail [last experts + finish])."""
 from __future__ import annotations
 
 import jax
@@ -156,18 +157,19 @@ def test_streamed_pin_all_matches_resident(params, resident_tokens):
     assert st["expert_hit_rate"] == 1.0 and st["misroute_stalls"] == 0
 
 
-def test_streamed_four_traces_across_churn(params):
-    """embed + ONE router-half trace + ONE expert-half trace + finish == 4
-    traces, stable across slot churn, layers, and step count."""
+def test_streamed_three_traces_across_churn(params):
+    """head (embed + attn/router(0)) + ONE fused expert/attn handoff trace
+    + tail (last experts + finish) == 3 traces, stable across slot churn,
+    layers, and step count."""
     eng, _ = _streamed(params)
     r1 = eng.submit([1, 2, 3], max_new=2)
     eng.submit([5, 6, 7, 8, 9], max_new=10)
     while not eng.requests[r1].done:
         eng.step()
-    assert eng.step_traces == 4
+    assert eng.step_traces == 3
     eng.submit(list(range(1, 20)), max_new=4)    # admit into freed slot
     eng.run()
-    assert eng.step_traces == 4, "expert paging or churn retraced"
+    assert eng.step_traces == 3, "expert paging or churn retraced"
 
 
 def test_streamed_group_size_must_be_one(params):
@@ -253,7 +255,7 @@ def test_streamed_grouped_routing_matches_resident(params):
                  weight_store=store, stream_cfg=StreamConfig())
     _submit_pair(eng)
     assert eng.run() == want
-    assert eng.step_traces == 4
+    assert eng.step_traces == 3
 
 
 def test_streamed_pin_shared_experts(params, resident_tokens):
@@ -331,4 +333,4 @@ def test_spec_streamed_moe_parity(params):
                  spec_cfg=SpecConfig(k=3))
     rid = eng.submit([7] * 6, max_new=10)
     assert eng.run()[rid] == want
-    assert eng.step_traces == 4
+    assert eng.step_traces == 3

@@ -1,0 +1,327 @@
+"""Hash-based prefix caching (ISSUE 8): chain-hash exactness, copy-free
+shared-prefix admission, ref-count-aware LRU eviction, and the pool-wide
+block-conservation invariant — plus EXACT parity: a prefix-cache-hit
+generation emits the identical greedy token stream as a cold one while
+spending measurably fewer prefill lanes."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import OPT_TINY
+from repro.models import dense
+from repro.serving.engine import Engine
+from repro.serving.kvcache import PagedKVPool
+from repro.serving.prefix import PrefixIndex, block_hashes
+
+from hyp_compat import HAVE_HYPOTHESIS, given, settings, st
+
+MAX_SEQ = 96
+BS = 16                                  # pool block size
+
+
+@pytest.fixture(scope="module")
+def params():
+    return dense.init(OPT_TINY, jax.random.PRNGKey(0))
+
+
+def _engine(params, **kw):
+    kw.setdefault("prefix_cache", True)
+    return Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ, rber=0.0,
+                  **kw)
+
+
+# --- block_hashes: the chain-hash scheme --------------------------------------
+
+
+def test_block_hashes_full_blocks_only():
+    toks = list(range(40))               # 2 full blocks of 16 + partial 8
+    assert len(block_hashes(toks, BS)) == 2
+    assert len(block_hashes(toks, BS, limit=1)) == 1
+    assert block_hashes(toks[:15], BS) == []
+
+
+def test_block_hashes_chain_certifies_whole_prefix():
+    """Entry i digests tokens[:(i+1)*bs]: same block-1 TOKENS under a
+    different block 0 must hash differently (their KV differs through
+    attention), while identical prefixes collide exactly."""
+    a = [1] * BS + [7] * BS
+    b = [2] * BS + [7] * BS
+    ha, hb = block_hashes(a, BS), block_hashes(b, BS)
+    assert ha[1] != hb[1]                # same tokens, different history
+    assert ha == block_hashes(list(a), BS)
+    # boundary-ambiguous token strings must not collide
+    assert block_hashes([11, 2] + [0] * 14, BS) \
+        != block_hashes([1, 12] + [0] * 14, BS)
+
+
+# --- PrefixIndex unit semantics -----------------------------------------------
+
+
+def _pool(n_slots=2, n_blocks=None):
+    return PagedKVPool(n_layers=1, n_slots=n_slots, max_seq=MAX_SEQ,
+                       n_kv_heads=1, head_dim=4, block_size=BS,
+                       n_blocks=n_blocks)
+
+
+def _prefill(pool, rid, n_tokens):
+    slot = pool.alloc(rid, n_tokens)
+    pool.ensure(slot, n_tokens)
+    pool.bump(slot, n_tokens)
+    return slot
+
+
+def test_index_insert_lookup_roundtrip():
+    pool = _pool()
+    idx = PrefixIndex(pool)
+    slot = _prefill(pool, 0, 3 * BS)
+    hashes = block_hashes(list(range(3 * BS)), BS)
+    blocks = [int(b) for b in pool.block_tables[slot, :3]]
+    assert idx.insert(hashes, blocks) == 3
+    assert all(int(pool.ref_count[b]) == 2 for b in blocks)
+    assert idx.lookup(hashes) == blocks
+    assert idx.lookup(hashes[:2]) == blocks[:2]
+    # a diverging chain misses from its first unseen block
+    other = block_hashes([99] * (2 * BS), BS)
+    assert idx.lookup(other) == []
+    pool.release(slot)                   # index ref keeps the blocks alive
+    assert all(int(pool.ref_count[b]) == 1 for b in blocks)
+    assert sorted(pool.free_blocks + blocks) \
+        == sorted(range(1, pool.n_blocks))
+
+
+def test_index_insert_never_rebinds():
+    """First writer wins: a duplicate prompt's blocks are NOT adopted by
+    the index — they release normally with their slot."""
+    pool = _pool()
+    idx = PrefixIndex(pool)
+    hashes = block_hashes(list(range(2 * BS)), BS)
+    s1 = _prefill(pool, 0, 2 * BS)
+    b1 = [int(b) for b in pool.block_tables[s1, :2]]
+    idx.insert(hashes, b1)
+    s2 = _prefill(pool, 1, 2 * BS)
+    b2 = [int(b) for b in pool.block_tables[s2, :2]]
+    assert idx.insert(hashes, b2) == 0   # no new entries
+    assert idx.lookup(hashes) == b1
+    pool.release(s2)
+    assert all(int(pool.ref_count[b]) == 0 for b in b2)
+
+
+def test_eviction_is_leaf_first_and_ref_aware():
+    pool = _pool()
+    idx = PrefixIndex(pool)
+    slot = _prefill(pool, 0, 3 * BS)
+    hashes = block_hashes(list(range(3 * BS)), BS)
+    blocks = [int(b) for b in pool.block_tables[slot, :3]]
+    idx.insert(hashes, blocks)
+    # while the slot still maps the chain, nothing is evictable
+    assert idx.evict(3) == 0
+    pool.release(slot)
+    # now the chain frees leaf-first, coldest first
+    assert idx.evict(1) == 1
+    assert hashes[2] not in idx and hashes[1] in idx
+    assert idx.evict(10) == 2            # parent exposed, then the root
+    assert len(idx) == 0
+    assert sorted(pool.free_blocks) == sorted(range(1, pool.n_blocks))
+
+
+def test_shared_alloc_adopts_and_tail_reserves():
+    pool = _pool()
+    idx = PrefixIndex(pool)
+    slot = _prefill(pool, 0, 2 * BS)
+    hashes = block_hashes(list(range(2 * BS)), BS)
+    blocks = [int(b) for b in pool.block_tables[slot, :2]]
+    idx.insert(hashes, blocks)
+    pool.release(slot)
+    s2 = pool.alloc(1, 2 * BS + 8, shared_blocks=idx.lookup(hashes))
+    assert s2 is not None
+    assert [int(b) for b in pool.block_tables[s2, :2]] == blocks
+    assert int(pool.lengths[s2]) == 2 * BS          # starts past the hit
+    assert int(pool.reserved[s2]) == 1              # only the tail block
+    assert all(int(pool.ref_count[b]) == 2 for b in blocks)
+    pool.release(s2)
+    assert all(int(pool.ref_count[b]) == 1 for b in blocks)
+
+
+def test_shared_alloc_must_leave_tail():
+    pool = _pool()
+    idx = PrefixIndex(pool)
+    slot = _prefill(pool, 0, 2 * BS)
+    hashes = block_hashes(list(range(2 * BS)), BS)
+    idx.insert(hashes, [int(b) for b in pool.block_tables[slot, :2]])
+    pool.release(slot)
+    with pytest.raises(AssertionError, match="tail"):
+        pool.alloc(1, 2 * BS, shared_blocks=idx.lookup(hashes))
+
+
+# --- engine-level parity and accounting ---------------------------------------
+
+
+def _conserved(eng):
+    """Every pool block is exactly one of: free, or accounted for by its
+    ref_count = (#slot-table mappings) + (1 if prefix-cached)."""
+    pool = eng.pool
+    maps = np.zeros(pool.n_blocks, np.int64)
+    for s in range(pool.n_slots):
+        for b in pool.block_tables[s]:
+            if int(b):
+                maps[int(b)] += 1
+    cached = np.zeros(pool.n_blocks, np.int64)
+    if eng.prefix is not None:
+        for e in eng.prefix.entries.values():
+            cached[e.block] += 1
+    assert cached.max(initial=0) <= 1, "a block cached twice"
+    free = set(pool.free_blocks)
+    assert len(free) == len(pool.free_blocks), "free-list duplicate"
+    for b in range(1, pool.n_blocks):
+        want = int(maps[b] + cached[b])
+        assert int(pool.ref_count[b]) == want, f"block {b} ref leak"
+        assert (b in free) == (want == 0)
+    return True
+
+
+def test_warm_hit_identical_tokens_fewer_prefill_lanes(params):
+    """THE acceptance property: the second request sharing a >= 2-block
+    system prompt emits the identical greedy stream while admission skips
+    the cached blocks' prefill lanes entirely."""
+    system = list(range(1, 40))          # 2 full blocks + tail
+    prompt = system + [50, 51]
+    cold = _engine(params, prefix_cache=False)
+    r = cold.submit(prompt, max_new=8)
+    want = cold.run()[r]
+    cold_lanes = sum(s["prefill_tokens"] for s in cold.stats)
+
+    eng = _engine(params)
+    r1 = eng.submit(prompt, max_new=8)
+    eng.run()
+    warm_start = len(eng.stats)
+    r2 = eng.submit(prompt, max_new=8)
+    outs = eng.run()
+    assert outs[r1] == want and outs[r2] == want
+    warm_lanes = sum(s["prefill_tokens"] for s in eng.stats[warm_start:])
+    assert warm_lanes < cold_lanes
+    assert warm_lanes == cold_lanes - 2 * BS
+    ps = eng.prefix_stats()
+    assert ps["prefix_prefill_tokens_saved"] == 2 * BS
+    assert ps["prefix_hits"] >= 2
+    assert _conserved(eng)
+
+
+def test_two_concurrent_sharers(params):
+    """Both slots admit against the same cached chain concurrently; the
+    shared blocks carry one ref per slot + the index's, and conservation
+    holds after both release."""
+    system = list(range(1, 40))
+    eng = _engine(params)
+    r0 = eng.submit(system + [50], max_new=6)
+    eng.run()                            # seeds the cache
+    want = eng.requests[r0].out
+    ra = eng.submit(system + [50], max_new=6)
+    rb = eng.submit(system + [50], max_new=6)
+    eng.step()                           # both admitted, both sharing
+    shared = [int(b) for b in eng.pool.block_tables[
+        eng.requests[ra].slot, :2]]
+    assert shared == [int(b) for b in eng.pool.block_tables[
+        eng.requests[rb].slot, :2]]
+    assert all(int(eng.pool.ref_count[b]) == 3 for b in shared)
+    outs = eng.run()
+    assert outs[ra] == want and outs[rb] == want
+    assert _conserved(eng)
+
+
+def test_cancelled_request_never_inserts(params):
+    """A cancelled request's prompt blocks are NOT retained: its stream
+    was never fully served, and its blocks return to the free list."""
+    eng = _engine(params)
+    entries0 = len(eng.prefix)
+    rid = eng.submit(list(range(1, 40)), max_new=32)
+    eng.step()                           # prefilling
+    assert eng.cancel(rid)
+    eng.step()                           # sweep reclaims within one step
+    assert len(eng.prefix) == entries0
+    assert eng.requests[rid].slot not in eng.pool.active
+    assert _conserved(eng)
+    assert not eng.cancel(rid)           # idempotent: already done
+
+
+def test_eviction_under_admission_pressure(params):
+    """A tiny pool: cached chains must be evicted to admit fresh prompts,
+    and serving never wedges or leaks."""
+    pool_blocks = 2 * (MAX_SEQ // BS) + 1
+    eng = Engine(OPT_TINY, params, max_slots=2, max_seq=MAX_SEQ, rber=0.0,
+                 prefix_cache=True)
+    eng.pool = PagedKVPool(
+        n_layers=OPT_TINY.n_layers, n_slots=2, max_seq=MAX_SEQ,
+        n_kv_heads=OPT_TINY.n_kv_heads,
+        head_dim=OPT_TINY.d_model // OPT_TINY.n_heads,
+        block_size=BS, n_blocks=pool_blocks)
+    eng.prefix = PrefixIndex(eng.pool)
+    for wave in range(3):                # distinct prompts fill the cache
+        eng.submit([wave * 97 + t for t in range(1, 40)], max_new=4)
+        eng.submit([wave * 89 + t for t in range(1, 40)], max_new=4)
+        eng.run()
+        assert _conserved(eng)
+    assert eng.prefix.evicted > 0 or len(eng.prefix) * BS \
+        <= (pool_blocks - 1) * BS
+    assert all(r.done for r in eng.requests.values())
+
+
+# --- hypothesis: interleaved hit/miss/cancel/release conservation -------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_prefix_pool_conservation_property(data):
+    """Random interleavings of insert-after-serve / shared-alloc /
+    release / evict against a small pool: no leaks, no double-frees, no
+    ref underflow — the conservation invariant after every operation."""
+    pool = _pool(n_slots=3, n_blocks=16)
+    idx = PrefixIndex(pool)
+
+    class _Shim:                         # reuse the engine-level checker
+        prefix = idx
+
+    shim = _Shim()
+    shim.pool = pool
+    prompts = [[p * 31 + t for t in range(n * BS)]
+               for p, n in ((1, 1), (2, 2), (3, 3), (4, 2))]
+    live = {}                            # slot -> (rid, hashes)
+    rid = 0
+    for _ in range(data.draw(st.integers(5, 40), label="ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "finish", "cancel", "evict"]), label="op")
+        if op == "admit" and pool.free_slots:
+            toks = data.draw(st.sampled_from(prompts), label="prompt")
+            hashes = block_hashes(toks, BS,
+                                  limit=(len(toks) + BS - 1) // BS - 1)
+            shared = idx.lookup(hashes)
+            need = len(toks) + 4
+            slot = pool.alloc(rid, need, shared_blocks=shared)
+            if slot is None and idx.evict(pool.blocks_for(need)
+                                          - len(shared)) > 0:
+                shared = idx.lookup(hashes)
+                slot = pool.alloc(rid, need, shared_blocks=shared)
+            if slot is not None:
+                pool.ensure(slot, len(toks))
+                pool.bump(slot, len(toks) - int(pool.lengths[slot]))
+                live[slot] = (rid, block_hashes(toks, BS))
+                rid += 1
+        elif op == "finish" and live:
+            slot = data.draw(st.sampled_from(sorted(live)), label="slot")
+            _, hashes = live.pop(slot)
+            blocks = [int(b)
+                      for b in pool.block_tables[slot, :len(hashes)]]
+            idx.insert(hashes, blocks)   # completed: retain prompt chain
+            pool.release(slot)
+        elif op == "cancel" and live:
+            slot = data.draw(st.sampled_from(sorted(live)), label="slot")
+            live.pop(slot)
+            pool.release(slot)           # cancelled: NO retain
+        elif op == "evict":
+            idx.evict(data.draw(st.integers(1, 4), label="n"))
+        _conserved(shim)
+    for slot in list(live):
+        pool.release(slot)
+    idx.evict(len(idx))
+    assert sorted(pool.free_blocks) == sorted(range(1, pool.n_blocks))
