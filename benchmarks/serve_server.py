@@ -61,16 +61,32 @@ def _client(port: int, prompt, max_new: int, out: dict):
                      json.dumps({"prompt": prompt, "max_new": max_new}),
                      {"Content-Type": "application/json"})
         resp = conn.getresponse()
-        toks, ttft = [], None
+        toks, ttft, reason = [], None, None
         for raw in resp:
             line = raw.decode().strip()
             if not line.startswith("data: ") or line == "data: [DONE]":
                 continue
-            if ttft is None:
-                ttft = time.perf_counter() - t0
-            toks.append(json.loads(line[len("data: "):])["token"])
+            frame = json.loads(line[len("data: "):])
+            if "token" in frame:
+                if ttft is None:
+                    ttft = time.perf_counter() - t0
+                toks.append(frame["token"])
+            else:
+                reason = frame.get("finish_reason")
         out["ttft"] = ttft
         out["tokens"] = toks
+        out["finish_reason"] = reason
+    finally:
+        conn.close()
+
+
+def _health(port: int) -> tuple[int, dict]:
+    """GET /v1/health: (status_code, payload)."""
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+    try:
+        conn.request("GET", "/v1/health")
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read())
     finally:
         conn.close()
 
@@ -144,6 +160,10 @@ def run() -> Report:
         deadline = time.monotonic() + 60
         while front.stats()["cancelled"] < 1 and time.monotonic() < deadline:
             time.sleep(0.02)
+
+        # fault-free run: /v1/health must report 200 "ok" — no fault
+        # counter may tick with the fault plane compiled in but idle
+        health_code, health = _health(port)
     finally:
         server.shutdown()
         server.server_close()
@@ -172,6 +192,10 @@ def run() -> Report:
             leaked, 0, 0)
     rep.add("data plane traced exactly once across both phases",
             eng.step_traces, 1, 1)
+    rep.add("GET /v1/health returned 200 on the fault-free run",
+            health_code, 200, 200)
+    rep.add("health status 'ok' (fault plane idle: no counter ticked)",
+            int(health["status"] == "ok"), 1, 1)
     write_bench_json("serve_server", {
         "n_requests": N_REQUESTS, "max_new": MAX_NEW,
         "arrival_tps": ARRIVAL_TPS,
@@ -186,6 +210,7 @@ def run() -> Report:
         "prefix_hit_rate": ps["prefix_hit_rate"],
         "parity": parity, "cancelled": front.n_cancelled,
         "leaked_blocks": leaked, "traces": eng.step_traces,
+        "health_code": health_code, "health_status": health["status"],
     })
     return rep
 

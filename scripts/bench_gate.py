@@ -19,7 +19,15 @@ and holds the page-pool floors independently:
   * serve_server (ISSUE 8 frontend job): prefix-phase HTTP clients spend
     strictly fewer prefill lanes than the cold phase with identical
     output, a mid-stream disconnect cancels >= 1 request and leaks zero
-    KV blocks at drain, and the data plane traces exactly once.
+    KV blocks at drain, and the data plane traces exactly once;
+  * serve_chaos (ISSUE 9 fault job): under injected NAND faults at a
+    stuck-UECC rate >= 1e-3 plus slow reads, a forced streamer-worker
+    crash, and a forced persistent step fault, >= 95% of requests finish
+    length/stop (the rest error/timeout, never hung), corrected-read
+    token streams are bit-identical to the fault-free run, every
+    escalation path fired (UECC detect -> retry -> relocation; worker
+    StoreFault -> step retry), zero KV blocks leak, and the server
+    survives reporting 200/degraded.
 
     python scripts/bench_gate.py [--section NAME ...] [BENCH_serve.json]
 
@@ -143,6 +151,61 @@ def _gate_server(results: dict, failures: list[str], required: bool):
             "HTTP traffic (contract: exactly once)")
 
 
+CHAOS_SUCCESS_FLOOR = 0.95   # fraction of requests finishing length/stop
+CHAOS_STUCK_FLOOR = 1e-3     # configured UECC page rate the run must hold
+
+
+def _gate_chaos(results: dict, failures: list[str], required: bool):
+    ch = results.get("serve_chaos")
+    if ch is None:
+        if required:
+            failures.append("serve_chaos: no recorded results")
+        return
+    if ch.get("stuck_page_rate", 0.0) < CHAOS_STUCK_FLOOR:
+        failures.append(
+            f"serve_chaos: configured stuck-page rate "
+            f"{ch.get('stuck_page_rate', 0.0)} below the {CHAOS_STUCK_FLOOR} "
+            "chaos floor (the run must actually inject UECC pages)")
+    frac = ch.get("success_frac", 0.0)
+    if frac < CHAOS_SUCCESS_FLOOR:
+        failures.append(
+            f"serve_chaos: only {frac:.3f} of requests finished "
+            f"length/stop (floor {CHAOS_SUCCESS_FLOOR}; the rest must be "
+            "error/timeout, never hung)")
+    for key in ("parity_dense", "parity_recovery", "parity_moe"):
+        if not ch.get(key, False):
+            failures.append(
+                f"serve_chaos: {key} lost bit-identity vs the fault-free "
+                "run (corrected reads must ship exact bytes)")
+    for key, what in (
+            ("uecc_detected", "no UECC page was detected"),
+            ("read_retries", "the read-retry path never fired"),
+            ("relocations", "no stuck page escalated to relocation"),
+            ("slow_reads", "no slow read was injected"),
+            ("fetch_faults", "the forced worker crash never escalated "
+                             "to a StoreFault"),
+            ("step_retries", "no step retry absorbed a transient fault"),
+            ("step_faults", "the forced persistent step fault never "
+                            "fired")):
+        if ch.get(key, 0) < 1:
+            failures.append(f"serve_chaos: {what} ({key}="
+                            f"{ch.get(key, 0)})")
+    for key in ("leaked_kv_dense", "leaked_kv_moe"):
+        if ch.get(key, 1) != 0:
+            failures.append(
+                f"serve_chaos: {ch.get(key)} KV blocks leaked ({key}) "
+                "after the chaos run drained")
+    if not ch.get("survived", False):
+        failures.append(
+            "serve_chaos: the serving loop died under injected faults")
+    if not (ch.get("health_code") == 200
+            and ch.get("health_status") == "degraded"):
+        failures.append(
+            f"serve_chaos: health reported {ch.get('health_code')}/"
+            f"{ch.get('health_status')!r} under chaos (contract: "
+            "200/'degraded' — alive, fault counters visible)")
+
+
 def gate(results: dict, sections: list[str] | None = None) -> list[str]:
     failures: list[str] = []
     if sections:
@@ -154,11 +217,14 @@ def gate(results: dict, sections: list[str] | None = None) -> list[str]:
             _gate_sharded(results, failures, required=True)
         if "serve_server" in sections:
             _gate_server(results, failures, required=True)
+        if "serve_chaos" in sections:
+            _gate_chaos(results, failures, required=True)
         return failures
     _gate_moe(results, failures)
     _gate_stream(results, failures)
     _gate_sharded(results, failures, required=False)
     _gate_server(results, failures, required=False)
+    _gate_chaos(results, failures, required=False)
     return failures
 
 
@@ -205,6 +271,12 @@ def main() -> int:
                 f"/{srv['cold_prefill_lanes']} cold, TTFT p50 "
                 f"{1e3 * srv['prefix_ttft_p50_s']:.0f}ms vs "
                 f"{1e3 * srv['cold_ttft_p50_s']:.0f}ms cold")
+        ch = results.get("serve_chaos")
+        if ch and (not sections or "serve_chaos" in sections):
+            bits.append(
+                f"serve_chaos {ch['success_frac']:.3f} finished under "
+                f"{ch['uecc_detected']} UECC / {ch['relocations']} "
+                f"relocations / {ch['step_faults']} step faults")
         print(f"bench gate: PASS ({'; '.join(bits) or 'nothing gated'})")
     return 1 if failures else 0
 

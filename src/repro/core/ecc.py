@@ -151,6 +151,59 @@ def check_and_correct(
     return corrected, dirty, uncorrectable
 
 
+def check_and_correct_np(
+    raw_bytes: np.ndarray, parity: np.ndarray
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side (numpy) port of ``check_and_correct`` for the store's
+    read-retry path: the PageStore verifies a freshly-read page against
+    its parity WITHOUT a device round-trip, so detected-uncorrectable
+    pages can re-read / relocate before any bytes reach the pool.
+
+    Same contract and return shapes as ``check_and_correct``:
+    (corrected (K, N) u8, dirty (K//8, N) bool, uncorrectable bool).
+    Bit-identical to the jnp path (tests/test_faultplane.py cross-checks).
+    """
+    k, n = raw_bytes.shape
+    if k % 8:
+        raise ValueError(f"K={k} must be a multiple of 8")
+    cw = raw_bytes.reshape(k // 8, 8, n)                            # (G, 8, N)
+
+    def byte_parity(x):
+        x = x ^ (x >> 4)
+        x = x ^ (x >> 2)
+        x = x ^ (x >> 1)
+        return x & np.uint8(1)
+
+    masked = cw[:, None, :, :] & _PHYS_MASK[None, :, :, None]       # (G,7,8,N)
+    pk = np.sum(byte_parity(masked).astype(np.int32), axis=2) & 1   # (G, 7, N)
+    stored_pk = (parity[:, None, :]
+                 >> np.arange(7, dtype=np.uint8)[None, :, None]) & 1
+    s_bits = pk.astype(np.uint8) ^ stored_pk.astype(np.uint8)
+    syndrome = np.sum(
+        s_bits.astype(np.int32)
+        << np.arange(7, dtype=np.int32)[None, :, None], axis=1)     # (G, N)
+    data_par = np.sum(byte_parity(cw).astype(np.int32), axis=1) & 1
+    stored_hamming_par = np.sum(stored_pk.astype(np.int32), axis=1) & 1
+    overall_recv = ((parity >> np.uint8(7)) & 1).astype(np.int32)
+    dq = (data_par + stored_hamming_par + overall_recv) & 1
+
+    is_err = dq.astype(bool)
+    onehot = is_err[:, None, :] \
+        & (syndrome[:, None, :] == _DATA_POS[None, :, None])
+    weights = (np.uint8(1) << np.arange(8, dtype=np.uint8))
+    flip = np.sum(
+        onehot.reshape(k // 8, 8, 8, n).astype(np.uint8)
+        * weights[None, None, :, None], axis=2).astype(np.uint8)
+    corrected = (cw ^ flip).reshape(k, n)
+
+    is_power = (syndrome & (syndrome - 1)) == 0
+    data_hit = np.any(onehot, axis=1)
+    uncorrectable = (~is_err & (syndrome != 0)) \
+        | (is_err & ~data_hit & ~is_power)
+    dirty = is_err | (syndrome != 0)
+    return corrected, dirty, uncorrectable
+
+
 def weights_to_bytes(w_int8: jnp.ndarray) -> jnp.ndarray:
     return lax.bitcast_convert_type(w_int8, jnp.uint8)
 

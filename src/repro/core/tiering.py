@@ -191,6 +191,27 @@ def deploy(
     return tiered, tier_map
 
 
+def tile_parity(parity: np.ndarray, k_tile: int, n_tile: int,
+                tile: int = 128) -> np.ndarray:
+    """The parity slice protecting ONE (tile, tile) q page of a flash
+    param: rows ``k_tile*tile/8 .. +tile/8``, cols ``n_tile*tile .. +tile``
+    of the (K//8, N) parity plane, zero-padded to the full page grid.
+
+    Valid because codewords are LOCAL to 8-row groups within a column
+    (the (72,64) layout) and the page grid pads K/N up to tile multiples:
+    K is a multiple of 8, tile is a multiple of 8, so no codeword ever
+    straddles real and padded rows — and the parity byte of an all-zero
+    padded codeword is exactly 0, which is what the zero-fill provides.
+    The PageStore's read-retry path uses this to verify pages host-side
+    without re-reading the whole entry."""
+    rows = tile // 8
+    out = np.zeros((rows, tile), np.uint8)
+    pr = parity[k_tile * rows:(k_tile + 1) * rows,
+                n_tile * tile:(n_tile + 1) * tile]
+    out[:pr.shape[0], :pr.shape[1]] = pr
+    return out
+
+
 # Per-layer flash Q/K/V/O copies (Alg. 2's in-flash projection targets).
 # ONE definition of the store entry names and the per-layer seed derivation,
 # shared by the streamed engine and deploy --store: if the two ever diverged,

@@ -46,10 +46,14 @@ def build_engine(arch: str = "opt-tiny", smoke: bool = True,
                  store_image: str | None = None, ckpt: str | None = None,
                  shards: int = 1, prefix_cache: bool = False,
                  max_waiting: int | None = None,
-                 sample_cfg: SampleConfig | None = None) -> Engine:
+                 sample_cfg: SampleConfig | None = None,
+                 fault_cfg=None) -> Engine:
     """Deploy ``arch`` into the tiered form and construct the serving
     engine — shared by the burst driver (``serve``) and the HTTP
-    frontend (``--serve-http``)."""
+    frontend (``--serve-http``). ``fault_cfg`` (a store.faults
+    FaultConfig) arms read-time NAND fault injection on the streamed
+    page store — attached AFTER programming, so program-time rber and
+    injected read faults compose (DESIGN.md §13)."""
     cfg = OPT_TINY if arch == "opt-tiny" else get_config(arch, smoke=smoke)
     if cfg.family not in ("dense", "moe"):
         raise SystemExit("engine serves dense- and moe-family archs")
@@ -118,12 +122,20 @@ def build_engine(arch: str = "opt-tiny", smoke: bool = True,
             draft_params = mod.init(draft_cfg, jax.random.PRNGKey(seed + 1))
     if sample_cfg is None:
         sample_cfg = SampleConfig(temperature=0.8, top_k=40)
-    return Engine(cfg, params, max_slots=4, max_seq=256, rber=rber,
-                  sample_cfg=sample_cfg, kv_aware=kv_aware, seed=seed,
-                  weight_store=store, stream_cfg=stream_cfg,
-                  spec_cfg=spec_cfg, draft_cfg=draft_cfg,
-                  draft_params=draft_params, prefix_cache=prefix_cache,
-                  max_waiting=max_waiting)
+    eng = Engine(cfg, params, max_slots=4, max_seq=256, rber=rber,
+                 sample_cfg=sample_cfg, kv_aware=kv_aware, seed=seed,
+                 weight_store=store, stream_cfg=stream_cfg,
+                 spec_cfg=spec_cfg, draft_cfg=draft_cfg,
+                 draft_params=draft_params, prefix_cache=prefix_cache,
+                 max_waiting=max_waiting)
+    if fault_cfg is not None:
+        if not eng.streamed:
+            raise SystemExit("--fault-* injects read-time NAND faults: "
+                             "they need the streamed page store (add "
+                             "--stream or --store-image)")
+        from repro.store.faults import FaultInjector
+        eng.store.attach_injector(FaultInjector(fault_cfg))
+    return eng
 
 
 def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
@@ -134,14 +146,14 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
           spec_k: int = 0, drafter: str = "ngram",
           adaptive_k: bool = False,
           store_image: str | None = None, ckpt: str | None = None,
-          shards: int = 1) -> dict:
+          shards: int = 1, fault_cfg=None) -> dict:
     eng = build_engine(arch, smoke=smoke, rber=rber, seed=seed,
                        kv_aware=kv_aware, stream=stream,
                        device_budget_mib=device_budget_mib,
                        group_size=group_size, auto_depth=auto_depth,
                        spec_k=spec_k, drafter=drafter,
                        adaptive_k=adaptive_k, store_image=store_image,
-                       ckpt=ckpt, shards=shards)
+                       ckpt=ckpt, shards=shards, fault_cfg=fault_cfg)
     cfg = eng.cfg
     rng = np.random.default_rng(seed)
     # submit enqueues: the whole burst goes in up front and the engine's
@@ -181,19 +193,28 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
 
 
 def serve_http(port: int, arch: str = "opt-tiny", prefix_cache: bool = True,
-               max_waiting: int = 64, **engine_kw):
+               max_waiting: int = 64, step_timeout: float | None = None,
+               **engine_kw):
     """``--serve-http``: the ServeFront continuous-batching loop behind
     the stdlib HTTP frontend (DESIGN.md §12). Binds, prints the resolved
     address, and serves until interrupted; client disconnects cancel
-    their requests and drain-close on exit serves what's left."""
+    their requests and drain-close on exit serves what's left.
+    ``step_timeout`` arms the step watchdog (DESIGN.md §13)."""
+    from repro.runtime.fault import FaultPolicy
     from repro.serving.server import ServeFront, make_http_server
     eng = build_engine(arch, prefix_cache=prefix_cache, **engine_kw)
-    front = ServeFront(eng, max_waiting=max_waiting)
+    policy = None
+    if step_timeout is not None:
+        policy = FaultPolicy(max_retries=2, retry_on=(Exception,),
+                             straggler_tolerance=10 ** 9,
+                             timeout_s=step_timeout)
+    front = ServeFront(eng, max_waiting=max_waiting, fault_policy=policy)
     server = make_http_server(front, port)
     host, bound = server.server_address[:2]
     print(f"serving {arch} on http://{host}:{bound} "
-          f"(POST /v1/generate, GET /v1/stats; prefix_cache="
-          f"{'on' if prefix_cache else 'off'}, max_waiting={max_waiting})")
+          f"(POST /v1/generate, GET /v1/stats, GET /v1/health; "
+          f"prefix_cache={'on' if prefix_cache else 'off'}, "
+          f"max_waiting={max_waiting})")
     try:
         server.serve_forever()
     except KeyboardInterrupt:
@@ -258,10 +279,36 @@ def main():
     ap.add_argument("--max-waiting", type=int, default=64,
                     help="backpressure bound: live requests the frontend "
                          "holds before add_request blocks (--serve-http)")
+    ap.add_argument("--fault-read-rber", type=float, default=0.0,
+                    help="chaos: per-bit transient read error rate "
+                         "injected on every flash page read (corrected "
+                         "by ECC or the read-retry path; needs --stream)")
+    ap.add_argument("--fault-stuck-rate", type=float, default=0.0,
+                    help="chaos: fraction of pages with STUCK "
+                         "uncorrectable codewords (retry cannot clear; "
+                         "escalates to relocation / DRAM fallback)")
+    ap.add_argument("--fault-slow-every", type=int, default=0,
+                    help="chaos: every Nth store read sleeps (tail-"
+                         "latency injection; 0 = off)")
+    ap.add_argument("--fault-io-every", type=int, default=0,
+                    help="chaos: every Nth store read raises a transient "
+                         "IOError (streamer retries absorb it; 0 = off)")
+    ap.add_argument("--step-timeout", type=float, default=None,
+                    help="arm the serving step watchdog: a step producing "
+                         "no result within S seconds faults and retries "
+                         "(--serve-http)")
     args = ap.parse_args()
     rber = args.rber
     if rber is None:
         rber = 0.0 if args.store_image else 1e-4
+    fault_cfg = None
+    if (args.fault_read_rber or args.fault_stuck_rate
+            or args.fault_slow_every or args.fault_io_every):
+        from repro.store.faults import FaultConfig
+        fault_cfg = FaultConfig(read_rber=args.fault_read_rber,
+                                stuck_page_rate=args.fault_stuck_rate,
+                                slow_read_every=args.fault_slow_every,
+                                io_error_every=args.fault_io_every)
     if args.serve_http is not None:
         serve_http(args.serve_http, arch=args.arch,
                    prefix_cache=args.prefix_cache,
@@ -272,7 +319,8 @@ def main():
                    spec_k=args.spec_k, drafter=args.drafter,
                    adaptive_k=args.adaptive_k,
                    store_image=args.store_image, ckpt=args.ckpt,
-                   shards=args.shards)
+                   shards=args.shards, fault_cfg=fault_cfg,
+                   step_timeout=args.step_timeout)
         return
     out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
                 max_new=args.max_new, rber=rber, kv_aware=args.kv_aware,
@@ -282,7 +330,7 @@ def main():
                 spec_k=args.spec_k, drafter=args.drafter,
                 adaptive_k=args.adaptive_k,
                 store_image=args.store_image, ckpt=args.ckpt,
-                shards=args.shards)
+                shards=args.shards, fault_cfg=fault_cfg)
     print(f"served {len(out['outputs'])} requests, {out['tokens']} generated "
           f"tokens in {out['seconds']:.1f}s ({out['tps']:.1f} generated "
           f"tok/s, {out['processed_tps']:.1f} processed tok/s on CPU), "

@@ -692,6 +692,11 @@ class Engine:
         self._mu = threading.RLock()
         self._cv = threading.Condition(self._mu)
         self._closed = False
+        # close() is idempotent AND thread-safe: the first caller does the
+        # work (and blocks behind any in-flight step via _cv — the clean
+        # join), later/concurrent callers are a no-op.
+        self._close_lock = threading.Lock()
+        self._close_done = False
         self.max_waiting = max_waiting
         self.requests: dict[int, Request] = {}
         self.waiting: collections.deque[Request] = collections.deque()
@@ -2147,7 +2152,15 @@ class Engine:
         dying server) — and release background resources: the MoE expert
         prefetcher's worker thread (whose fetch closure pins this engine —
         without an explicit close, neither the thread nor the device-
-        resident expert cache is ever reclaimed). Idempotent."""
+        resident expert cache is ever reclaimed). Idempotent and
+        thread-safe: a second (or concurrent) close is a no-op, and a
+        close racing an in-flight step joins it cleanly — taking ``_cv``
+        waits for the running ``step()`` to finish (regression-tested in
+        tests/test_server.py)."""
+        with self._close_lock:
+            if self._close_done:
+                return
+            self._close_done = True
         with self._cv:
             self._closed = True
             self._cv.notify_all()

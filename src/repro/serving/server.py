@@ -23,13 +23,23 @@ sharded, speculative) rides the same Engine API, one frontend serves all
 of them; prefix caching (serving/prefix.py) composes transparently —
 admission happens inside ``Engine.submit``/``step`` as usual.
 
+The step loop runs under runtime/fault.py's ``FaultTolerantExecutor``
+(DESIGN.md §13): a faulted step — a typed ``StoreFault`` escaping the
+weight stream, injected chaos, a device error — retries per policy, and
+a PERSISTENT fault fails only the affected requests (structured
+``finish_reason="error"``) while the server keeps serving. Per-request
+deadlines (``max_time_s`` -> ``finish_reason="timeout"``) and an
+optional step watchdog bound tail latency.
+
 The HTTP layer is stdlib-only (DESIGN.md §12): ``POST /v1/generate``
-streams Server-Sent Events (one ``data: {"token": N}`` frame per token),
+streams Server-Sent Events (one ``data: {"token": N}`` frame per token,
+a final ``data: {"finish_reason": ...}`` frame, then ``data: [DONE]``),
 ``GET /v1/stats`` reports engine/front/prefix/stream/expert/spec
-telemetry. A broken client socket mid-stream triggers the cancellation
-path — the serving analogue of the paper's claim that the host
-orchestration layer, not the accelerator, decides whether the flash/DRAM
-tiers are kept busy.
+telemetry, ``GET /v1/health`` distills the fault counters into
+ok/degraded (200) or dead/closed (503). A broken client socket
+mid-stream triggers the cancellation path — the serving analogue of the
+paper's claim that the host orchestration layer, not the accelerator,
+decides whether the flash/DRAM tiers are kept busy.
 """
 from __future__ import annotations
 
@@ -40,6 +50,8 @@ import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from repro.runtime.fault import FaultPolicy, FaultTolerantExecutor
+
 _DONE = object()                 # stream terminator sentinel
 
 
@@ -47,13 +59,22 @@ class RequestHandle:
     """Per-request streaming handle. The loop thread pushes sampled
     tokens onto a thread-safe queue; consumers drain it without ever
     touching the engine. ``tokens`` accumulates the full output (the
-    ``result()`` view); the queue is the incremental one."""
+    ``result()`` view); the queue is the incremental one.
 
-    def __init__(self, front: "ServeFront", rid: int):
+    ``finish_reason`` (set before the stream terminates) is the
+    structured outcome: "length" (served to max_new — the engine has no
+    stop-token path, so every natural completion is a length finish),
+    "cancelled" (client disconnect), "timeout" (per-request deadline),
+    or "error" (a persistently-faulted step failed this request)."""
+
+    def __init__(self, front: "ServeFront", rid: int,
+                 deadline: float | None = None):
         self._front = front
         self.rid = rid
         self.tokens: list[int] = []
         self.cancelled = False
+        self.finish_reason: str | None = None
+        self.deadline = deadline         # monotonic; None = no deadline
         self._q: queue.Queue = queue.Queue()
         self._done = threading.Event()
 
@@ -106,6 +127,8 @@ class RequestHandle:
         if self.done or self.cancelled:
             return False
         self.cancelled = True
+        if self.finish_reason is None:
+            self.finish_reason = "cancelled"
         self._front._cancel(self)
         return True
 
@@ -115,7 +138,9 @@ class ServeFront:
     step-loop thread over a single Engine (any plane)."""
 
     def __init__(self, engine, max_waiting: int = 64,
-                 poll_s: float = 0.05):
+                 poll_s: float = 0.05,
+                 fault_policy: FaultPolicy | None = None,
+                 step_fault_hook=None):
         self.engine = engine
         self.max_waiting = max_waiting
         self._poll_s = poll_s
@@ -125,9 +150,28 @@ class ServeFront:
         self._cv = threading.Condition(self._mu)
         self._wake = threading.Event()
         self._closed = False
+        self._close_lock = threading.Lock()
+        self._close_done = False
         self.error: BaseException | None = None
         self.n_finished = 0
         self.n_cancelled = 0
+        self.n_timeout = 0
+        self.step_faults = 0            # persistent faults (requests failed)
+        self.requests_failed = 0
+        self.last_fault: str | None = None
+        if fault_policy is None:
+            # serving defaults: ANY engine exception is a retryable step
+            # fault (a typed StoreFault from the weight stream included),
+            # and straggler detection is effectively off — serving step
+            # times legitimately vary by orders of magnitude between idle
+            # polls, prefill bursts and single-token decode, so the
+            # training loop's trailing-median heuristic would fire
+            # spuriously. A watchdog is opt-in via FaultPolicy.timeout_s.
+            fault_policy = FaultPolicy(max_retries=2, retry_on=(Exception,),
+                                       straggler_tolerance=10 ** 9)
+        self._ftx = FaultTolerantExecutor(self._engine_step, fault_policy,
+                                          fault_hook=step_fault_hook)
+        self._step_no = 0
         self._loop = threading.Thread(target=self._run, daemon=True,
                                       name="servefront-loop")
         self._loop.start()
@@ -135,18 +179,23 @@ class ServeFront:
     # --- producer side --------------------------------------------------------
 
     def add_request(self, prompt, max_new: int = 16,
-                    timeout: float | None = None) -> RequestHandle:
+                    timeout: float | None = None,
+                    max_time_s: float | None = None) -> RequestHandle:
         """Thread-safe intake. Blocks while ``max_waiting`` handles are
         live (backpressure — the frontend's bound, enforced HERE so the
         loop thread never blocks inside ``Engine.submit``); raises
-        TimeoutError past ``timeout`` and RuntimeError once closed."""
-        deadline = None if timeout is None else time.monotonic() + timeout
+        TimeoutError past ``timeout`` and RuntimeError once closed.
+        ``max_time_s`` is a per-request serving deadline: a request still
+        generating past it is cancelled by the loop thread and finishes
+        with ``finish_reason="timeout"`` (tokens sampled so far kept)."""
+        wait_deadline = (None if timeout is None
+                         else time.monotonic() + timeout)
         with self._cv:
             while len(self._handles) >= self.max_waiting \
                     and not self._closed:
                 remaining = None
-                if deadline is not None:
-                    remaining = deadline - time.monotonic()
+                if wait_deadline is not None:
+                    remaining = wait_deadline - time.monotonic()
                     if remaining <= 0:
                         raise TimeoutError(
                             "add_request: server at capacity "
@@ -157,7 +206,9 @@ class ServeFront:
                                    + (f" ({self.error!r})" if self.error
                                       else ""))
             rid = self.engine.submit(list(prompt), max_new=max_new)
-            h = RequestHandle(self, rid)
+            h = RequestHandle(self, rid,
+                              deadline=(None if max_time_s is None
+                                        else time.monotonic() + max_time_s))
             self._handles[rid] = h
             self._progress[rid] = 0
         self._wake.set()
@@ -188,10 +239,12 @@ class ServeFront:
             for rid, h in self._handles.items():
                 req = self.engine.requests.get(rid)
                 if req is None:                  # already forgotten
+                    if h.finish_reason is None:
+                        h.finish_reason = "error"
                     h._finish()
                     drained.append(rid)
                     continue
-                if not h.cancelled:
+                if not h.cancelled and not h.done:
                     out = req.out
                     prog = self._progress[rid]
                     if len(out) > prog:
@@ -201,8 +254,14 @@ class ServeFront:
                     if not h.done:
                         if req.cancelled:
                             h.cancelled = True   # engine-side cancel
+                            if h.finish_reason is None:
+                                h.finish_reason = "cancelled"
                         else:
                             self.n_finished += 1
+                            if h.finish_reason is None:
+                                # no stop-token path: natural completion
+                                # is always a length finish
+                                h.finish_reason = "length"
                         h._finish()
                     if self.engine.forget(rid):
                         drained.append(rid)
@@ -212,16 +271,32 @@ class ServeFront:
             if drained:
                 self._cv.notify_all()            # backpressure slots freed
 
+    def _engine_step(self):
+        return self.engine.step()
+
     def _run(self):
         while True:
+            stepped = False
             try:
-                stepped = False
                 if self._work_pending():
-                    self.engine.step()
+                    # step under the fault executor: transient faults
+                    # (StoreFault from the weight stream, injected chaos,
+                    # device hiccups) retry per policy; a watchdog (if
+                    # armed) abandons hung steps. Only a PERSISTENT fault
+                    # escapes to the handler below.
+                    self._ftx.run_step(self._step_no)
+                    self._step_no += 1
                     stepped = True
                 self._pump()
-            except BaseException as e:           # engine died: fail fast,
-                self._fail(e)                    # never hang consumers
+                self._sweep_deadlines()
+            except Exception as e:
+                # persistently-faulted step: fail the AFFECTED requests
+                # with finish_reason="error" and keep serving — the
+                # engine's own step-top sweep (pure host code, runs before
+                # the compiled path) reclaims their KV blocks next step.
+                self._survive_fault(e)
+            except BaseException as e:           # interpreter teardown,
+                self._fail(e)                    # interrupts: fail fast
                 return
             with self._mu:
                 if self._closed and not self._handles \
@@ -231,11 +306,59 @@ class ServeFront:
                 self._wake.wait(timeout=self._poll_s)
                 self._wake.clear()
 
+    def _survive_fault(self, e: Exception):
+        """A step faulted past its retry budget. Production degradation:
+        the requests in flight are the blast radius — fail them with a
+        structured ``finish_reason="error"`` (their consumers unblock
+        immediately) — but the SERVER survives: intake stays open and the
+        next request batch is served normally. Recovery converges because
+        ``Engine.step`` sweeps cancelled slots before touching the
+        compiled path, and an empty plan short-circuits entirely."""
+        self.step_faults += 1
+        self.last_fault = repr(e)
+        failed = 0
+        with self._cv:
+            for rid, h in self._handles.items():
+                if h.done:
+                    continue
+                h.finish_reason = "error"
+                h.cancelled = True
+                self.engine.cancel(rid)
+                self.requests_failed += 1
+                failed += 1
+                h._finish()
+            if failed:
+                self._cv.notify_all()
+        if failed:
+            self._wake.set()    # let the next step sweep their KV blocks
+
+    def _sweep_deadlines(self):
+        """Cancel requests generating past their ``max_time_s`` deadline
+        (``finish_reason="timeout"``; tokens sampled so far kept)."""
+        now = time.monotonic()
+        hit = False
+        with self._cv:
+            for rid, h in self._handles.items():
+                if h.done or h.deadline is None or now < h.deadline:
+                    continue
+                h.finish_reason = "timeout"
+                h.cancelled = True
+                self.engine.cancel(rid)
+                self.n_timeout += 1
+                h._finish()
+                hit = True
+            if hit:
+                self._cv.notify_all()
+        if hit:
+            self._wake.set()
+
     def _fail(self, e: BaseException):
         with self._cv:
             self.error = e
             self._closed = True
             for h in self._handles.values():
+                if h.finish_reason is None:
+                    h.finish_reason = "error"
                 h._finish()
             self._handles.clear()
             self._progress.clear()
@@ -246,14 +369,24 @@ class ServeFront:
     def close(self, drain: bool = True, timeout: float | None = None):
         """Stop intake and shut the loop down. ``drain=True`` serves every
         live request to completion first; ``drain=False`` cancels them
-        (their KV blocks come back through the final sweep). Idempotent;
-        also closes the engine (prefetcher thread, blocked submitters)."""
+        (their KV blocks come back through the final sweep). Idempotent
+        and thread-safe: exactly one caller performs the shutdown, every
+        other (concurrent or later) call returns immediately without
+        re-joining or re-raising (regression-tested in
+        tests/test_server.py). Also closes the engine (prefetcher thread,
+        blocked submitters)."""
+        with self._close_lock:
+            if self._close_done:
+                return
+            self._close_done = True
         with self._cv:
             self._closed = True
             if not drain:
                 for h in list(self._handles.values()):
                     if not (h.done or h.cancelled):
                         h.cancelled = True
+                        if h.finish_reason is None:
+                            h.finish_reason = "cancelled"
                         self.engine.cancel(h.rid)
                         self.n_cancelled += 1
                         h._finish()
@@ -279,6 +412,12 @@ class ServeFront:
             "free_kv_blocks": len(eng.pool.free_blocks),
             "step_traces": eng.step_traces,
             "closed": self._closed,
+            "timeouts": self.n_timeout,
+            "step_faults": self.step_faults,
+            "step_retries": self._ftx.n_retries,
+            "step_watchdog": self._ftx.n_watchdog,
+            "requests_failed": self.requests_failed,
+            "last_fault": self.last_fault,
         }
         if getattr(eng, "prefix", None) is not None:
             out.update(eng.prefix_stats())
@@ -289,6 +428,41 @@ class ServeFront:
         if getattr(eng, "spec_cfg", None) is not None:
             out["spec"] = eng.spec_stats()
         return out
+
+    def health(self) -> tuple[int, dict]:
+        """(http_code, payload) for GET /v1/health. "ok" means no fault
+        counter has ever ticked; "degraded" (still 200 — the server IS
+        serving) means the fault plane absorbed damage: corrected-on-
+        retry UECC pages, relocations, DRAM fallbacks, streamer fetch
+        faults, step retries, or failed/timed-out requests. 503 once the
+        step loop is dead or the frontend is closed."""
+        counters = {
+            "step_faults": self.step_faults,
+            "step_retries": self._ftx.n_retries,
+            "step_watchdog": self._ftx.n_watchdog,
+            "requests_failed": self.requests_failed,
+            "timeouts": self.n_timeout,
+        }
+        eng = self.engine
+        if getattr(eng, "streamed", False):
+            s = (eng.expert_stats() if getattr(eng, "streamed_moe", False)
+                 else eng.stream_stats())
+            for k in ("uecc_detected", "read_retries", "relocations",
+                      "degraded_pages", "dram_fallback_reads",
+                      "fetch_retries", "fetch_faults",
+                      "prefetch_failures"):
+                if k in s:
+                    counters[k] = s[k]
+        if self.error is not None or not self._loop.is_alive():
+            status, code = "dead", 503
+        elif self._closed:
+            status, code = "closed", 503
+        elif any(counters.values()):
+            status, code = "degraded", 200
+        else:
+            status, code = "ok", 200
+        return code, {"status": status, "last_fault": self.last_fault,
+                      **counters}
 
 
 # --- stdlib HTTP frontend -----------------------------------------------------
@@ -301,12 +475,17 @@ def make_http_server(front: ServeFront, port: int = 8000,
     is ``server.server_address[1]``). Caller runs ``serve_forever`` in a
     thread and ``shutdown()``s it on exit.
 
-      POST /v1/generate  {"prompt": [ids], "max_new": N, "stream": true}
-          -> SSE: one ``data: {"token": t}`` frame per sampled token,
-             then ``data: [DONE]``; ``"stream": false`` -> one JSON body.
+      POST /v1/generate  {"prompt": [ids], "max_new": N, "stream": true,
+                          "max_time_s": S}
+          -> SSE: one ``data: {"token": t}`` frame per sampled token, a
+             final ``data: {"finish_reason": r}`` frame, then
+             ``data: [DONE]``; ``"stream": false`` -> one JSON body with
+             tokens + finish_reason.
           A broken client socket mid-stream cancels the request (KV
           blocks back on the free list within one step).
       GET  /v1/stats     -> ServeFront.stats() as JSON.
+      GET  /v1/health    -> ServeFront.health(): 200 ok/degraded while
+          serving (degraded = fault counters nonzero), 503 dead/closed.
     """
 
     class Handler(BaseHTTPRequestHandler):
@@ -324,10 +503,13 @@ def make_http_server(front: ServeFront, port: int = 8000,
             self.wfile.write(body)
 
         def do_GET(self):
-            if self.path != "/v1/stats":
+            if self.path == "/v1/stats":
+                self._json(200, front.stats())
+            elif self.path == "/v1/health":
+                code, payload = front.health()
+                self._json(code, payload)
+            else:
                 self.send_error(404)
-                return
-            self._json(200, front.stats())
 
         def do_POST(self):
             if self.path != "/v1/generate":
@@ -340,12 +522,14 @@ def make_http_server(front: ServeFront, port: int = 8000,
                 max_new = int(payload.get("max_new", 16))
                 stream = bool(payload.get("stream", True))
                 timeout = payload.get("timeout")
+                max_time_s = payload.get("max_time_s")
             except (KeyError, TypeError, ValueError):
                 self.send_error(400, "bad request body")
                 return
             try:
                 h = front.add_request(prompt, max_new=max_new,
-                                      timeout=timeout)
+                                      timeout=timeout,
+                                      max_time_s=max_time_s)
             except TimeoutError:
                 self.send_error(503, "server at capacity")
                 return
@@ -353,7 +537,9 @@ def make_http_server(front: ServeFront, port: int = 8000,
                 self.send_error(400, str(e))
                 return
             if not stream:
-                self._json(200, {"rid": h.rid, "tokens": h.result()})
+                toks = h.result()
+                self._json(200, {"rid": h.rid, "tokens": toks,
+                                 "finish_reason": h.finish_reason})
                 return
             self.close_connection = True
             self.send_response(200)
@@ -366,6 +552,8 @@ def make_http_server(front: ServeFront, port: int = 8000,
                     frame = json.dumps({"token": int(t)})
                     self.wfile.write(f"data: {frame}\n\n".encode())
                     self.wfile.flush()
+                tail = json.dumps({"finish_reason": h.finish_reason})
+                self.wfile.write(f"data: {tail}\n\n".encode())
                 self.wfile.write(b"data: [DONE]\n\n")
                 self.wfile.flush()
             except (BrokenPipeError, ConnectionResetError, OSError):

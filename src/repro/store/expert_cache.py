@@ -24,6 +24,7 @@ all-experts-streamed equivalent, and these stalls).
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 from typing import Callable, Iterable
@@ -248,6 +249,13 @@ class ExpertPrefetcher:
         # one-transfer-per-expert.
         self.batches = 0
         self.batched_keys = 0
+        # fault accounting: a failed prefetch is only a lost optimization
+        # (the compute path re-fetches synchronously), but it must be
+        # COUNTED, and each distinct error logged once — never silently
+        # dropped (a store whose every prefetch read faults would
+        # otherwise look like an inexplicably cold cache).
+        self.prefetch_failures = 0
+        self._seen_errors: set[str] = set()
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -297,11 +305,21 @@ class ExpertPrefetcher:
                     if (not self.cache.insert(key, value, nbytes)
                             and self._discard is not None):
                         self._discard(value)
-            except Exception:
+            except Exception as e:
                 # a failed prefetch is only a lost optimization — the
                 # compute path re-fetches synchronously and surfaces the
-                # real error there.
-                pass
+                # real error there — but it is counted, and each distinct
+                # error is logged ONCE (not per occurrence: an injected
+                # fault burst would flood the log).
+                sig = f"{type(e).__name__}: {e}"
+                with self._lock:
+                    self.prefetch_failures += 1
+                    first = sig not in self._seen_errors
+                    self._seen_errors.add(sig)
+                if first:
+                    logging.getLogger(__name__).warning(
+                        "expert prefetch failed (compute path will "
+                        "re-fetch synchronously): %s", sig)
             finally:
                 with self._lock:
                     for key in keys:
@@ -310,7 +328,8 @@ class ExpertPrefetcher:
     def stats(self) -> dict:
         with self._lock:
             return {"prefetch_batches": self.batches,
-                    "prefetch_batched_keys": self.batched_keys}
+                    "prefetch_batched_keys": self.batched_keys,
+                    "prefetch_failures": self.prefetch_failures}
 
     def drain(self, timeout: float = 5.0):
         """Block until the queue is empty and nothing is in flight

@@ -214,8 +214,16 @@ class WeightPagePool:
                              np.int32)
             self._allocated.update(int(s) for s in slots)
             # one contiguous host staging read, one (possibly pinned-
-            # bounced) device transfer, one scatter
-            staged = self._read_staged(ids)
+            # bounced) device transfer, one scatter. A FAULTED read (the
+            # injector's transient IOError, a dying mmap) must hand the
+            # window's slots back before propagating — a retried upload
+            # re-allocates; a leaked slot is gone for the process.
+            try:
+                staged = self._read_staged(ids)
+            except Exception:
+                self._allocated.difference_update(int(s) for s in slots)
+                self._free.extend(int(s) for s in slots)
+                raise
             if self.donate:
                 # in-place: the runtime sequences the write after every
                 # in-flight reader; the lock orders it against dispatch()
@@ -393,7 +401,14 @@ class ShardedWeightPagePool(WeightPagePool):
             slots = np.array([self._free.pop() for _ in range(n_slots)],
                              np.int32)
             self._allocated.update(int(s) for s in slots)
-            host = self._stage_shards(names, rows_plan, n_slots)
+            # same slot-leak guard as the base upload: a faulted staged
+            # read returns the rotation's slots before propagating
+            try:
+                host = self._stage_shards(names, rows_plan, n_slots)
+            except Exception:
+                self._allocated.difference_update(int(s) for s in slots)
+                self._free.extend(int(s) for s in slots)
+                raise
             staged = jax.device_put(host.view(np.int8), self._sh3)
             slot_rows = jax.device_put(np.tile(slots[None], (S, 1)),
                                        self._sh2)

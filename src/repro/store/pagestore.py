@@ -192,6 +192,15 @@ class PageStore:
         # with the compute path's misroute fetches; the counters are the
         # only shared mutable state on the read path.
         self._read_lock = threading.Lock()
+        # FaultPlane (store/faults.py): armed by attach_injector. While
+        # disarmed (None) the read path is the plain two-branch fast path
+        # below — zero cost when no fault can fire.
+        self.injector = None
+        self.max_read_retries = 3
+        self._page_owner: dict[int, tuple[str, int]] = {}
+        self._page_parity: dict[int, np.ndarray] = {}
+        self._page_uecc_base: dict[int, int] = {}
+        self._degraded: set[int] = set()
         self.reset_counters()
 
     # --- write path (deploy-time "flash programming"; write-once) ------------
@@ -265,6 +274,16 @@ class PageStore:
         self.plane_reads = np.zeros((self.n_planes,), np.int64)
         self.pages_read = 0
         self.bytes_read = 0
+        # fault-plane counters (all stay zero while no injector is armed)
+        self.plane_uecc = np.zeros((self.n_planes,), np.int64)
+        self.plane_retries = np.zeros((self.n_planes,), np.int64)
+        self.plane_relocations = np.zeros((self.n_planes,), np.int64)
+        self.uecc_detected = 0
+        self.read_retries = 0
+        self.retry_corrected = 0
+        self.ecc_corrected_pages = 0
+        self.relocations = 0
+        self.dram_fallback_reads = 0
 
     def plane_of(self, pid: int) -> tuple[int, int]:
         """Physical (plane, page-in-plane) of a global page id."""
@@ -280,16 +299,175 @@ class PageStore:
 
     def read_pages(self, ids, out: np.ndarray | None = None) -> np.ndarray:
         """Raw page reads (len(ids), page_bytes) — counts per-plane traffic.
-        ``out`` reads straight into a caller-owned (staging) buffer."""
+        ``out`` reads straight into a caller-owned (staging) buffer.
+
+        With a ``FaultInjector`` armed (``attach_injector``), every read
+        additionally runs the fault plane: injected corruption on the
+        ECC-protected q pages, host-side SEC-DED verification, read-retry
+        on detected-uncorrectable pages, and escalation to relocation
+        (writable stores) or degraded DRAM-tier fallback (read-only die
+        images). Disarmed, this is the original two-branch fast path."""
         ids = np.asarray(ids, np.int64)
         with self._read_lock:
             np.add.at(self.plane_reads, ids % self.n_planes, 1)
             self.pages_read += ids.size
             self.bytes_read += ids.size * self.page_bytes
+        if self.injector is None:
+            if out is None:
+                return self._data[ids]
+            np.take(self._data, ids, axis=0, out=out)
+            return out
+        return self._read_pages_faulty(ids, out)
+
+    # --- fault plane (store/faults.py; DESIGN.md §13) -------------------------
+
+    def attach_injector(self, injector, max_read_retries: int = 3) -> None:
+        """Arm read-time fault injection + the ECC read-retry/relocation
+        path. Call AFTER programming (deploy/engine init): the protected-
+        page maps — per-page parity slices and page->entry ownership — are
+        built here from the page table. Pages programmed later (none, in
+        practice: NAND is write-once) would read unprotected."""
+        self.injector = injector
+        self.max_read_retries = int(max_read_retries)
+        self._rebuild_fault_maps()
+
+    def _rebuild_fault_maps(self) -> None:
+        """Per-q-page parity slices + ownership, and each page's BASELINE
+        uncorrectable-codeword count (program-time rber can bake in dirty
+        or even uncorrectable codewords; only damage ABOVE that baseline
+        is read-induced and worth retrying)."""
+        from repro.core.ecc import check_and_correct_np
+        from repro.core.tiering import tile_parity
+        self._page_owner.clear()
+        self._page_parity.clear()
+        self._page_uecc_base.clear()
+        for name, e in self.table.items():
+            comp = e["q"]
+            kt, nt = comp.grid
+            parity = self._get_flat_raw(e["parity"])
+            for idx, pid in enumerate(comp.pages):
+                pid = int(pid)
+                pp = tile_parity(parity, idx // nt, idx % nt, TILE)
+                self._page_owner[pid] = (name, idx)
+                self._page_parity[pid] = pp
+                _, _, uecc = check_and_correct_np(
+                    np.asarray(self._data[pid]).reshape(TILE, TILE), pp)
+                self._page_uecc_base[pid] = int(uecc.sum())
+
+    def _get_flat_raw(self, comp: _Component) -> np.ndarray:
+        """A flat component straight off the die — no counters, no fault
+        plane (used to build the fault maps themselves)."""
+        raw = np.asarray(self._data[np.asarray(comp.pages, np.int64)]
+                         ).reshape(-1)
+        n = int(np.prod(comp.shape)) * np.dtype(comp.dtype).itemsize
+        return raw[:n].view(comp.dtype).reshape(comp.shape).copy()
+
+    def _read_pages_faulty(self, ids: np.ndarray,
+                           out: np.ndarray | None) -> np.ndarray:
+        """The armed read path: inject -> verify -> retry -> escalate.
+
+        Only ECC-protected q pages are perturbed and verified (parity and
+        scale runs model the controller's stronger metadata code). A page
+        whose read verifies clean-or-correctable ships its host-CORRECTED
+        bytes, so downstream consumers see exactly the fault-free bytes
+        regardless of injected single-bit damage — the bit-identical-
+        tokens contract the chaos gate holds. Detected-uncorrectable
+        pages re-read up to ``max_read_retries`` times (transients clear,
+        stuck pages don't), then relocate (writable store) or degrade to
+        the DRAM-tier good copy (read-only die image)."""
+        from repro.core.ecc import check_and_correct_np
+        inj = self.injector
+        inj.pre_read(int(ids.size))
         if out is None:
-            return self._data[ids]
-        np.take(self._data, ids, axis=0, out=out)
-        return out
+            buf = self._data[ids].copy() if isinstance(self._data, np.memmap) \
+                else self._data[ids]
+        else:
+            np.take(self._data, ids, axis=0, out=out)
+            buf = out
+        for i, pid in enumerate(ids.tolist()):
+            owner = self._page_owner.get(pid)
+            if owner is None:
+                continue                      # parity/scale: reads clean
+            if pid in self._degraded:
+                # degraded entry: this tile is served from the DRAM-tier
+                # good copy, bypassing the faulty NAND read entirely.
+                with self._read_lock:
+                    self.dram_fallback_reads += 1
+                continue
+            row = buf[i]
+            inj.corrupt_page(pid, row)
+            parity = self._page_parity[pid]
+            base = self._page_uecc_base[pid]
+            corrected, dirty, uecc = check_and_correct_np(
+                row.reshape(TILE, TILE), parity)
+            if int(uecc.sum()) <= base:
+                if dirty.any():
+                    row[:] = corrected.reshape(-1)
+                    with self._read_lock:
+                        self.ecc_corrected_pages += 1
+                continue
+            self._retry_page(pid, row, parity, base)
+        return buf
+
+    def _retry_page(self, pid: int, row: np.ndarray,
+                    parity: np.ndarray, base: int) -> None:
+        """Read-retry state machine for ONE detected-uncorrectable page:
+        re-read (fresh transient draw) up to N times; on success ship the
+        corrected re-read, on exhaustion escalate (relocate / degrade) and
+        ship the DRAM-tier good copy for THIS read either way."""
+        from repro.core.ecc import check_and_correct_np
+        inj = self.injector
+        plane = pid % self.n_planes
+        with self._read_lock:
+            self.uecc_detected += 1
+            self.plane_uecc[plane] += 1
+        for _ in range(self.max_read_retries):
+            with self._read_lock:
+                self.read_retries += 1
+                self.plane_retries[plane] += 1
+                self.plane_reads[plane] += 1      # a retry is a real read
+                self.pages_read += 1
+                self.bytes_read += self.page_bytes
+            fresh = np.asarray(self._data[pid]).copy()
+            inj.corrupt_page(pid, fresh)
+            corrected, dirty, uecc = check_and_correct_np(
+                fresh.reshape(TILE, TILE), parity)
+            if int(uecc.sum()) <= base:
+                row[:] = corrected.reshape(-1) if dirty.any() else fresh
+                with self._read_lock:
+                    self.retry_corrected += 1
+                return
+        # persistent (stuck page): serve the good copy now, then make sure
+        # no future read hits this physical page again.
+        row[:] = self._data[pid]
+        if isinstance(self._data, np.memmap):
+            with self._read_lock:
+                self._degraded.add(pid)
+                self.dram_fallback_reads += 1
+        else:
+            self._relocate(pid)
+
+    def _relocate(self, pid: int) -> None:
+        """Re-program a stuck page's tile into a fresh page from the
+        DRAM-tier good copy (the pristine programmed bytes — the injector
+        only ever perturbs the read path) and patch the page table so
+        every future fetch reads the new physical page. Writable stores
+        only; die images degrade instead (``_retry_page``)."""
+        with self._read_lock:
+            name, idx = self._page_owner.pop(pid)
+            new = int(self._alloc_pages(1)[0])
+            self.injector.mark_good(new)      # validated spare block
+            self._data[new] = self._data[pid]
+            self.table[name]["q"].pages[idx] = new
+            self._page_owner[new] = (name, idx)
+            self._page_parity[new] = self._page_parity.pop(pid)
+            self._page_uecc_base[new] = self._page_uecc_base.pop(pid)
+            self.relocations += 1
+            self.plane_relocations[pid % self.n_planes] += 1
+
+    @property
+    def degraded_pages(self) -> int:
+        return len(self._degraded)
 
     def _get_flat(self, comp: _Component) -> np.ndarray:
         raw = self.read_pages(comp.pages).reshape(-1)
@@ -441,12 +619,27 @@ class PageStore:
         return hw.nand_read_seconds(self.plane_reads)
 
     def stats(self) -> dict[str, Any]:
-        return {"entries": len(self.table), "pages": self.n_pages,
-                "planes": self.n_planes, "image_bytes": self.image_bytes,
-                "payload_bytes": self.total_bytes,
-                "pages_read": int(self.pages_read),
-                "bytes_read": int(self.bytes_read),
-                "nand_seconds": self.nand_seconds()}
+        out = {"entries": len(self.table), "pages": self.n_pages,
+               "planes": self.n_planes, "image_bytes": self.image_bytes,
+               "payload_bytes": self.total_bytes,
+               "pages_read": int(self.pages_read),
+               "bytes_read": int(self.bytes_read),
+               "nand_seconds": self.nand_seconds(),
+               # fault-plane counters (zero while no injector is armed);
+               # flow into stream_stats()/expert_stats() via this merge
+               "uecc_detected": int(self.uecc_detected),
+               "read_retries": int(self.read_retries),
+               "retry_corrected": int(self.retry_corrected),
+               "ecc_corrected_pages": int(self.ecc_corrected_pages),
+               "relocations": int(self.relocations),
+               "degraded_pages": len(self._degraded),
+               "dram_fallback_reads": int(self.dram_fallback_reads),
+               "plane_uecc": self.plane_uecc.tolist(),
+               "plane_retries": self.plane_retries.tolist(),
+               "plane_relocations": self.plane_relocations.tolist()}
+        if self.injector is not None:
+            out.update(self.injector.stats())
+        return out
 
     # --- NAND die image (optional mmap backing) -------------------------------
 

@@ -23,9 +23,12 @@ from __future__ import annotations
 import collections
 import dataclasses
 import queue
+import random
 import threading
 import time
 from typing import Any, Callable, Iterator
+
+from repro.store.faults import StoreFault
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,7 +235,9 @@ class LayerStreamer:
                  fetch: Callable[[int], tuple[Any, int]],
                  cache: ResidencyCache,
                  prefetch_depth: int = 2,
-                 discard: Callable[[Any], None] | None = None):
+                 discard: Callable[[Any], None] | None = None,
+                 max_fetch_retries: int = 3,
+                 retry_backoff_s: float = 0.01):
         self.n_groups = int(n_groups)
         self._fetch = fetch
         self.cache = cache
@@ -242,6 +247,14 @@ class LayerStreamer:
         # snapshotted the pool buffer.
         self._discard = discard
         self.prefetch_depth = max(1, int(prefetch_depth))
+        # worker-side fault isolation: a transient fetch failure (the fault
+        # plane's injected IOError, a flaky mmap read) retries with jittered
+        # exponential backoff instead of poisoning the bounded queue;
+        # exhaustion escalates a typed StoreFault to the consumer.
+        self.max_fetch_retries = int(max_fetch_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.fetch_retries = 0        # transient fetch failures retried
+        self.fetch_faults = 0         # escalated StoreFaults
         self.stall_s = 0.0            # consumer blocked on the window queue
         self.stream_s = 0.0           # worker reading pages + device_put
         self.bytes_streamed = 0
@@ -288,6 +301,31 @@ class LayerStreamer:
         stop = threading.Event()
         slots = threading.Semaphore(self.prefetch_depth)
 
+        def fetch_with_retry(g):
+            """One group's window, under the retry budget: transient
+            failures back off (jittered, doubling) and retry; exhaustion
+            returns a typed StoreFault for the consumer to raise. The
+            pool path frees a failed upload's slots before raising, so a
+            retry re-allocates cleanly."""
+            delay = self.retry_backoff_s
+            attempts = self.max_fetch_retries + 1
+            for attempt in range(attempts):
+                if stop.is_set():
+                    return None
+                try:
+                    return self._window(g)
+                except Exception as e:
+                    if attempt == attempts - 1:
+                        self.fetch_faults += 1
+                        fault = StoreFault(
+                            f"group {g} window fetch failed after "
+                            f"{attempts} attempts: {e!r}")
+                        fault.__cause__ = e
+                        return fault
+                    self.fetch_retries += 1
+                    time.sleep(delay * (1.0 + random.random()))
+                    delay *= 2.0
+
         def worker():
             for g in range(self.n_groups):
                 while not slots.acquire(timeout=0.05):
@@ -296,9 +334,14 @@ class LayerStreamer:
                 if stop.is_set():
                     return
                 try:
-                    q.put((g, self._window(g)))
-                except BaseException as e:    # surface in the consumer
-                    q.put((g, e))
+                    item = fetch_with_retry(g)
+                except BaseException as e:    # non-Exception (interrupt):
+                    q.put((g, e))             # surface in the consumer
+                    return
+                if item is None:              # stopped mid-retry
+                    return
+                q.put((g, item))
+                if isinstance(item, BaseException):
                     return
 
         t = threading.Thread(target=worker, daemon=True)
@@ -347,4 +390,6 @@ class LayerStreamer:
         return {"stall_s": self.stall_s, "stream_s": self.stream_s,
                 "bytes_streamed": self.bytes_streamed,
                 "groups_streamed": self.groups_streamed,
+                "fetch_retries": self.fetch_retries,
+                "fetch_faults": self.fetch_faults,
                 **{f"cache_{k}": v for k, v in self.cache.stats().items()}}

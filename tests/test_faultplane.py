@@ -1,0 +1,282 @@
+"""FaultPlane (ISSUE 9): deterministic NAND read-fault injection, the
+host-side SEC-DED verify/read-retry path, and its escalations — page
+relocation on writable stores, degraded DRAM-tier fallback on read-only
+die images — plus the failure-accounting satellites.
+
+The load-bearing contract: any read the fault plane corrects (inline ECC
+or read-retry) ships bytes IDENTICAL to the fault-free read, so token
+streams under injected faults are bit-identical to a clean run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ecc
+from repro.core.tiering import encode_flash, tile_parity
+from repro.store import PageStore
+from repro.store.expert_cache import ExpertCache, ExpertPrefetcher
+from repro.store.faults import FaultConfig, FaultInjector, StoreFault
+from repro.store.pagestore import TILE
+
+
+def _fw(key, k, n):
+    return encode_flash(jax.random.normal(key, (k, n), jnp.float32))
+
+
+# --- numpy ECC port ----------------------------------------------------------
+
+def _random_codec_case(seed, k=64, n=48):
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 256, (k, n), dtype=np.uint8)
+    parity = np.asarray(ecc.encode(jnp.asarray(raw)))
+    return raw, parity
+
+
+@pytest.mark.parametrize("nflips", [0, 1, 2, 7])
+def test_check_and_correct_np_matches_jnp(nflips):
+    """The host-side port must agree bit-for-bit with the device codec on
+    clean, single-bit (corrected) and multi-bit (uncorrectable) reads."""
+    raw, parity = _random_codec_case(nflips)
+    rng = np.random.default_rng(100 + nflips)
+    dirty_bytes = raw.copy()
+    nbits = dirty_bytes.size * 8
+    if nflips:
+        pos = rng.choice(nbits, size=nflips, replace=False)
+        np.bitwise_xor.at(dirty_bytes.reshape(-1), pos // 8,
+                          (1 << (pos % 8)).astype(np.uint8))
+    got_c, got_d, got_u = ecc.check_and_correct_np(dirty_bytes, parity)
+    ref_c, ref_d, ref_u = ecc.check_and_correct(
+        jnp.asarray(dirty_bytes), jnp.asarray(parity))
+    np.testing.assert_array_equal(got_c, np.asarray(ref_c))
+    np.testing.assert_array_equal(got_d, np.asarray(ref_d))
+    np.testing.assert_array_equal(got_u, np.asarray(ref_u))
+    if nflips == 0:
+        assert not got_d.any() and not got_u.any()
+        np.testing.assert_array_equal(got_c, raw)
+    if nflips == 1:
+        np.testing.assert_array_equal(got_c, raw)   # corrected exactly
+
+
+def test_tile_parity_slices_match_whole_matrix_codec():
+    """Verifying one 128x128 tile against its tile_parity slice must give
+    the same verdicts as verifying the whole (K, N) matrix at once."""
+    fw = _fw(jax.random.PRNGKey(0), 2 * TILE, 2 * TILE)
+    raw = np.asarray(fw.q).view(np.uint8)
+    parity = np.asarray(fw.parity)
+    for kt in range(2):
+        for nt in range(2):
+            tile = raw[kt * TILE:(kt + 1) * TILE, nt * TILE:(nt + 1) * TILE]
+            pp = tile_parity(parity, kt, nt, TILE)
+            _, dirty, uecc = ecc.check_and_correct_np(
+                np.ascontiguousarray(tile), pp)
+            assert not dirty.any() and not uecc.any()
+
+
+# --- injector determinism ----------------------------------------------------
+
+def test_injector_stuck_membership_and_damage_deterministic():
+    a = FaultInjector(FaultConfig(seed=7, stuck_page_rate=0.3))
+    b = FaultInjector(FaultConfig(seed=7, stuck_page_rate=0.3))
+    assert [a.is_stuck(p) for p in range(200)] \
+        == [b.is_stuck(p) for p in range(200)]
+    pid = next(p for p in range(200) if a.is_stuck(p))
+    r1 = np.zeros(TILE * TILE, np.uint8)
+    r2 = np.zeros(TILE * TILE, np.uint8)
+    a.corrupt_page(pid, r1)
+    b.corrupt_page(pid, r2)
+    np.testing.assert_array_equal(r1, r2)     # pure in (seed, pid)
+    r3 = np.zeros(TILE * TILE, np.uint8)
+    a.corrupt_page(pid, r3)
+    np.testing.assert_array_equal(r1, r3)     # persists across re-reads
+
+
+def test_injector_stuck_damage_is_uncorrectable():
+    """Stuck damage lands 2 flips inside real codewords (8 K-axis bytes
+    of one column), so SEC-DED must flag it detected-uncorrectable —
+    the property the whole retry/relocation path keys on."""
+    fw = _fw(jax.random.PRNGKey(1), TILE, TILE)
+    raw = np.ascontiguousarray(np.asarray(fw.q).view(np.uint8))
+    parity = np.asarray(fw.parity)
+    inj = FaultInjector(FaultConfig(seed=3, stuck_page_rate=1.0,
+                                    stuck_codewords=4))
+    row = raw.reshape(-1).copy()
+    inj.corrupt_page(0, row)
+    _, _, uecc = ecc.check_and_correct_np(row.reshape(TILE, TILE), parity)
+    assert int(uecc.sum()) == 4               # every hit codeword detected
+
+
+def test_injector_transient_flips_redraw_per_read():
+    """Transient damage is keyed on a per-page read nonce: a re-read gets
+    an independent draw (that's why read-retry clears transients)."""
+    inj = FaultInjector(FaultConfig(seed=0, read_rber=1e-4))
+    r1 = np.zeros(TILE * TILE, np.uint8)
+    r2 = np.zeros(TILE * TILE, np.uint8)
+    inj.corrupt_page(5, r1)
+    inj.corrupt_page(5, r2)
+    assert r1.any() and r2.any()              # ~13 expected flips each
+    assert not np.array_equal(r1, r2)
+    # ...while a second injector replays the same nonce sequence exactly
+    inj2 = FaultInjector(FaultConfig(seed=0, read_rber=1e-4))
+    q1 = np.zeros(TILE * TILE, np.uint8)
+    inj2.corrupt_page(5, q1)
+    np.testing.assert_array_equal(r1, q1)
+
+
+def test_injector_io_error_bursts_and_slow_reads():
+    inj = FaultInjector(FaultConfig(io_error_every=4, io_error_burst=2,
+                                    slow_read_every=0))
+    outcomes = []
+    for _ in range(12):
+        try:
+            inj.pre_read(1)
+            outcomes.append(0)
+        except IOError:
+            outcomes.append(1)
+    # bursts of 2 starting at every 4th call (calls 4,5, 8,9, 12)
+    assert outcomes == [0, 0, 0, 1, 1, 0, 0, 1, 1, 0, 0, 1]
+    assert inj.stats()["fault_io_errors"] == 5
+
+
+# --- store read path: correct, retry, relocate, degrade ----------------------
+
+def test_corrected_reads_are_bit_identical_to_fault_free():
+    """Transient flips at a realistic RBER: every read ships exactly the
+    fault-free bytes (inline ECC correction at the store boundary)."""
+    store = PageStore(n_planes=4)
+    fw = _fw(jax.random.PRNGKey(2), 2 * TILE, 2 * TILE)
+    store.put("w", fw)
+    clean = store.get("w")
+    store.attach_injector(FaultInjector(FaultConfig(seed=1, read_rber=3e-5)))
+    for _ in range(6):                        # fresh transient draw each
+        got = store.get("w")
+        np.testing.assert_array_equal(np.asarray(got.q), np.asarray(clean.q))
+    s = store.stats()
+    assert s["ecc_corrected_pages"] > 0       # faults actually fired
+    assert s["fault_transient_flips"] > 0
+    assert s["relocations"] == 0 and s["uecc_detected"] == 0
+
+
+def test_stuck_page_relocates_on_writable_store():
+    """Retry can't clear a stuck page: the store re-programs the tile
+    into a fresh page from the DRAM-tier good copy, patches the page
+    table, and every read (including the faulted one) stays bit-exact."""
+    store = PageStore(n_planes=4)
+    fw = _fw(jax.random.PRNGKey(3), 2 * TILE, 2 * TILE)
+    store.put("w", fw)
+    pages_before = list(store.table["w"]["q"].pages)
+    clean_q = np.asarray(store.get("w").q)
+    store.attach_injector(
+        FaultInjector(FaultConfig(seed=5, stuck_page_rate=0.5)))
+    got = store.get("w")
+    np.testing.assert_array_equal(np.asarray(got.q), clean_q)
+    s = store.stats()
+    assert s["uecc_detected"] >= 1
+    assert s["read_retries"] >= store.max_read_retries
+    assert s["relocations"] >= 1
+    assert s["degraded_pages"] == 0           # writable: no fallback mode
+    pages_after = list(store.table["w"]["q"].pages)
+    assert pages_before != pages_after        # table patched
+    assert sum(np.asarray(s["plane_relocations"])) == s["relocations"]
+    # the relocated page is NOT in the stuck set's damage path anymore:
+    # further reads verify clean with zero additional relocations
+    n = s["relocations"]
+    got2 = store.get("w")
+    np.testing.assert_array_equal(np.asarray(got2.q), clean_q)
+    assert store.stats()["relocations"] == n
+
+
+def test_stuck_page_degrades_on_readonly_die_image(tmp_path):
+    """A die image is write-once-and-sealed: relocation is impossible, so
+    a persistently-uncorrectable page flips to degraded and every later
+    read serves the DRAM-tier copy — still bit-exact, counted."""
+    src = PageStore(n_planes=4)
+    fw = _fw(jax.random.PRNGKey(4), 2 * TILE, 2 * TILE)
+    src.put("w", fw)
+    src.save(str(tmp_path / "die"))
+    store = PageStore.open(str(tmp_path / "die"))
+    clean_q = np.asarray(store.get("w").q)
+    store.attach_injector(
+        FaultInjector(FaultConfig(seed=5, stuck_page_rate=0.5)))
+    got = store.get("w")
+    np.testing.assert_array_equal(np.asarray(got.q), clean_q)
+    s = store.stats()
+    assert s["relocations"] == 0              # read-only: cannot relocate
+    assert s["degraded_pages"] >= 1
+    got2 = store.get("w")                     # degraded entries bypass NAND
+    np.testing.assert_array_equal(np.asarray(got2.q), clean_q)
+    assert store.stats()["dram_fallback_reads"] > s["dram_fallback_reads"]
+
+
+def test_program_time_rber_baseline_not_retried():
+    """A store programmed with rber > 0 carries page damage from DAY ONE.
+    That baseline is captured at attach time — only read-induced damage
+    ABOVE it triggers the retry path, else every read would escalate into
+    an infinite retry/relocation loop on day-one damage."""
+    fw = _fw(jax.random.PRNGKey(5), 2 * TILE, 2 * TILE)
+    store = PageStore(n_planes=4)
+    store.put("w", fw)
+    # bake damage straight into the die (program-time rber), including
+    # some multi-bit (uncorrectable) codewords at this rate
+    corrupted, nflip = ecc.inject_bit_errors_np(
+        store._data[:store.n_pages], 5e-5, seed=11)
+    store._data[:store.n_pages] = corrupted
+    assert nflip > 0
+    store.attach_injector(FaultInjector(FaultConfig(seed=0)))  # no faults
+    got1 = store.get("w")
+    got2 = store.get("w")                     # reads are stable
+    np.testing.assert_array_equal(np.asarray(got1.q), np.asarray(got2.q))
+    s = store.stats()
+    assert s["uecc_detected"] == 0            # baseline, not read-induced
+    assert s["read_retries"] == 0 and s["relocations"] == 0
+
+
+def test_injected_io_error_does_not_leak_pool_slots():
+    """A faulted staged read must return its just-allocated pool slots
+    before re-raising (satellite of tentpole b: zero leaked slots)."""
+    from repro.store.page_pool import WeightPagePool
+    store = PageStore(n_planes=4)
+    fw = _fw(jax.random.PRNGKey(6), TILE, TILE)
+    store.put("w", fw)
+    pool = WeightPagePool(store, n_pages=16)
+    free0 = pool.free_pages
+    store.attach_injector(
+        FaultInjector(FaultConfig(io_error_every=1, io_error_burst=1)))
+    with pytest.raises(IOError):              # every read raises
+        pool.upload(["w"])
+    assert pool.free_pages == free0           # slots returned on failure
+    store.injector = None                     # disarm: upload now succeeds
+    tables = pool.upload(["w"])
+    assert "w" in tables and pool.free_pages < free0
+
+
+# --- prefetcher failure accounting (satellite 1) -----------------------------
+
+def test_prefetch_failures_are_counted_not_swallowed():
+    cache = ExpertCache(None, n_layers=2, n_experts=8)
+    calls = {"n": 0}
+
+    def fetch(li, e):
+        calls["n"] += 1
+        raise RuntimeError("flash channel fault")
+
+    p = ExpertPrefetcher(cache, fetch)
+    try:
+        p.request([(0, 0)])                   # one failure per fetch ROUND
+        p.drain()
+        p.request([(0, 1)])
+        p.drain()
+        s = p.stats()
+        assert s["prefetch_failures"] == 2
+        assert calls["n"] == 2
+        assert (0, 0) not in cache and (0, 1) not in cache
+    finally:
+        p.stop()
+
+
+def test_storefault_is_a_typed_runtime_error():
+    assert issubclass(StoreFault, RuntimeError)
+    f = StoreFault("boom")
+    assert isinstance(f, Exception)

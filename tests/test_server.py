@@ -311,12 +311,16 @@ def _post(port, payload):
     return conn, conn.getresponse()
 
 
-def _sse_tokens(resp):
-    toks = []
+def _sse_tokens(resp, want_reason=False):
+    toks, reason = [], None
     for line in resp.read().decode().splitlines():
         if line.startswith("data: ") and line != "data: [DONE]":
-            toks.append(json.loads(line[len("data: "):])["token"])
-    return toks
+            frame = json.loads(line[len("data: "):])
+            if "token" in frame:
+                toks.append(frame["token"])
+            else:
+                reason = frame.get("finish_reason")
+    return (toks, reason) if want_reason else toks
 
 
 def test_http_end_to_end(params, http_server):
@@ -384,3 +388,151 @@ def test_http_non_streaming_and_errors(params, http_server):
     c.request("GET", "/nope")
     assert c.getresponse().status == 404
     c.close()
+
+
+# --- fault plane: survive step faults, deadlines, health (ISSUE 9) ------------
+
+
+def test_close_is_idempotent_and_thread_safe(params):
+    """Exactly one caller shuts down; double, concurrent, and post-close
+    calls all return without hanging, re-joining, or re-raising."""
+    front = ServeFront(_engine(params))
+    h = front.add_request([1, 2, 3], max_new=2)
+    h.result(timeout=60)
+    errs = []
+
+    def closer():
+        try:
+            front.close(drain=True, timeout=60)
+        except BaseException as e:       # noqa: BLE001 - recorded for assert
+            errs.append(e)
+
+    threads = [threading.Thread(target=closer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads), "close() hung"
+    assert errs == []
+    front.close()                        # post-close call: plain no-op
+    assert front.stats()["closed"]
+
+
+def test_engine_close_is_idempotent_and_thread_safe(params):
+    eng = _engine(params)
+    eng.submit([1, 2], max_new=1)
+    eng.run()
+    threads = [threading.Thread(target=eng.close) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert not any(t.is_alive() for t in threads), "Engine.close() hung"
+    eng.close()                          # and again, after it's done
+
+
+def test_finish_reason_length_and_cancelled(params):
+    front = ServeFront(_engine(params))
+    try:
+        h = front.add_request([1, 2, 3], max_new=3)
+        assert h.result(timeout=60) and h.finish_reason == "length"
+        h2 = front.add_request([1, 2, 3, 4], max_new=48)
+        it = iter(h2)
+        next(it)                         # generation is under way
+        h2.cancel()
+        h2._done.wait(30)
+        assert h2.finish_reason == "cancelled"
+    finally:
+        front.close(drain=False)
+
+
+def test_step_fault_fails_requests_but_server_survives(params):
+    """THE degradation contract: a persistently-faulted step fails the
+    in-flight requests with finish_reason="error" — consumers unblock,
+    KV blocks come back — and the SAME front serves the next request."""
+    from repro.runtime.fault import FaultPolicy
+
+    boom = {"arm": False}
+
+    def hook(step, retries):
+        if boom["arm"]:
+            raise RuntimeError("injected persistent step fault")
+
+    front = ServeFront(_engine(params), poll_s=0.01,
+                       fault_policy=FaultPolicy(
+                           max_retries=1, retry_on=(Exception,),
+                           straggler_tolerance=10 ** 9),
+                       step_fault_hook=hook)
+    eng = front.engine
+    try:
+        h0 = front.add_request([1, 2, 3], max_new=2)
+        assert h0.result(timeout=60) and h0.finish_reason == "length"
+
+        boom["arm"] = True
+        h = front.add_request([4, 5, 6], max_new=32)
+        h._done.wait(60)
+        assert h.done and h.finish_reason == "error"
+        assert front.step_faults >= 1 and front.requests_failed == 1
+        assert front.stats()["step_retries"] >= 1
+
+        boom["arm"] = False              # fault clears: serving resumes
+        h2 = front.add_request([7, 8, 9], max_new=2)
+        toks = h2.result(timeout=60)
+        assert len(toks) == 2 and h2.finish_reason == "length"
+        deadline = time.monotonic() + 30
+        while front.stats()["live_handles"] and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert _free_and_cached(eng) == eng.pool.n_blocks - 1  # no leaks
+        code, payload = front.health()
+        assert code == 200 and payload["status"] == "degraded"
+    finally:
+        front.close(drain=False)
+
+
+def test_request_deadline_times_out(params):
+    """max_time_s bounds a request's wall clock: it finishes with
+    finish_reason="timeout", keeps the tokens sampled so far, and its
+    KV blocks are reclaimed."""
+    front = ServeFront(_engine(params), poll_s=0.01)
+    eng = front.engine
+    try:
+        h = front.add_request([1, 2, 3], max_new=MAX_SEQ - 4,
+                              max_time_s=0.5)
+        h._done.wait(60)
+        assert h.done and h.finish_reason == "timeout"
+        assert front.n_timeout == 1
+        deadline = time.monotonic() + 30
+        while front.stats()["live_handles"] and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert _free_and_cached(eng) == eng.pool.n_blocks - 1
+    finally:
+        front.close(drain=False)
+
+
+def test_http_health_endpoint(params, http_server):
+    server, front, _ = http_server
+    port = server.server_address[1]
+    c = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+    c.request("GET", "/v1/health")
+    resp = c.getresponse()
+    body = json.loads(resp.read())
+    assert resp.status == 200
+    assert body["status"] in ("ok", "degraded")
+    assert body["step_faults"] == 0 and body["requests_failed"] == 0
+    c.close()
+
+
+def test_http_finish_reason_frame(params, http_server):
+    """The SSE stream ends with a finish_reason frame before [DONE], and
+    the non-streaming body carries the same field."""
+    server, front, _ = http_server
+    port = server.server_address[1]
+    conn, resp = _post(port, {"prompt": [1, 2, 3], "max_new": 4})
+    toks, reason = _sse_tokens(resp, want_reason=True)
+    assert len(toks) == 4 and reason == "length"
+    conn.close()
+    conn, resp = _post(port, {"prompt": [1, 2, 3], "max_new": 4,
+                              "stream": False})
+    body = json.loads(resp.read())
+    assert body["finish_reason"] == "length"
+    conn.close()

@@ -218,3 +218,57 @@ def test_read_only_image_without_attn_copies_rejected(params, tmp_path):
         Engine(OPT_TINY, dram_tier(params), max_slots=2, max_seq=MAX_SEQ,
                weight_store=PageStore.open(img),
                stream_cfg=StreamConfig(group_size=1))
+
+
+# --- fault plane: streamer worker failure isolation (ISSUE 9) -----------------
+
+def test_transient_fetch_failure_recovers_with_token_parity(params,
+                                                            resident_tokens):
+    """A window fetch that fails ONCE (flaky NAND channel) is retried by
+    the streamer worker with backoff — serving completes with tokens
+    bit-identical to the fault-free run, and the retry is counted."""
+    eng, _ = _streamed(params, group_size=1)
+    eng.streamer.retry_backoff_s = 0.001
+    orig = eng.streamer._window
+    state = {"calls": 0}
+
+    def flaky(g):
+        state["calls"] += 1
+        if state["calls"] == 3:              # one mid-stream hiccup
+            raise IOError("injected transient channel fault")
+        return orig(g)
+
+    eng.streamer._window = flaky
+    eng.submit(list(range(1, 30)), max_new=8)
+    eng.submit([9, 8], max_new=8)
+    assert eng.run() == resident_tokens      # no token divergence
+    st = eng.streamer.stats()
+    assert st["fetch_retries"] == 1 and st["fetch_faults"] == 0
+
+
+def test_persistent_fetch_failure_raises_typed_storefault(params):
+    """A fetch that fails past the retry budget surfaces as a typed
+    StoreFault out of Engine.step (not a hang, not a bare worker death);
+    the stream queue drains and close() returns promptly."""
+    import threading
+
+    from repro.store.faults import StoreFault
+
+    eng, _ = _streamed(params, group_size=1)
+    eng.streamer.retry_backoff_s = 0.001
+    eng.streamer.max_fetch_retries = 1
+
+    def dead(g):
+        raise IOError("dead channel")
+
+    eng.submit([1, 2, 3], max_new=2)
+    eng.streamer._window = dead
+    with pytest.raises(StoreFault) as ei:
+        eng.step()
+    assert isinstance(ei.value.__cause__, IOError)
+    assert eng.streamer.stats()["fetch_faults"] == 1
+    assert eng.streamer.stats()["fetch_retries"] == 1
+    t = threading.Thread(target=eng.close)   # must not hang on the queue
+    t.start()
+    t.join(timeout=30)
+    assert not t.is_alive(), "Engine.close() hung after a streamer fault"
