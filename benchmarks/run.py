@@ -46,16 +46,16 @@ def _kernel_bench() -> str:
 def main() -> None:
     from benchmarks import (fig6_throughput, fig7_latency, fig8_energy,
                             serve_chaos, serve_decode, serve_mixed,
-                            serve_moe, serve_server, serve_sharded,
-                            serve_spec, serve_stream, table2_area,
-                            table3_scaling)
+                            serve_moe, serve_obs, serve_server,
+                            serve_sharded, serve_spec, serve_stream,
+                            table2_area, table3_scaling)
     reports = []
     # serve_sharded self-SKIPs here (the aggregate run sees 1 device; its
     # checks run in the forced-4-device CI job / standalone invocation)
     for mod in (fig6_throughput, fig7_latency, fig8_energy, table2_area,
                 table3_scaling, serve_decode, serve_mixed, serve_stream,
                 serve_spec, serve_moe, serve_server, serve_sharded,
-                serve_chaos):
+                serve_chaos, serve_obs):
         rep = mod.run()
         reports.append(rep)
         print(rep.render())

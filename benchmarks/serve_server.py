@@ -40,6 +40,7 @@ import numpy as np
 from benchmarks.common import Report, write_bench_json
 from benchmarks.serve_decode import SERVE_BENCH
 from repro.models import dense
+from repro.obs import MetricsRegistry
 from repro.serving.engine import Engine
 from repro.serving.server import ServeFront, make_http_server
 
@@ -91,6 +92,35 @@ def _health(port: int) -> tuple[int, dict]:
         conn.close()
 
 
+def _metrics(port: int) -> tuple[int, str, str]:
+    """GET /v1/metrics through a real socket: (status, content_type,
+    Prometheus text)."""
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+    try:
+        conn.request("GET", "/v1/metrics")
+        resp = conn.getresponse()
+        return (resp.status, resp.getheader("Content-Type") or "",
+                resp.read().decode())
+    finally:
+        conn.close()
+
+
+def metric_families(text: str) -> set[str]:
+    """Family names present in a Prometheus exposition (sample lines,
+    histogram suffixes collapsed to their family)."""
+    fams = set()
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name = line.split("{", 1)[0].split(" ", 1)[0]
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix):
+                name = name[:-len(suffix)]
+                break
+        fams.add(name)
+    return fams
+
+
 def _phase(port: int, eng, prompts, rng) -> dict:
     """Open loop: arrivals at Poisson(ARRIVAL_TPS) no matter how the
     server keeps up; returns sustained tok/s + TTFT percentiles +
@@ -125,9 +155,12 @@ def run() -> Report:
                  f"({SERVE_BENCH.n_layers}L dense, {N_REQUESTS} req/phase, "
                  f"{ARRIVAL_TPS:.0f} req/s arrivals)")
     params = dense.init(SERVE_BENCH, jax.random.PRNGKey(0))
+    # fresh per-run registry: run.py executes every benchmark in ONE
+    # process, so the process-global default would mix runs' histograms
+    reg = MetricsRegistry()
     eng = Engine(SERVE_BENCH, params, max_slots=2, max_seq=160, rber=0.0,
-                 prefix_cache=True)
-    front = ServeFront(eng, max_waiting=2 * N_REQUESTS)
+                 prefix_cache=True, registry=reg)
+    front = ServeFront(eng, max_waiting=2 * N_REQUESTS, registry=reg)
     server = make_http_server(front, 0)
     port = server.server_address[1]
     threading.Thread(target=server.serve_forever, daemon=True).start()
@@ -164,6 +197,17 @@ def run() -> Report:
         # fault-free run: /v1/health must report 200 "ok" — no fault
         # counter may tick with the fault plane compiled in but idle
         health_code, health = _health(port)
+
+        # ObsPlane: scrape Prometheus text through the live socket while
+        # the server still holds request state — the required families
+        # must be present and the content type must be the 0.0.4 text one
+        m_code, m_ctype, m_text = _metrics(port)
+        fams = metric_families(m_text)
+        required = {"serve_ttft_seconds", "serve_tpot_seconds",
+                    "serve_e2e_seconds", "serve_finish_total",
+                    "engine_step_seconds", "engine_tokens_total",
+                    "engine_free_kv_blocks", "prefix_hits_total"}
+        missing = required - fams
     finally:
         server.shutdown()
         server.server_close()
@@ -196,6 +240,14 @@ def run() -> Report:
             health_code, 200, 200)
     rep.add("health status 'ok' (fault plane idle: no counter ticked)",
             int(health["status"] == "ok"), 1, 1)
+    if missing:
+        rep.note(f"  /v1/metrics missing families: {sorted(missing)}")
+    rep.add("GET /v1/metrics returned 200 Prometheus text",
+            int(m_code == 200 and m_ctype.startswith("text/plain")), 1, 1)
+    rep.add("metrics exposition carries all required families",
+            len(missing), 0, 0)
+    rep.add("serve_ttft_seconds observed every completed request",
+            front._h_ttft.snapshot().count, N_REQUESTS, float("inf"))
     write_bench_json("serve_server", {
         "n_requests": N_REQUESTS, "max_new": MAX_NEW,
         "arrival_tps": ARRIVAL_TPS,
@@ -211,6 +263,15 @@ def run() -> Report:
         "parity": parity, "cancelled": front.n_cancelled,
         "leaked_blocks": leaked, "traces": eng.step_traces,
         "health_code": health_code, "health_status": health["status"],
+        # ObsPlane: request-latency percentiles from the registry
+        # histograms (bucket-interpolated) + scrape health
+        "obs_ttft_p50_s": front._h_ttft.percentile(0.5),
+        "obs_ttft_p95_s": front._h_ttft.percentile(0.95),
+        "obs_tpot_p50_s": front._h_tpot.percentile(0.5),
+        "obs_tpot_p95_s": front._h_tpot.percentile(0.95),
+        "obs_e2e_p50_s": front._h_e2e.percentile(0.5),
+        "metrics_code": m_code, "metrics_families": len(fams),
+        "metrics_missing": sorted(missing),
     })
     return rep
 

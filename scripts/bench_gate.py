@@ -27,7 +27,12 @@ and holds the page-pool floors independently:
     token streams are bit-identical to the fault-free run, every
     escalation path fired (UECC detect -> retry -> relocation; worker
     StoreFault -> step retry), zero KV blocks leak, and the server
-    survives reporting 200/degraded.
+    survives reporting 200/degraded;
+  * serve_obs (ISSUE 10 observability job): metrics-on tok/s >= 0.97x
+    metrics-off on BOTH streamed planes (the recorded-overhead floor —
+    instrumentation stays off the hot path), the Chrome trace export is
+    valid and shows compute-vs-stream overlap, every streamed metric
+    family is exposed, and TTFT/TPOT percentiles are recorded.
 
     python scripts/bench_gate.py [--section NAME ...] [BENCH_serve.json]
 
@@ -151,6 +156,42 @@ def _gate_server(results: dict, failures: list[str], required: bool):
             "HTTP traffic (contract: exactly once)")
 
 
+OBS_OVERHEAD_FLOOR = 0.97    # metrics-on / metrics-off tok/s, both planes
+
+
+def _gate_obs(results: dict, failures: list[str], required: bool):
+    ob = results.get("serve_obs")
+    if ob is None:
+        if required:
+            failures.append("serve_obs: no recorded results")
+        return
+    for key, label in (("dense_ratio", "dense-streamed"),
+                       ("moe_ratio", "expert-paged MoE")):
+        ratio = ob.get(key, 0.0)
+        if ratio < OBS_OVERHEAD_FLOOR:
+            failures.append(
+                f"serve_obs: {label} metrics-on/off tok/s ratio "
+                f"{ratio:.3f} fell below the {OBS_OVERHEAD_FLOOR} "
+                "recorded-overhead floor (instrumentation must stay off "
+                "the hot path)")
+    if not ob.get("trace_valid", False):
+        failures.append(
+            "serve_obs: trace export is not valid Chrome trace_event "
+            "JSON (must stay Perfetto-loadable)")
+    if ob.get("overlap_s", 0.0) <= 0.0:
+        failures.append(
+            "serve_obs: no compute-vs-stream overlap measured in the "
+            "trace (the streamed plane's headline picture went dark)")
+    if ob.get("metrics_missing"):
+        failures.append(
+            f"serve_obs: exposition missing metric families "
+            f"{ob['metrics_missing']}")
+    for key in ("ttft_p50_s", "ttft_p95_s", "tpot_p50_s", "tpot_p95_s"):
+        if not isinstance(ob.get(key), (int, float)):
+            failures.append(
+                f"serve_obs: recorded latency percentile {key} absent")
+
+
 CHAOS_SUCCESS_FLOOR = 0.95   # fraction of requests finishing length/stop
 CHAOS_STUCK_FLOOR = 1e-3     # configured UECC page rate the run must hold
 
@@ -219,12 +260,15 @@ def gate(results: dict, sections: list[str] | None = None) -> list[str]:
             _gate_server(results, failures, required=True)
         if "serve_chaos" in sections:
             _gate_chaos(results, failures, required=True)
+        if "serve_obs" in sections:
+            _gate_obs(results, failures, required=True)
         return failures
     _gate_moe(results, failures)
     _gate_stream(results, failures)
     _gate_sharded(results, failures, required=False)
     _gate_server(results, failures, required=False)
     _gate_chaos(results, failures, required=False)
+    _gate_obs(results, failures, required=False)
     return failures
 
 
@@ -277,6 +321,12 @@ def main() -> int:
                 f"serve_chaos {ch['success_frac']:.3f} finished under "
                 f"{ch['uecc_detected']} UECC / {ch['relocations']} "
                 f"relocations / {ch['step_faults']} step faults")
+        ob = results.get("serve_obs")
+        if ob and (not sections or "serve_obs" in sections):
+            bits.append(
+                f"serve_obs overhead {ob['dense_ratio']:.3f}x dense / "
+                f"{ob['moe_ratio']:.3f}x moe, {ob['trace_events']} trace "
+                f"events, TTFT p50 {1e3 * ob['ttft_p50_s']:.0f}ms")
         print(f"bench gate: PASS ({'; '.join(bits) or 'nothing gated'})")
     return 1 if failures else 0
 

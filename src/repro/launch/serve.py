@@ -18,12 +18,18 @@ step (DESIGN.md §8). ``--serve-http PORT`` swaps the synthetic burst for
 the ServeFront frontend (DESIGN.md §12): continuous batching behind a
 stdlib HTTP server with SSE token streaming, hash-based prefix caching
 (``--no-prefix-cache`` to disable), disconnect-driven cancellation, and
-``--max-waiting`` backpressure.
+``--max-waiting`` backpressure. ``--trace-out trace.json`` records the
+ObsPlane Chrome trace (step phases vs weight-stream fetches vs pool
+uploads vs per-plane NAND reads — load in Perfetto); ``--stats-interval
+S`` prints a structured ``stats {json}`` line every S seconds; the HTTP
+frontend additionally serves Prometheus text on ``GET /v1/metrics``.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import threading
 import time
 
 import jax
@@ -138,6 +144,23 @@ def build_engine(arch: str = "opt-tiny", smoke: bool = True,
     return eng
 
 
+def _start_stats_logger(line_fn, interval_s: float) -> threading.Event:
+    """``--stats-interval``: a daemon thread printing one structured
+    ``stats {...json...}`` line every ``interval_s`` seconds. Returns the
+    stop event; a raising ``line_fn`` skips that tick only."""
+    stop = threading.Event()
+
+    def run():
+        while not stop.wait(interval_s):
+            try:
+                print("stats " + json.dumps(line_fn()), flush=True)
+            except Exception:            # noqa: BLE001 - observation only
+                pass
+
+    threading.Thread(target=run, daemon=True, name="stats-logger").start()
+    return stop
+
+
 def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
           max_new: int = 12, rber: float = 0.0, seed: int = 0,
           kv_aware: bool = True, stream: bool = False,
@@ -146,7 +169,8 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
           spec_k: int = 0, drafter: str = "ngram",
           adaptive_k: bool = False,
           store_image: str | None = None, ckpt: str | None = None,
-          shards: int = 1, fault_cfg=None) -> dict:
+          shards: int = 1, fault_cfg=None,
+          stats_interval: float = 0.0) -> dict:
     eng = build_engine(arch, smoke=smoke, rber=rber, seed=seed,
                        kv_aware=kv_aware, stream=stream,
                        device_budget_mib=device_budget_mib,
@@ -165,6 +189,17 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
         eng.submit(prompt, max_new=max_new)
     t0 = time.time()
     n_processed = n_steps = 0
+    stats_stop = None
+    if stats_interval > 0:
+        stats_stop = _start_stats_logger(
+            lambda: {"ts": round(time.time(), 3),
+                     "steps": eng._steps_done,
+                     "waiting": len(eng.waiting),
+                     "running": len(eng.pool.active),
+                     "done": sum(r.done for r in eng.requests.values()),
+                     "phase_s": dict(eng.timeline.summary()
+                                     ["phase_seconds"])},
+            stats_interval)
     while any(not r.done for r in eng.requests.values()):
         n_processed += eng.step()        # prefill lanes + decode lanes
         n_steps += 1
@@ -172,6 +207,8 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
             if r.out and r.rid not in first_tok:
                 first_tok[r.rid] = n_steps
     dt = time.time() - t0
+    if stats_stop is not None:
+        stats_stop.set()
     outs = {r.rid: r.out for r in eng.requests.values()}
     # "tokens"/"tps" stay GENERATED tokens (comparable with PR 1 /
     # serve_decode.py numbers); processed counts every prompt lane too.
@@ -194,7 +231,7 @@ def serve(arch: str = "opt-tiny", smoke: bool = True, n_requests: int = 6,
 
 def serve_http(port: int, arch: str = "opt-tiny", prefix_cache: bool = True,
                max_waiting: int = 64, step_timeout: float | None = None,
-               **engine_kw):
+               stats_interval: float = 0.0, **engine_kw):
     """``--serve-http``: the ServeFront continuous-batching loop behind
     the stdlib HTTP frontend (DESIGN.md §12). Binds, prints the resolved
     address, and serves until interrupted; client disconnects cancel
@@ -212,14 +249,30 @@ def serve_http(port: int, arch: str = "opt-tiny", prefix_cache: bool = True,
     server = make_http_server(front, port)
     host, bound = server.server_address[:2]
     print(f"serving {arch} on http://{host}:{bound} "
-          f"(POST /v1/generate, GET /v1/stats, GET /v1/health; "
+          f"(POST /v1/generate, GET /v1/stats, GET /v1/health, "
+          f"GET /v1/metrics; "
           f"prefix_cache={'on' if prefix_cache else 'off'}, "
           f"max_waiting={max_waiting})")
+    stats_stop = None
+    if stats_interval > 0:
+        def _line(front=front):
+            st = front.stats()
+            return {"ts": round(time.time(), 3), "steps": st["steps"],
+                    "live": st["live_handles"], "waiting": st["waiting"],
+                    "running": st["running"], "finished": st["finished"],
+                    "cancelled": st["cancelled"],
+                    "failed": st["requests_failed"],
+                    "ttft_p50_s": front._h_ttft.percentile(0.5),
+                    "ttft_p95_s": front._h_ttft.percentile(0.95),
+                    "tpot_p50_s": front._h_tpot.percentile(0.5)}
+        stats_stop = _start_stats_logger(_line, stats_interval)
     try:
         server.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        if stats_stop is not None:
+            stats_stop.set()
         server.shutdown()
         server.server_close()
         front.close(drain=True)
@@ -297,6 +350,16 @@ def main():
                     help="arm the serving step watchdog: a step producing "
                          "no result within S seconds faults and retries "
                          "(--serve-http)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="ObsPlane: record Chrome trace_event spans "
+                         "(engine step phases, weight-stream fetches, "
+                         "pool uploads, per-plane NAND reads, request "
+                         "lifecycles) and write a Perfetto-loadable "
+                         "JSONL trace on exit")
+    ap.add_argument("--stats-interval", type=float, default=0.0,
+                    metavar="S",
+                    help="ObsPlane: print one structured 'stats {json}' "
+                         "line every S seconds (0 = off)")
     args = ap.parse_args()
     rber = args.rber
     if rber is None:
@@ -309,28 +372,43 @@ def main():
                                 stuck_page_rate=args.fault_stuck_rate,
                                 slow_read_every=args.fault_slow_every,
                                 io_error_every=args.fault_io_every)
-    if args.serve_http is not None:
-        serve_http(args.serve_http, arch=args.arch,
-                   prefix_cache=args.prefix_cache,
-                   max_waiting=args.max_waiting, smoke=args.smoke,
-                   rber=rber, kv_aware=args.kv_aware, stream=args.stream,
-                   device_budget_mib=args.device_budget_mib,
-                   group_size=args.group_size, auto_depth=args.auto_depth,
-                   spec_k=args.spec_k, drafter=args.drafter,
-                   adaptive_k=args.adaptive_k,
-                   store_image=args.store_image, ckpt=args.ckpt,
-                   shards=args.shards, fault_cfg=fault_cfg,
-                   step_timeout=args.step_timeout)
-        return
-    out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
-                max_new=args.max_new, rber=rber, kv_aware=args.kv_aware,
-                stream=args.stream,
-                device_budget_mib=args.device_budget_mib,
-                group_size=args.group_size, auto_depth=args.auto_depth,
-                spec_k=args.spec_k, drafter=args.drafter,
-                adaptive_k=args.adaptive_k,
-                store_image=args.store_image, ckpt=args.ckpt,
-                shards=args.shards, fault_cfg=fault_cfg)
+    tracer = None
+    if args.trace_out:
+        from repro import obs
+        tracer = obs.Tracer(enabled=True)
+        obs.set_default_tracer(tracer)
+    try:
+        if args.serve_http is not None:
+            serve_http(args.serve_http, arch=args.arch,
+                       prefix_cache=args.prefix_cache,
+                       max_waiting=args.max_waiting, smoke=args.smoke,
+                       rber=rber, kv_aware=args.kv_aware,
+                       stream=args.stream,
+                       device_budget_mib=args.device_budget_mib,
+                       group_size=args.group_size,
+                       auto_depth=args.auto_depth,
+                       spec_k=args.spec_k, drafter=args.drafter,
+                       adaptive_k=args.adaptive_k,
+                       store_image=args.store_image, ckpt=args.ckpt,
+                       shards=args.shards, fault_cfg=fault_cfg,
+                       step_timeout=args.step_timeout,
+                       stats_interval=args.stats_interval)
+            return
+        out = serve(args.arch, smoke=args.smoke, n_requests=args.requests,
+                    max_new=args.max_new, rber=rber,
+                    kv_aware=args.kv_aware, stream=args.stream,
+                    device_budget_mib=args.device_budget_mib,
+                    group_size=args.group_size, auto_depth=args.auto_depth,
+                    spec_k=args.spec_k, drafter=args.drafter,
+                    adaptive_k=args.adaptive_k,
+                    store_image=args.store_image, ckpt=args.ckpt,
+                    shards=args.shards, fault_cfg=fault_cfg,
+                    stats_interval=args.stats_interval)
+    finally:
+        if tracer is not None:
+            n = tracer.export(args.trace_out)
+            print(f"wrote {n} trace events to {args.trace_out} "
+                  f"(load in Perfetto / chrome://tracing)")
     print(f"served {len(out['outputs'])} requests, {out['tokens']} generated "
           f"tokens in {out['seconds']:.1f}s ({out['tps']:.1f} generated "
           f"tok/s, {out['processed_tps']:.1f} processed tok/s on CPU), "

@@ -1,0 +1,33 @@
+"""ObsPlane (DESIGN.md §14): the serving stack's observability plane.
+
+Three pieces, one process-wide default of each:
+
+  * ``MetricsRegistry`` (registry.py) — thread-safe counters / gauges /
+    fixed-log-bucket histograms plus scrape-time collectors, exposed as
+    Prometheus text at ``GET /v1/metrics``;
+  * ``Tracer`` (trace.py) — Chrome trace-event spans on fixed tracks
+    (compute / stream / pool / NAND / requests), exported via
+    ``serve --trace-out``;
+  * ``StepTimeline`` (timeline.py) — a bounded ring of per-step host
+    phase breakdowns feeding ``serve --stats-interval`` log lines.
+
+Everything is import-cheap and dependency-free (stdlib only) so the
+store layer can import it without cycles, and everything has a
+zero-overhead disabled mode (``REPRO_OBS=0`` / ``enabled=False``).
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram, HistSnapshot,
+                                LATENCY_BUCKETS_S, MetricsRegistry, Sample,
+                                default_registry, log_buckets,
+                                set_default_registry)
+from repro.obs.timeline import StepTimeline
+from repro.obs.trace import (TID_COMPUTE, TID_NAND, TID_POOL, TID_REQUEST0,
+                             TID_STREAM, Tracer, default_tracer,
+                             set_default_tracer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "HistSnapshot", "LATENCY_BUCKETS_S",
+    "MetricsRegistry", "Sample", "default_registry", "log_buckets",
+    "set_default_registry", "StepTimeline", "Tracer", "default_tracer",
+    "set_default_tracer", "TID_COMPUTE", "TID_NAND", "TID_POOL",
+    "TID_REQUEST0", "TID_STREAM",
+]

@@ -64,6 +64,7 @@ try:                                     # jax >= 0.5 moved shard_map
 except ImportError:                      # pragma: no cover
     from jax.shard_map import shard_map
 
+from repro import obs
 from repro.core import scheduler as sched
 from repro.core.erdpe import ExecMode, flash_matmul
 from repro.core.tiering import (ATTN_FLASH_KEYS, FlashWeight, PagedWeight,
@@ -586,7 +587,8 @@ class Engine:
                  spec_cfg: spec_mod.SpecConfig | None = None,
                  draft_cfg=None, draft_params=None,
                  prefix_cache: bool = False,
-                 max_waiting: int | None = None):
+                 max_waiting: int | None = None,
+                 registry: "obs.MetricsRegistry | None" = None):
         if cfg.family not in ("dense", "moe"):
             raise ValueError("engine serves dense- and moe-family archs "
                              f"(got {cfg.family!r})")
@@ -708,6 +710,20 @@ class Engine:
         self._steps_done = 0
         self._auto_depth_done = False
         self.stats: list[dict] = []
+        # ObsPlane (DESIGN.md §14): per-step phase histogram + timeline
+        # ring. The registry defaults to the process-wide one; disabled
+        # registries hand out no-op instruments, so the per-step cost of
+        # a dark plane is a few perf_counter reads.
+        self.obs = registry if registry is not None \
+            else obs.default_registry()
+        self.timeline = obs.StepTimeline(256)
+        self._h_step = self.obs.histogram(
+            "engine_step_seconds", "serving step host wall time by phase",
+            label_names=("phase",))
+        self._c_step_tokens = self.obs.counter(
+            "engine_tokens_total", "tokens processed by the step loop",
+            label_names=("kind",))
+        self._phases: dict[str, float] = {}
         # per-slot token histories feeding the in-graph drafter (spec mode)
         if spec_cfg is not None:
             self._hist = np.zeros((max_slots, max_seq + 1), np.int32)
@@ -1402,6 +1418,7 @@ class Engine:
         layer pass is shared by ALL of a slot's verify lanes: one window
         rotation per step amortizes over every accepted token."""
         del params, attn_flash                       # store-resident tier
+        t = time.perf_counter()
         if self.spec_cfg is None:
             drafts = n_draft = None
             x, positions, ctx_lens = self._embed_fn(
@@ -1410,8 +1427,17 @@ class Engine:
             x, positions, ctx_lens, q_lens, drafts, n_draft = self._embed_fn(
                 self._dram_params, state["lengths"], tokens, q_lens, hist,
                 hist_lens, draft_cap)
+        t = self._phase("embed", t)
         ks, vs = [], []
-        for g, window in self.streamer.stream():
+        # manual iteration so the window-queue wait (the stream-wait
+        # stall) times separately from the group's compute dispatch
+        it = self.streamer.stream()
+        while True:
+            try:
+                g, window = next(it)
+            except StopIteration:
+                break
+            t = self._phase("stream_wait", t)
             lo = jnp.int32(g * self.stream_cfg.group_size)
             # dispatch under the pool lock: the window's liveness ref
             # guarantees its slots are mapped, and the lock keeps the
@@ -1424,6 +1450,7 @@ class Engine:
                 state["bitmap"], lo))
             ks.append(k_g)
             vs.append(v_g)
+            t = self._phase("group_dispatch", t)
         k_new = jnp.concatenate(ks, axis=0)          # (L, slots, T, KV, Dh)
         v_new = jnp.concatenate(vs, axis=0)
         args = (self._dram_params["final_norm"], self._lm_head, state, x,
@@ -1431,7 +1458,9 @@ class Engine:
                 key)
         if self.spec_cfg is not None:
             args += (drafts, n_draft, is_decode)
-        return self._finish_fn(*args)
+        out = self._finish_fn(*args)
+        self._phase("finish", t)
+        return out
 
     def _build_stream_fns_moe(self, exec_mode):
         """The expert-paged MoE data plane: THREE jitted pieces (HEAD
@@ -1525,6 +1554,7 @@ class Engine:
         next step)."""
         del params, attn_flash                       # store-resident tier
         cfg, cache = self.cfg, self.expert_cache
+        t = time.perf_counter()
         head_args = (self._layers_dram, state["k"], state["v"],
                      self._dram_params, state["lengths"], tokens, q_lens,
                      block_tables)
@@ -1552,12 +1582,14 @@ class Engine:
         if self._steps_done > 0:
             for li in range(cfg.n_layers):
                 self._request_prefetch(li, self._e_slab, slots=active)
+        t = self._phase("head_dispatch", t)
         # layer 0's attention+router already ran inside the head trace
         # (no pool operand — embed/attn weights are DRAM-resident).
         ks, vs = [k_l], [v_l]
         out = None
         for li in range(cfg.n_layers):
             idx_host = np.asarray(idx)               # layer li's routing
+            t = self._phase("route_sync", t)
             by_slot = sched.routed_experts_by_slot(idx_host, lane_bound)
             routed = sched.routed_experts(idx_host, lane_bound)
             cache.observe(li, routed)
@@ -1566,8 +1598,10 @@ class Engine:
             self._max_routed_seen = max(self._max_routed_seen, len(routed))
             self._request_prefetch((li + 1) % cfg.n_layers, len(routed),
                                    slots=by_slot.keys())
+            t = time.perf_counter()
             slab, slab_map, held, transients, missing = \
                 self._acquire_experts(li, routed)
+            t = self._phase("expert_acquire", t)
             for s, ids in by_slot.items():
                 cache.note_slot_route(s, len(ids),
                                       sum(1 for e in ids
@@ -1584,6 +1618,7 @@ class Engine:
                         ctx_lens, block_tables, jnp.int32(li + 1)))
                 ks.append(k_l)
                 vs.append(v_l)
+                t = self._phase("fused_dispatch", t)
             else:        # last layer: experts fused with the finish step
                 k_new = jnp.stack(ks, axis=0)    # (L, slots, T, KV, Dh)
                 v_new = jnp.stack(vs, axis=0)
@@ -1595,6 +1630,7 @@ class Engine:
                     post += (drafts, n_draft, is_decode)
                 out = self.wpool.dispatch(
                     lambda buf: self._tail_fn(*pre, buf, *post))
+                t = self._phase("tail_dispatch", t)
             # dispatch has captured the pool buffer: NOW the held
             # entries can release and the rejected transients can free.
             for hk in held:
@@ -1620,14 +1656,19 @@ class Engine:
         if picks:
             self.prefetcher.request(picks)
 
-    def expert_stats(self) -> dict:
+    def expert_stats(self, *, strict: bool = True) -> dict:
         """ExpertCache telemetry for the expert-paged MoE engine: hit rate
         over routed-expert acquires, fetched bytes (prefetch included) and
         bytes/token vs the DENSE-EQUIVALENT all-experts-streamed cost
         (what rotating every expert of every layer through the window —
         the PR-3 discipline — would have fetched), and misroute stalls
-        (routed experts not resident when their layer needed them)."""
+        (routed experts not resident when their layer needed them).
+        ``strict=False`` returns ``{}`` instead of raising when the engine
+        is not serving a store-backed MoE model (the one ``*_stats``
+        wrong-mode convention; see ``telemetry``)."""
         if not self.streamed_moe:
+            if not strict:
+                return {}
             raise ValueError("expert_stats: engine is not serving a "
                              "store-backed MoE model")
         c = self.expert_cache.stats()
@@ -1681,6 +1722,20 @@ class Engine:
         unused = self._e_slab - max(self._max_routed_seen, 1)
         cache.resize(cache.capacity + unused * self._max_expert_bytes)
 
+    def _phase(self, name: str, t0: float, now: float | None = None) -> float:
+        """Accumulate one step-phase interval (ObsPlane): seconds since
+        ``t0`` land in this step's phase breakdown and — when tracing is
+        armed — as a span on the compute track. Returns now, so phase
+        boundaries chain: ``t = self._phase("embed", t)``."""
+        if now is None:
+            now = time.perf_counter()
+        self._phases[name] = self._phases.get(name, 0.0) + (now - t0)
+        tracer = obs.default_tracer()
+        if tracer.enabled:
+            tracer.complete(name, t0, now - t0, tid=obs.TID_COMPUTE,
+                            cat="step")
+        return now
+
     def _stream_stall_s(self) -> float:
         """Seconds the compute path has spent blocked on the weight stream:
         the window-queue stall (dense groups) or the cumulative misroute
@@ -1732,14 +1787,17 @@ class Engine:
                 self.cache.pinned_bytes,
                 sc.device_budget_bytes - want * self._group_bytes))
 
-    def stream_stats(self) -> dict:
+    def stream_stats(self, *, strict: bool = True) -> dict:
         """Streamer + residency-cache + page-store counters (streamed mode):
         stall/stream seconds, streamed bytes, cache hit/miss, per-plane page
         reads and the analytical NAND seconds they imply, the (possibly
         auto-tuned) prefetch depth, and — in speculative mode — the
         acceptance-rate / tokens-per-verify-step telemetry. Page counters
-        cover SERVING only (init-time programming/pin reads are reset)."""
+        cover SERVING only (init-time programming/pin reads are reset).
+        ``strict=False`` returns ``{}`` on a non-streamed engine."""
         if not self.streamed:
+            if not strict:
+                return {}
             raise ValueError("stream_stats: engine is not in streamed mode")
         if self.streamed_moe:
             out = {**self.expert_stats(), **self.store.stats()}
@@ -1753,13 +1811,16 @@ class Engine:
             out.update(self.spec_stats())
         return out
 
-    def spec_stats(self) -> dict:
+    def spec_stats(self, *, strict: bool = True) -> dict:
         """Speculative-decode telemetry: how much one weight pass amortizes.
 
         ``spec_tokens_per_step`` is emitted tokens per VERIFY step (steps
         with >= 1 decoding slot) — in streamed mode, tokens bought per
-        window rotation; ``spec_acceptance_rate`` is accepted / drafted."""
+        window rotation; ``spec_acceptance_rate`` is accepted / drafted.
+        ``strict=False`` returns ``{}`` on a non-speculative engine."""
         if self.spec_cfg is None:
+            if not strict:
+                return {}
             raise ValueError("spec_stats: engine is not in speculative mode")
         t = self._spec_totals
         out = {"spec_verify_steps": t["verify_steps"],
@@ -1938,14 +1999,65 @@ class Engine:
                 self.prefix.insert(hashes, blocks)
         self.pool.release(slot)          # O(1): no device work
 
-    def prefix_stats(self) -> dict:
+    def prefix_stats(self, *, strict: bool = True) -> dict:
         """Prefix-cache telemetry: index entries/hits/misses/evictions
-        plus the total prefill tokens admission skipped via cache hits."""
+        plus the total prefill tokens admission skipped via cache hits.
+        ``strict=False`` returns ``{}`` when prefix caching is disabled."""
         if self.prefix is None:
+            if not strict:
+                return {}
             raise ValueError("prefix_stats: prefix caching is disabled "
                              "(construct with prefix_cache=True)")
         return {**self.prefix.stats(),
                 "prefix_prefill_tokens_saved": self._prefix_tokens_saved}
+
+    def telemetry(self) -> dict:
+        """Every applicable ``*_stats`` family merged, wrong-mode families
+        silently absent (``strict=False`` everywhere). This is the ONE
+        aggregate the serving frontend snapshots — callers that want a
+        loud failure on a wrong-mode query keep the per-family accessors.
+
+        CAUTION: streamed-mode families read under the streamer/pool
+        locks, so this can wait behind an in-flight upload; ServeFront
+        therefore refreshes its cached copy from the loop thread rather
+        than calling this per HTTP request."""
+        out = {"steps": self._steps_done,
+               "free_kv_blocks": int(self.pool.n_free_blocks),
+               "active_slots": len(self.pool.active),
+               "waiting": len(self.waiting)}
+        out.update(self.stream_stats(strict=False))
+        out.update(self.spec_stats(strict=False))
+        out.update(self.prefix_stats(strict=False))
+        return out
+
+    def obs_samples(self):
+        """ObsPlane scrape samples for the engine and every subsystem it
+        owns (lock-free counter reads — safe to pull from a scrape thread
+        while a step holds the streamer/pool locks)."""
+        from repro.obs.registry import Sample
+        yield Sample("engine_steps_total", "counter",
+                     float(self._steps_done))
+        yield Sample("engine_free_kv_blocks", "gauge",
+                     float(self.pool.n_free_blocks))
+        yield Sample("engine_active_slots", "gauge",
+                     float(len(self.pool.active)))
+        yield Sample("engine_waiting_requests", "gauge",
+                     float(len(self.waiting)))
+        if self.streamed:
+            yield Sample("engine_stall_frac", "gauge",
+                         float(self._stall_frac))
+            yield from self.store.obs_samples()
+            yield from self.wpool.obs_samples()
+            if self.streamed_moe:
+                yield from self.expert_cache.obs_samples()
+                yield from self.prefetcher.obs_samples()
+            else:
+                yield from self.streamer.obs_samples()
+        if self.spec_cfg is not None:
+            from repro.serving.spec import spec_obs_samples
+            yield from spec_obs_samples(self._spec_totals)
+        if self.prefix is not None:
+            yield from self.prefix.obs_samples()
 
     # --- the serving step (one compiled call; mixed prefill/decode) -----------
 
@@ -1983,6 +2095,8 @@ class Engine:
             return n
 
     def _step_locked(self) -> int:
+        t_plan0 = time.perf_counter()
+        self._phases = {}                # this step's ObsPlane breakdown
         self._admit()
         spec = self.spec_cfg is not None
         decode_slots, prefill_slots = [], []
@@ -2050,7 +2164,7 @@ class Engine:
             self._host_draft_cap = draft_cap.copy() if spec else None
         state = dict(self.pool.device_state(),
                      bitmap=self.bitmap, prev_cycles=self._prev_cycles)
-        t_step0 = time.perf_counter()
+        t_step0 = self._phase("plan", t_plan0)
         stall0 = self._stream_stall_s()
         args = (self.params, self.attn_flash, state,
                 jnp.asarray(tokens), jnp.asarray(q_lens),
@@ -2062,6 +2176,11 @@ class Engine:
             n_emit_host = np.asarray(n_emit)
         else:
             toks, state, stats = self._step_fn(*args)
+        t_sync0 = time.perf_counter()
+        if not self.streamed:
+            # monolithic plane: the whole jitted call is one dispatch
+            # (streamed planes decomposed it into embed/group/finish above)
+            self._phase("dispatch", t_step0, now=t_sync0)
         self.pool.set_device_state(state)
         self.bitmap = state["bitmap"]
         self._prev_cycles = state["prev_cycles"]
@@ -2104,6 +2223,7 @@ class Engine:
                 req.done = True
                 self._finish_request(req, slot)
         st = jax.device_get(stats)
+        self._phase("sync", t_sync0)
         self._npu_frac = float(st["npu_fraction"])
         entry = {
             "kv_len": int(st["kv_len"]),
@@ -2129,15 +2249,28 @@ class Engine:
                         rate = float(na[slot]) / float(nd[slot])
                         self._accept_ema[slot] = \
                             (1.0 - a) * self._accept_ema[slot] + a * rate
+        stall_s = 0.0
         if self.streamed:
             # stall fraction of step wall time (EMA): the residency signal
             # the admission budget contracts with (scheduler.step_token_
             # budget) — a weight-stream-bound engine sheds prefill share.
             dt = time.perf_counter() - t_step0
-            frac = (self._stream_stall_s() - stall0) / max(dt, 1e-9)
+            stall_s = max(self._stream_stall_s() - stall0, 0.0)
+            frac = stall_s / max(dt, 1e-9)
             self._stall_frac = 0.5 * self._stall_frac \
                 + 0.5 * min(max(frac, 0.0), 1.0)
             entry["stall_frac"] = self._stall_frac
+        for name, dt_p in self._phases.items():
+            self._h_step.observe(dt_p, labels={"phase": name})
+        self._h_step.observe(time.perf_counter() - t_plan0,
+                             labels={"phase": "total"})
+        if n_prefill:
+            self._c_step_tokens.inc(n_prefill, labels={"kind": "prefill"})
+        if n_processed - n_prefill:
+            self._c_step_tokens.inc(n_processed - n_prefill,
+                                    labels={"kind": "decode"})
+        self.timeline.record(self._steps_done, self._phases,
+                             tokens=n_processed, stall_s=stall_s)
         self.stats.append(entry)
         self._steps_done += 1
         if self.streamed:

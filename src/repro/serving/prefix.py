@@ -164,3 +164,15 @@ class PrefixIndex:
                 "prefix_inserted": self.inserted,
                 "prefix_evicted": self.evicted,
                 "prefix_cached_blocks": len(self.entries)}
+
+    def obs_samples(self):
+        """ObsPlane scrape samples (lock-free counter reads)."""
+        from repro.obs.registry import Sample
+        yield Sample("prefix_entries", "gauge", float(len(self.entries)))
+        yield Sample("prefix_hits_total", "counter", float(self.hits))
+        yield Sample("prefix_misses_total", "counter", float(self.misses))
+        yield Sample("prefix_inserted_total", "counter",
+                     float(self.inserted))
+        yield Sample("prefix_evicted_total", "counter", float(self.evicted))
+        yield Sample("prefix_hit_rate", "gauge",
+                     self.hits / max(self.hits + self.misses, 1))

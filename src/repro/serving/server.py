@@ -50,6 +50,7 @@ import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+from repro import obs
 from repro.runtime.fault import FaultPolicy, FaultTolerantExecutor
 
 _DONE = object()                 # stream terminator sentinel
@@ -77,6 +78,12 @@ class RequestHandle:
         self.deadline = deadline         # monotonic; None = no deadline
         self._q: queue.Queue = queue.Queue()
         self._done = threading.Event()
+        # request lifecycle timing (ObsPlane): TTFT = t_first - t_submit,
+        # TPOT = (t_finish - t_first) / (n - 1), E2E = t_finish - t_submit
+        self.t_submit = time.monotonic()
+        self.t_first: float | None = None
+        self._t0_pc = time.perf_counter()    # tracer-domain submit time
+        self._finish_mu = threading.Lock()
 
     # --- loop-thread side -----------------------------------------------------
 
@@ -86,9 +93,15 @@ class RequestHandle:
             self._q.put(int(t))
 
     def _finish(self):
-        if not self._done.is_set():
+        # finishers race (loop pump vs a consumer's cancel vs fault
+        # sweeps): the lock elects ONE winner, so the finish-reason
+        # counter and latency histograms observe each request exactly once
+        with self._finish_mu:
+            if self._done.is_set():
+                return
+            self._front._observe_finish(self)
             self._done.set()
-            self._q.put(_DONE)
+        self._q.put(_DONE)
 
     # --- consumer side --------------------------------------------------------
 
@@ -140,7 +153,8 @@ class ServeFront:
     def __init__(self, engine, max_waiting: int = 64,
                  poll_s: float = 0.05,
                  fault_policy: FaultPolicy | None = None,
-                 step_fault_hook=None):
+                 step_fault_hook=None,
+                 registry: "obs.MetricsRegistry | None" = None):
         self.engine = engine
         self.max_waiting = max_waiting
         self._poll_s = poll_s
@@ -159,6 +173,28 @@ class ServeFront:
         self.step_faults = 0            # persistent faults (requests failed)
         self.requests_failed = 0
         self.last_fault: str | None = None
+        # ObsPlane: request-lifecycle histograms + finish-reason counter,
+        # and ONE scrape-time collector pulling every subsystem's counters
+        # (registered here, unregistered in close() — a bare Engine never
+        # registers, so tests that build engines don't leak collectors)
+        self.obs = registry if registry is not None else obs.default_registry()
+        self._h_ttft = self.obs.histogram(
+            "serve_ttft_seconds", "request submit -> first sampled token")
+        self._h_tpot = self.obs.histogram(
+            "serve_tpot_seconds",
+            "mean inter-token interval per finished request")
+        self._h_e2e = self.obs.histogram(
+            "serve_e2e_seconds", "request submit -> stream finish")
+        self._c_finish = self.obs.counter(
+            "serve_finish_total", "finished request streams by outcome",
+            label_names=("reason",))
+        self.obs.register_collector(self._obs_collect)
+        # loop-thread-maintained plane-stats snapshot: /v1/stats and
+        # /v1/health read THIS dict (an atomic reference swap), never the
+        # locked `*_stats()` accessors — a scrape must not wait behind a
+        # weight upload held by an in-flight step (satellite 1)
+        self._telemetry: dict = self._plane_stats()
+        self._tel_t = time.monotonic()
         if fault_policy is None:
             # serving defaults: ANY engine exception is a retryable step
             # fault (a typed StoreFault from the weight stream included),
@@ -248,6 +284,9 @@ class ServeFront:
                     out = req.out
                     prog = self._progress[rid]
                     if len(out) > prog:
+                        if h.t_first is None:
+                            h.t_first = time.monotonic()
+                            self._h_ttft.observe(h.t_first - h.t_submit)
                         h._push(out[prog:len(out)])
                         self._progress[rid] = len(out)
                 if req.done:
@@ -274,6 +313,75 @@ class ServeFront:
     def _engine_step(self):
         return self.engine.step()
 
+    def _observe_finish(self, h: RequestHandle):
+        """Request-lifecycle observation, called exactly once per handle
+        by the ``_finish`` winner (any thread). Must never raise — it sits
+        on the fault-sweep and teardown paths."""
+        try:
+            now = time.monotonic()
+            reason = h.finish_reason or "length"
+            self._c_finish.inc(1.0, labels={"reason": reason})
+            self._h_e2e.observe(now - h.t_submit)
+            if h.t_first is not None and len(h.tokens) > 1:
+                self._h_tpot.observe((now - h.t_first)
+                                     / (len(h.tokens) - 1))
+            tracer = obs.default_tracer()
+            if tracer.enabled:
+                tracer.complete(f"req{h.rid}", h._t0_pc,
+                                time.perf_counter() - h._t0_pc,
+                                tid=tracer.request_tid(h.rid),
+                                cat="request",
+                                args={"reason": reason,
+                                      "tokens": len(h.tokens)})
+        except Exception:                # noqa: BLE001 - observation only
+            pass
+
+    def _obs_collect(self):
+        """Scrape-time collector: frontend counters + every counter the
+        wrapped engine's subsystems expose (lock-free reads throughout)."""
+        from repro.obs.registry import Sample
+        yield Sample("serve_live_handles", "gauge",
+                     float(len(self._handles)))
+        yield Sample("serve_requests_finished_total", "counter",
+                     float(self.n_finished))
+        yield Sample("serve_requests_cancelled_total", "counter",
+                     float(self.n_cancelled))
+        yield Sample("serve_requests_timeout_total", "counter",
+                     float(self.n_timeout))
+        yield Sample("serve_step_faults_total", "counter",
+                     float(self.step_faults))
+        yield Sample("serve_step_retries_total", "counter",
+                     float(self._ftx.n_retries))
+        yield Sample("serve_requests_failed_total", "counter",
+                     float(self.requests_failed))
+        yield from self.engine.obs_samples()
+
+    def _plane_stats(self) -> dict:
+        """Plane-specific telemetry in the /v1/stats shape (prefix keys
+        top-level, ``stream``/``experts``/``spec`` nested). Takes the
+        streamer/pool locks — loop thread (or construction time) ONLY."""
+        eng = self.engine
+        out = dict(eng.prefix_stats(strict=False))
+        stream = eng.stream_stats(strict=False)
+        if stream:
+            out["stream"] = stream
+            if getattr(eng, "streamed_moe", False):
+                out["experts"] = eng.expert_stats(strict=False)
+        spec = eng.spec_stats(strict=False)
+        if spec:
+            out["spec"] = spec
+        return out
+
+    def _refresh_telemetry(self, force: bool = False):
+        """Swap in a fresh plane-stats snapshot. Throttled: expert/stream
+        stats aggregate over the step history, so refreshing every step
+        would grow per-step cost with run length; the end-of-burst refresh
+        (``force``) keeps the snapshot exact whenever the engine idles."""
+        now = time.monotonic()
+        if force or now - self._tel_t >= 0.1:
+            self._telemetry = self._plane_stats()
+            self._tel_t = now
+
     def _run(self):
         while True:
             stepped = False
@@ -289,6 +397,8 @@ class ServeFront:
                     stepped = True
                 self._pump()
                 self._sweep_deadlines()
+                if stepped:
+                    self._refresh_telemetry(force=not self._work_pending())
             except Exception as e:
                 # persistently-faulted step: fail the AFFECTED requests
                 # with finish_reason="error" and keep serving — the
@@ -394,13 +504,18 @@ class ServeFront:
         self._wake.set()
         self._loop.join(timeout)
         self.engine.close()
+        self._refresh_telemetry(force=True)   # final exact snapshot
+        self.obs.unregister_collector(self._obs_collect)
         if self.error is not None:
             raise RuntimeError("serve loop failed") from self.error
 
     def stats(self) -> dict:
         """One merged telemetry dict for GET /v1/stats: frontend counters
         + engine queue/pool state + whichever plane-specific stats the
-        wrapped engine exposes."""
+        wrapped engine exposes. NON-BLOCKING by construction: every read
+        here is a lock-free attribute read or the loop-thread-maintained
+        ``_telemetry`` snapshot — this never waits behind a device step or
+        a weight upload holding the streamer/pool locks."""
         eng = self.engine
         out = {
             "live_handles": len(self._handles),
@@ -419,15 +534,14 @@ class ServeFront:
             "requests_failed": self.requests_failed,
             "last_fault": self.last_fault,
         }
-        if getattr(eng, "prefix", None) is not None:
-            out.update(eng.prefix_stats())
-        if getattr(eng, "streamed", False):
-            out["stream"] = eng.stream_stats()
-            if eng.streamed_moe:
-                out["experts"] = eng.expert_stats()
-        if getattr(eng, "spec_cfg", None) is not None:
-            out["spec"] = eng.spec_stats()
+        out.update(self._telemetry)
         return out
+
+    def metrics_text(self) -> str:
+        """Prometheus 0.0.4 exposition for GET /v1/metrics. Collector
+        reads are lock-free by the ``obs_samples`` contract, so scraping
+        mid-step is safe."""
+        return self.obs.expose()
 
     def health(self) -> tuple[int, dict]:
         """(http_code, payload) for GET /v1/health. "ok" means no fault
@@ -443,16 +557,15 @@ class ServeFront:
             "requests_failed": self.requests_failed,
             "timeouts": self.n_timeout,
         }
-        eng = self.engine
-        if getattr(eng, "streamed", False):
-            s = (eng.expert_stats() if getattr(eng, "streamed_moe", False)
-                 else eng.stream_stats())
-            for k in ("uecc_detected", "read_retries", "relocations",
-                      "degraded_pages", "dram_fallback_reads",
-                      "fetch_retries", "fetch_faults",
-                      "prefetch_failures"):
-                if k in s:
-                    counters[k] = s[k]
+        # the loop-thread snapshot, NOT the locked accessors: health must
+        # answer even while a step holds the streamer/pool locks
+        s = self._telemetry.get("stream", {})
+        for k in ("uecc_detected", "read_retries", "relocations",
+                  "degraded_pages", "dram_fallback_reads",
+                  "fetch_retries", "fetch_faults",
+                  "prefetch_failures"):
+            if k in s:
+                counters[k] = s[k]
         if self.error is not None or not self._loop.is_alive():
             status, code = "dead", 503
         elif self._closed:
@@ -486,6 +599,10 @@ def make_http_server(front: ServeFront, port: int = 8000,
       GET  /v1/stats     -> ServeFront.stats() as JSON.
       GET  /v1/health    -> ServeFront.health(): 200 ok/degraded while
           serving (degraded = fault counters nonzero), 503 dead/closed.
+      GET  /v1/metrics   -> Prometheus 0.0.4 text exposition (ObsPlane
+          registry: TTFT/TPOT/E2E histograms, finish-reason counters,
+          engine step-phase timings, NAND/stream/pool/expert/fault
+          counters). Lock-free scrape — safe mid-step.
     """
 
     class Handler(BaseHTTPRequestHandler):
@@ -508,6 +625,15 @@ def make_http_server(front: ServeFront, port: int = 8000,
             elif self.path == "/v1/health":
                 code, payload = front.health()
                 self._json(code, payload)
+            elif self.path == "/v1/metrics":
+                body = front.metrics_text().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; "
+                                 "charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
             else:
                 self.send_error(404)
 

@@ -272,3 +272,22 @@ def verify_lanes(logits: jnp.ndarray, drafts: jnp.ndarray,
                        jnp.where(jj[None, :] == n_acc[:, None],
                                  bonus[:, None], 0))
     return tokens.astype(jnp.int32), n_acc
+
+
+# --- ObsPlane samples (DESIGN.md §14) -----------------------------------------
+
+def spec_obs_samples(totals: dict):
+    """Speculative-decode counters as scrape-time ObsPlane samples —
+    ``totals`` is the engine's ``_spec_totals`` accumulator (lock-free
+    read: ints swap atomically under the GIL)."""
+    from repro.obs.registry import Sample
+    drafted = totals.get("drafted", 0)
+    yield Sample("spec_verify_steps_total", "counter",
+                 float(totals.get("verify_steps", 0)))
+    yield Sample("spec_drafted_total", "counter", float(drafted))
+    yield Sample("spec_accepted_total", "counter",
+                 float(totals.get("accepted", 0)))
+    yield Sample("spec_emitted_total", "counter",
+                 float(totals.get("emitted", 0)))
+    yield Sample("spec_acceptance_rate", "gauge",
+                 totals.get("accepted", 0) / max(drafted, 1))

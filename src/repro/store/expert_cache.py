@@ -212,6 +212,26 @@ class ExpertCache(ResidencyCache):
                     for h, r in zip(self.slot_hits, self.slot_requests)]
         return base
 
+    def obs_samples(self):
+        """ObsPlane scrape samples (lock-free): routed-acquire hit rate,
+        fetch traffic, and the misroute-stall attribution the streamed
+        MoE engine's admission budget contracts with."""
+        from repro.obs.registry import Sample
+        yield from super().obs_samples(prefix="expert_cache")
+        yield Sample("expert_bytes_fetched_total", "counter",
+                     float(self.bytes_fetched))
+        yield Sample("expert_fetches_total", "counter", float(self.fetches))
+        yield Sample("expert_prefetches_total", "counter",
+                     float(self.prefetches))
+        yield Sample("expert_prefetched_bytes_total", "counter",
+                     float(self.prefetched_bytes))
+        yield Sample("expert_misroute_stalls_total", "counter",
+                     float(self.misroute_stalls))
+        yield Sample("expert_misroute_stall_seconds_total", "counter",
+                     float(self.misroute_stall_s))
+        yield Sample("expert_cache_hit_rate", "gauge",
+                     self.hits / max(self.hits + self.misses, 1))
+
 
 class ExpertPrefetcher:
     """Background fetcher filling the ExpertCache ahead of the router.
@@ -330,6 +350,15 @@ class ExpertPrefetcher:
             return {"prefetch_batches": self.batches,
                     "prefetch_batched_keys": self.batched_keys,
                     "prefetch_failures": self.prefetch_failures}
+
+    def obs_samples(self):
+        from repro.obs.registry import Sample
+        yield Sample("expert_prefetch_batches_total", "counter",
+                     float(self.batches))
+        yield Sample("expert_prefetch_batched_keys_total", "counter",
+                     float(self.batched_keys))
+        yield Sample("expert_prefetch_failures_total", "counter",
+                     float(self.prefetch_failures))
 
     def drain(self, timeout: float = 5.0):
         """Block until the queue is empty and nothing is in flight

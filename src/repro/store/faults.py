@@ -174,3 +174,17 @@ class FaultInjector:
                     "fault_stuck_reads": self.stuck_reads,
                     "fault_slow_reads": self.slow_reads,
                     "fault_io_errors": self.io_errors}
+
+    def obs_samples(self):
+        """ObsPlane scrape samples (lock-free: metrics reads must not
+        contend with the injected read path)."""
+        from repro.obs.registry import Sample
+        yield Sample("fault_calls_total", "counter", float(self._calls))
+        yield Sample("fault_transient_flips_total", "counter",
+                     float(self.transient_flips))
+        yield Sample("fault_stuck_reads_total", "counter",
+                     float(self.stuck_reads))
+        yield Sample("fault_slow_reads_total", "counter",
+                     float(self.slow_reads))
+        yield Sample("fault_io_errors_total", "counter",
+                     float(self.io_errors))

@@ -42,11 +42,15 @@ Two update disciplines, chosen at construction:
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, Iterable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.registry import Sample
+from repro.obs.trace import TID_POOL, default_tracer
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 try:                                      # moved out of experimental in 0.6
@@ -207,6 +211,8 @@ class WeightPagePool:
             for comp in ("q", "parity", "scale"):
                 plan.append((name, comp, entry[comp].pages))
         ids = np.concatenate([np.asarray(p, np.int64) for _, _, p in plan])
+        tracer = default_tracer()
+        t0 = time.perf_counter() if tracer.enabled else 0.0
         with self._lock:
             if len(ids) > len(self._free):
                 self._grow(len(ids) - len(self._free))
@@ -234,6 +240,10 @@ class WeightPagePool:
             self.uploads += 1
             self.pages_staged += int(ids.size)
             self.bytes_staged += int(ids.size) * self.page_bytes
+        tracer.complete("pool.upload", t0, time.perf_counter() - t0,
+                        tid=TID_POOL, cat="pool",
+                        args={"pages": int(ids.size),
+                              "bytes": int(ids.size) * self.page_bytes})
         out: dict[str, dict] = {}
         off = 0
         for name, comp, pages in plan:
@@ -287,6 +297,21 @@ class WeightPagePool:
                     "pool_pinned_fallbacks": self.pinned_fallbacks,
                     "pool_staging_allocs": self.staging_allocs,
                     "pool_grows": self.grows}
+
+    def obs_samples(self):
+        """ObsPlane scrape samples. LOCK-FREE by design: ``upload`` holds
+        the pool lock across a whole staged transfer, so a locked read
+        here would make /v1/metrics wait behind a device upload."""
+        yield Sample("pool_pages", "gauge", float(self.n_pages))
+        yield Sample("pool_free_pages", "gauge", float(len(self._free)))
+        yield Sample("pool_uploads_total", "counter", float(self.uploads))
+        yield Sample("pool_pages_staged_total", "counter",
+                     float(self.pages_staged))
+        yield Sample("pool_bytes_staged_total", "counter",
+                     float(self.bytes_staged))
+        yield Sample("pool_pinned_uploads_total", "counter",
+                     float(self.pinned_uploads))
+        yield Sample("pool_grows_total", "counter", float(self.grows))
 
 
 class ShardedWeightPagePool(WeightPagePool):
@@ -395,6 +420,8 @@ class ShardedWeightPagePool(WeightPagePool):
                 (name, "parity", -(-p.parity_nbytes // self.page_bytes)),
                 (name, "scale", -(-p.scale_nbytes // self.page_bytes))]
         n_slots = sum(n for _, _, n in rows_plan)
+        tracer = default_tracer()
+        t0 = time.perf_counter() if tracer.enabled else 0.0
         with self._lock:
             if n_slots > len(self._free):
                 self._grow(n_slots - len(self._free))
@@ -417,6 +444,10 @@ class ShardedWeightPagePool(WeightPagePool):
             self.shard_transfers += S
             self.pages_staged += n_slots * S
             self.bytes_staged += n_slots * S * self.page_bytes
+        tracer.complete("pool.upload_sharded", t0,
+                        time.perf_counter() - t0, tid=TID_POOL, cat="pool",
+                        args={"shards": S, "pages": n_slots * S,
+                              "bytes": n_slots * S * self.page_bytes})
         out: dict[str, dict] = {}
         off = 0
         for name, comp, n in rows_plan:
@@ -476,3 +507,9 @@ class ShardedWeightPagePool(WeightPagePool):
                 "pool_local_pages": self.n_pages,
                 "pool_local_bytes": self.n_pages * self.page_bytes})
         return base
+
+    def obs_samples(self):
+        yield from super().obs_samples()
+        yield Sample("pool_shards", "gauge", float(self.n_shards))
+        yield Sample("pool_shard_transfers_total", "counter",
+                     float(self.shard_transfers))

@@ -30,12 +30,15 @@ import dataclasses
 import json
 import os
 import threading
+import time
 from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tiering import FlashWeight
+from repro.obs.registry import Sample
+from repro.obs.trace import TID_NAND, default_tracer
 from repro.serving.kvcache import cdiv
 from repro.simulator import hw
 
@@ -312,12 +315,28 @@ class PageStore:
             np.add.at(self.plane_reads, ids % self.n_planes, 1)
             self.pages_read += ids.size
             self.bytes_read += ids.size * self.page_bytes
+        tracer = default_tracer()
+        t0 = time.perf_counter() if tracer.enabled else 0.0
         if self.injector is None:
             if out is None:
-                return self._data[ids]
-            np.take(self._data, ids, axis=0, out=out)
-            return out
-        return self._read_pages_faulty(ids, out)
+                res = self._data[ids]
+            else:
+                np.take(self._data, ids, axis=0, out=out)
+                res = out
+        else:
+            res = self._read_pages_faulty(ids, out)
+        if tracer.enabled and ids.size:
+            # per-plane read time for THIS batch: the trace's NAND track
+            # shows the analytical array time next to the host wall time
+            counts = np.bincount(ids % self.n_planes,
+                                 minlength=self.n_planes)
+            tracer.complete("nand.read_pages", t0,
+                            time.perf_counter() - t0, tid=TID_NAND,
+                            args={"pages": int(ids.size),
+                                  "planes_hit": int((counts > 0).sum()),
+                                  "nand_s": float(
+                                      hw.nand_read_seconds(counts))})
+        return res
 
     # --- fault plane (store/faults.py; DESIGN.md §13) -------------------------
 
@@ -640,6 +659,39 @@ class PageStore:
         if self.injector is not None:
             out.update(self.injector.stats())
         return out
+
+    def obs_samples(self):
+        """ObsPlane scrape-time samples (DESIGN.md §14): the same counters
+        ``stats()`` reports, as Prometheus families — per-plane reads and
+        fault damage labeled by plane. LOCK-FREE reads on purpose: a
+        metrics scrape must never wait behind a read holding the lock."""
+        yield Sample("nand_pages_read_total", "counter",
+                     float(self.pages_read))
+        yield Sample("nand_bytes_read_total", "counter",
+                     float(self.bytes_read))
+        yield Sample("nand_read_seconds_total", "counter",
+                     float(self.nand_seconds()))
+        yield Sample("nand_uecc_detected_total", "counter",
+                     float(self.uecc_detected))
+        yield Sample("nand_read_retries_total", "counter",
+                     float(self.read_retries))
+        yield Sample("nand_retry_corrected_total", "counter",
+                     float(self.retry_corrected))
+        yield Sample("nand_relocations_total", "counter",
+                     float(self.relocations))
+        yield Sample("nand_degraded_pages", "gauge",
+                     float(len(self._degraded)))
+        yield Sample("nand_dram_fallback_reads_total", "counter",
+                     float(self.dram_fallback_reads))
+        for plane in range(self.n_planes):
+            lbl = (("plane", str(plane)),)
+            yield Sample("nand_plane_reads_total", "counter",
+                         float(self.plane_reads[plane]), lbl)
+            if self.plane_uecc[plane]:
+                yield Sample("nand_plane_uecc_total", "counter",
+                             float(self.plane_uecc[plane]), lbl)
+        if self.injector is not None:
+            yield from self.injector.obs_samples()
 
     # --- NAND die image (optional mmap backing) -------------------------------
 
